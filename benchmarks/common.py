@@ -1,0 +1,34 @@
+"""Shared timing + CSV helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time per call in microseconds (jit-compiled fns)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def phi_matrix(rng, shape, phi, dtype):
+    u = rng.random(shape)
+    g = rng.standard_normal(shape)
+    m = (u - 0.5) * np.exp(g * phi)
+    if np.issubdtype(np.dtype(dtype), np.complexfloating):
+        u2 = rng.random(shape)
+        g2 = rng.standard_normal(shape)
+        m = m + 1j * (u2 - 0.5) * np.exp(g2 * phi)
+    return m.astype(dtype)

@@ -1,0 +1,64 @@
+"""Assemble the EXPERIMENTS.md dry-run + roofline tables from the JSONs."""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+import repro  # noqa: F401,E402
+from benchmarks.roofline import analyze  # noqa: E402
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def main():
+    recs = []
+    for f in sorted(glob.glob("experiments/dryrun/*.json")):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+
+    print("## Dry-run summary (compile proof, per-device artifacts)\n")
+    for mesh, tag in (([16, 16], "single pod 16x16 = 256 chips"),
+                      ([2, 16, 16], "multi-pod 2x16x16 = 512 chips")):
+        print(f"### {tag}\n")
+        print("| cell | status | flops/dev (corr) | bytes/dev (corr) | "
+              "temp GiB | coll MiB (corr) | ag/ar/a2a MiB | compile s |")
+        print("|---|---|---|---|---|---|---|---|")
+        for r in recs:
+            if r.get("mesh") != mesh and r.get("status") == "ok":
+                continue
+            if r["status"] == "skipped":
+                if mesh == [16, 16] and "pod16x16" in r["cell"]:
+                    print(f"| {r['cell']} | SKIP: {r['reason'][:60]} | | | | | | |")
+                continue
+            c = r["collectives"]
+            print(
+                f"| {r['cell']} | ok | {r['flops_per_device_corrected']:.2e} | "
+                f"{r['bytes_per_device_corrected']:.2e} | "
+                f"{fmt_bytes(r['memory_analysis'].get('temp_size_in_bytes',0))} | "
+                f"{r['collective_bytes_corrected']/2**20:.0f} | "
+                f"{c['all-gather']/2**20:.0f}/{c['all-reduce']/2**20:.0f}/"
+                f"{c['all-to-all']/2**20:.0f} | {r['compile_s']:.0f} |"
+            )
+        print()
+
+    print("## Roofline terms (single pod, v5e constants)\n")
+    print("| cell | compute s | memory s | collective s | dominant | "
+          "MODEL/HLO | frac | temp GiB |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        row = analyze(r)
+        if row and row["mesh"] == "16x16":
+            print(
+                f"| {row['cell']} | {row['t_compute_s']:.3e} | "
+                f"{row['t_memory_s']:.3e} | {row['t_collective_s']:.3e} | "
+                f"{row['dominant']} | {row['useful_ratio']:.2f} | "
+                f"{row['roofline_fraction']:.3f} | {row['mem_gib']:.1f} |"
+            )
+
+
+if __name__ == "__main__":
+    os.chdir(os.path.join(os.path.dirname(__file__), ".."))
+    main()

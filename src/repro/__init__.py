@@ -1,0 +1,16 @@
+"""repro — Ozaki-II CRT-based GEMM emulation framework (JAX/Pallas, TPU target).
+
+Reproduction + extension of "Emulation of Complex Matrix Multiplication based
+on the Chinese Remainder Theorem" (Uchino, Ma, Imamura, Ozaki, Gutsche, 2025).
+"""
+import os
+
+# The reference/validation paths of the Ozaki-II scheme need float64 on the
+# CPU host (the TPU kernels themselves are int8/int32/f32 only).  All model
+# code uses explicit dtypes, so enabling x64 is inert for them.
+if os.environ.get("REPRO_NO_X64", "0") != "1":
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

@@ -1,0 +1,37 @@
+"""Assigned-architecture registry: `get_config(arch)` / `get_reduced(arch)`.
+
+Each module defines CONFIG (the exact published configuration) and REDUCED
+(same family, small dims — used by the CPU smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ARCHS = (
+    "mamba2-130m",
+    "internvl2-26b",
+    "qwen2.5-32b",
+    "nemotron-4-15b",
+    "starcoder2-3b",
+    "minitron-4b",
+    "recurrentgemma-2b",
+    "granite-moe-3b-a800m",
+    "deepseek-moe-16b",
+    "musicgen-medium",
+)
+
+
+def _module(arch: str):
+    name = arch.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(arch: str, **overrides):
+    cfg = _module(arch).CONFIG
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def get_reduced(arch: str, **overrides):
+    cfg = _module(arch).REDUCED
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg

@@ -1,0 +1,71 @@
+"""Assigned input shapes and per-(arch x shape) applicability.
+
+  train_4k     seq_len=4096    global_batch=256   (train_step)
+  prefill_32k  seq_len=32768   global_batch=32    (serve prefill)
+  decode_32k   seq_len=32768   global_batch=128   (serve_step: 1 new token,
+                                                   KV/state cache of seq_len)
+  long_500k    seq_len=524288  global_batch=1     (long-context decode)
+
+long_500k requires sub-quadratic attention: it runs only for the SSM/hybrid
+archs (mamba2-130m, recurrentgemma-2b); the 8 pure full-attention archs skip
+it (DESIGN.md S5).  All assigned archs are decoder-style backbones, so every
+arch runs the decode shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+SUBQUADRATIC = {"mamba2-130m", "recurrentgemma-2b"}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and cfg.name.split("-reduced")[0] not in SUBQUADRATIC:
+        return False, "full-attention arch: 512k dense decode skipped (DESIGN.md S5)"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    For train/prefill: the (tokens [+ prefix_embeds]) batch.  The token count
+    is reduced by n_prefix_embeds so total sequence == shape.seq_len.
+    For decode: one new token; the cache specs come from Model.cache_abstract.
+    """
+    spec = SHAPES[shape]
+    npre = cfg.n_prefix_embeds if cfg.frontend else 0
+    if spec.kind in ("train", "prefill"):
+        s_tok = spec.seq_len - npre
+        out = {
+            "tokens": jax.ShapeDtypeStruct(
+                (spec.global_batch, s_tok), jnp.int32
+            )
+        }
+        if npre:
+            out["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (spec.global_batch, npre, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        return out
+    return {
+        "tokens": jax.ShapeDtypeStruct((spec.global_batch, 1), jnp.int32)
+    }

@@ -1,0 +1,21 @@
+"""Ozaki-II CRT GEMM emulation — public API (the paper's contribution)."""
+from .cgemm import ozaki2_cgemm
+from .gemm import PreparedOperand, default_n_moduli, gemm_prepared, ozaki2_gemm
+from .moduli import CRTContext, default_moduli, make_crt_context, min_moduli_for_bits
+from .policy import GemmPolicy, NATIVE, emulated_matmul, policy_matmul
+
+__all__ = [
+    "CRTContext",
+    "GemmPolicy",
+    "NATIVE",
+    "PreparedOperand",
+    "default_moduli",
+    "default_n_moduli",
+    "emulated_matmul",
+    "gemm_prepared",
+    "make_crt_context",
+    "min_moduli_for_bits",
+    "ozaki2_cgemm",
+    "ozaki2_gemm",
+    "policy_matmul",
+]

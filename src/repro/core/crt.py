@@ -1,0 +1,138 @@
+"""CRT reconstruction (Alg. 1 steps V-v/vi) — three interchangeable paths.
+
+paper   : the paper's eq. (5) unevaluated split S = S1 + S2 where S1 sums the
+          exact high parts of w_l = (P/p_l) q_l (53-7-ceil(log2 N) bits thanks
+          to the symmetric int8 residues) and S2 the rounded low parts; then
+          mod(S, P) in double-double with P as an exact 3-term expansion.
+dd      : full double-double accumulation of w_l * E_l (strictly more precise
+          than the paper's split; used for cross-checks).
+garner  : mixed-radix (Garner) reconstruction in pure small-integer
+          arithmetic — the TPU-native path (no f64 on the VPU; DESIGN.md S2).
+          With symmetric digits d_t in [-(p_t-1)/2,(p_t-1)/2] the representable
+          range telescopes to exactly [-(P-1)/2,(P-1)/2], so uniqueness under
+          condition (4) gives an *exact* integer reconstruction.
+
+All paths take E: (N, ...) int8/int32 symmetric residues of C' and return the
+value of C' as a double-double pair (hi, lo) in f64.  Inverse scaling by the
+power-of-two mu, nu is exact and done by the caller.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .expansion import dd_add, dd_mul_fp, two_prod, quick_two_sum
+from .moduli import CRTContext
+from .residues import sym_mod_small
+
+_F64 = jnp.float64
+
+
+def reconstruct_paper(e_res: jnp.ndarray, ctx: CRTContext):
+    """Paper eq. (5): S1 (exact) + S2 (low parts), then mod(S, P) in dd."""
+    ef = e_res.astype(_F64)
+    s1 = jnp.zeros(e_res.shape[1:], dtype=_F64)
+    s2 = jnp.zeros(e_res.shape[1:], dtype=_F64)
+    for l in range(ctx.n):  # fixed-order accumulation => bitwise reproducible
+        s1 = s1 + float(ctx.w_hi[l]) * ef[l]
+        s2 = s2 + float(ctx.w_lo[l]) * ef[l]
+    return _mod_P_dd(s1, s2, ctx)
+
+
+def reconstruct_dd(e_res: jnp.ndarray, ctx: CRTContext):
+    """Full double-double accumulation (beyond-paper precision)."""
+    ef = e_res.astype(_F64)
+    hi = jnp.zeros(e_res.shape[1:], dtype=_F64)
+    lo = jnp.zeros(e_res.shape[1:], dtype=_F64)
+    for l in range(ctx.n):
+        ph, pl = two_prod(jnp.asarray(float(ctx.w_dd_hi[l]), _F64), ef[l])
+        pl = pl + float(ctx.w_dd_lo[l]) * ef[l]
+        hi, lo = dd_add(hi, lo, ph, pl)
+    return _mod_P_dd(hi, lo, ctx)
+
+
+def _mod_P_dd(s_hi, s_lo, ctx: CRTContext):
+    """mod(S, P) = S - P*round(S/P), P held as an exact 3-term expansion.
+
+    |S/P| <= N * max|w_l| * 127 / P < 2^15, so z = round(S/P) is a small exact
+    integer; each P_t * z is formed with two_prod (error-free) and subtracted
+    in double-double.  This is the paper's 'simplified double-double modulo'.
+    """
+    z = jnp.round(s_hi / float(ctx.P))
+    hi, lo = s_hi, s_lo
+    for t in range(3):
+        pt = float(ctx.P_exp[t])
+        if pt == 0.0:
+            continue
+        ph, pl = two_prod(jnp.asarray(pt, _F64), z)
+        hi, lo = dd_add(hi, lo, -ph, -pl)
+    # one correction step in case round(S/P) was off by one.  The compare
+    # runs in double-double: results within one f64 ulp of +/- P/2 would
+    # otherwise compare equal to `half` and miss the correction.
+    hh = float(ctx.P_exp[0]) / 2.0  # exact (power-of-two division)
+    hl = (float(ctx.P_exp[1]) + float(ctx.P_exp[2])) / 2.0
+    dpos_hi, dpos_lo = dd_add(hi, lo, -hh, -hl)  # result - P/2
+    dneg_hi, dneg_lo = dd_add(hi, lo, hh, hl)    # result + P/2
+    pos = (dpos_hi > 0) | ((dpos_hi == 0) & (dpos_lo > 0))
+    neg = (dneg_hi < 0) | ((dneg_hi == 0) & (dneg_lo < 0))
+    adj = jnp.where(pos, -1.0, jnp.where(neg, 1.0, 0.0))
+    for t in range(3):
+        pt = float(ctx.P_exp[t])
+        if pt == 0.0:
+            continue
+        ph, pl = two_prod(jnp.asarray(pt, _F64), adj)
+        hi, lo = dd_add(hi, lo, ph, pl)
+    return hi, lo
+
+
+def garner_digits(e_res: jnp.ndarray, ctx: CRTContext) -> jnp.ndarray:
+    """Symmetric mixed-radix digits d_t, C' = sum_t d_t * prod_{s<t} p_s.
+
+    Pure small-integer arithmetic: |(r - d_s) * inv| <= 254*254 < 2^16.
+    Runs identically in int32 on TPU and on host.
+    """
+    e32 = e_res.astype(jnp.int32)
+    digits = []
+    for t in range(ctx.n):
+        p_t = int(ctx.moduli_arr[t])
+        half_t = int(ctx.half_arr[t])
+        r = e32[t]
+        for s in range(t):
+            r = (r - digits[s]) * int(ctx.garner_inv[s, t])
+            r = sym_mod_small(r, p_t, half_t).astype(jnp.int32)
+        digits.append(r)
+    return jnp.stack(digits, axis=0)
+
+
+def reconstruct_garner(e_res: jnp.ndarray, ctx: CRTContext):
+    """Garner digits -> double-double value (exact digits; dd conversion)."""
+    digits = garner_digits(e_res, ctx)
+    hi = jnp.zeros(e_res.shape[1:], dtype=_F64)
+    lo = jnp.zeros(e_res.shape[1:], dtype=_F64)
+    for t in range(ctx.n - 1, -1, -1):  # most-significant first
+        d = digits[t].astype(_F64)
+        wh, wl = float(ctx.weights_dd[t, 0]), float(ctx.weights_dd[t, 1])
+        ph, pl = two_prod(jnp.asarray(wh, _F64), d)
+        pl = pl + wl * d
+        hi, lo = dd_add(hi, lo, ph, pl)
+    return hi, lo
+
+
+RECONSTRUCTORS = {
+    "paper": reconstruct_paper,
+    "dd": reconstruct_dd,
+    "garner": reconstruct_garner,
+}
+
+
+def reconstruct(e_res: jnp.ndarray, ctx: CRTContext, method: str = "paper"):
+    try:
+        fn = RECONSTRUCTORS[method]
+    except KeyError:
+        raise ValueError(f"unknown reconstruction {method!r}") from None
+    return fn(e_res, ctx)
+
+
+def inverse_scale(hi, lo, e_mu, e_nu, out_dtype):
+    """C = diag(mu)^-1 C' diag(nu)^-1 — exact (powers of two)."""
+    inv = jnp.ldexp(jnp.asarray(1.0, _F64), -(e_mu[:, None] + e_nu[None, :]))
+    return ((hi * inv) + (lo * inv)).astype(out_dtype)

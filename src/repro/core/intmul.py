@@ -1,0 +1,28 @@
+"""Exact int8 x int8 -> int32 matrix multiplication (the MXU workhorse).
+
+On TPU this is a single MXU pass (`preferred_element_type=int32`); on the CPU
+host XLA lowers it to integer dot.  Exactness requires
+k * 127^2 < 2^31  =>  k <= 2^17 (paper SII assumption); callers chunk K above
+that (`core/gemm.py`), reducing mod p between chunks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .moduli import K_CHUNK_LIMIT
+
+
+def int8_matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(..., m, k) x (..., k, n) int8 -> int32, exact. Batched over leading dims."""
+    if a.shape[-1] > K_CHUNK_LIMIT:
+        raise ValueError(
+            f"k={a.shape[-1]} exceeds exact-int32 limit {K_CHUNK_LIMIT}; chunk K"
+        )
+    batch = tuple(range(a.ndim - 2))
+    return jax.lax.dot_general(
+        a,
+        b,
+        dimension_numbers=(((a.ndim - 1,), (b.ndim - 2,)), (batch, batch)),
+        preferred_element_type=jnp.int32,
+    )

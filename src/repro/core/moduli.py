@@ -1,0 +1,197 @@
+"""Moduli selection and CRT constants for the Ozaki-II scheme.
+
+The paper (Alg. 1, steps I-II) uses N pairwise-coprime moduli p_l <= 256 and
+precomputes P = prod(p_l) and the modular inverses q_l of P/p_l (mod p_l).
+
+TPU adaptation (DESIGN.md S2): we restrict to *odd* moduli <= 255 so that the
+symmetric residue satisfies |r| <= (p-1)/2 <= 127 (fits int8 with margin) and
+the floating-point modular reduction is provably exact (no round-to-nearest
+ties at +/- p/2).
+
+All big-integer constants (P, P/p_l, q_l, Garner tables, eq.(5) splits) are
+computed host-side with exact Python integers at trace time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Sequence
+
+import numpy as np
+
+MAX_MODULI = 24
+# int8 residue products |r_a * r_b| <= 127^2; int32 accumulates exactly for
+# k <= 2^31 / 127^2 ~= 133152.  We chunk K above this (core/gemm.py).
+K_CHUNK_LIMIT = 1 << 17
+
+
+def _pairwise_coprime_moduli(count: int) -> list[int]:
+    """Greedy descending odd pairwise-coprime moduli <= 255."""
+    chosen: list[int] = []
+    cand = 255
+    while len(chosen) < count and cand >= 3:
+        if all(math.gcd(cand, c) == 1 for c in chosen):
+            chosen.append(cand)
+        cand -= 2
+    if len(chosen) < count:
+        raise ValueError(f"cannot find {count} pairwise-coprime odd moduli <= 255")
+    return chosen
+
+
+@functools.lru_cache(maxsize=None)
+def default_moduli(n: int) -> tuple[int, ...]:
+    if not 1 <= n <= MAX_MODULI:
+        raise ValueError(f"N must be in [1, {MAX_MODULI}], got {n}")
+    return tuple(_pairwise_coprime_moduli(n))
+
+
+def _split_fp64_at(x: int, cutpos: int) -> tuple[float, float]:
+    """Split an exact integer x into (hi, lo) doubles at absolute bit
+    position `cutpos` (paper eq. (5): s_l1 / s_l2).
+
+    Splitting every w_l at the SAME absolute position (rather than a
+    per-value relative one) makes all S1 products multiples of 2^cutpos, so
+    the N-term accumulation spans exactly (53-7-ceil(log2 N)) + 7 +
+    ceil(log2 N) = 53 bits and is error-free — the guarantee the paper's bit
+    allocation is designed for.
+    """
+    if x == 0:
+        return 0.0, 0.0
+    shift = max(0, cutpos)
+    hi_int = (x >> shift) << shift
+    hi = float(hi_int)  # exact: <= 53-7-ceil(log2 N) significant bits
+    lo = float(x - hi_int)  # rounded to nearest double (|err| <= 2^(cut-53))
+    return hi, lo
+
+
+def _dd_from_int(x: int) -> tuple[float, float]:
+    """Round an exact integer to a double-double (hi, lo) pair."""
+    hi = float(x)
+    lo = float(x - int(hi))
+    return hi, lo
+
+
+@dataclasses.dataclass(frozen=True)
+class CRTContext:
+    """Precomputed constants for an N-moduli Ozaki-II instance.
+
+    Everything here is a small numpy array or Python scalar captured as a
+    compile-time constant; nothing depends on runtime data.
+    """
+
+    n: int
+    moduli: tuple[int, ...]          # p_l
+    P: int                           # prod p_l (exact Python int)
+    log2_P: float                    # log2(P), exact enough for scaling
+    # --- paper eq. (5) reconstruction: w_l = (P/p_l)*q_l split hi/lo ---
+    w_hi: np.ndarray                 # (N,) f64, exact top bits of w_l
+    w_lo: np.ndarray                 # (N,) f64
+    # extended split for the double-double reconstruction path
+    w_dd_hi: np.ndarray              # (N,) f64: w_l rounded to dd
+    w_dd_lo: np.ndarray              # (N,) f64
+    # P as a 3-term f64 expansion (exact for log2(P) <= 159)
+    P_exp: np.ndarray                # (3,) f64, P = sum(P_exp) exactly
+    # --- Garner mixed-radix reconstruction (TPU path) ---
+    garner_inv: np.ndarray           # (N, N) int32, inv(prod_{s<t} p_s, p_t) staged:
+    #   garner_inv[s, t] = inverse of p_s modulo p_t (s < t), else 0
+    weights_dd: np.ndarray           # (N, 2) f64: W_t = prod_{s<t} p_s as dd
+    moduli_arr: np.ndarray           # (N,) int32
+    half_arr: np.ndarray             # (N,) int32, (p_l - 1) // 2
+
+    @property
+    def p_half(self) -> float:
+        return float(self.P) / 2.0
+
+
+@functools.lru_cache(maxsize=None)
+def make_crt_context(n: int, moduli: Sequence[int] | None = None) -> CRTContext:
+    p = tuple(moduli) if moduli is not None else default_moduli(n)
+    if len(p) != n:
+        raise ValueError("len(moduli) != n")
+    for i in range(n):
+        for j in range(i + 1, n):
+            if math.gcd(p[i], p[j]) != 1:
+                raise ValueError(f"moduli {p[i]}, {p[j]} not coprime")
+        if p[i] % 2 == 0 or p[i] > 255:
+            raise ValueError("moduli must be odd and <= 255 (see DESIGN.md)")
+
+    P = 1
+    for pl in p:
+        P *= pl
+
+    # w_l = (P / p_l) * q_l with q_l = (P/p_l)^{-1} mod p_l  (Alg. 1 step II)
+    w_hi = np.zeros(n, dtype=np.float64)
+    w_lo = np.zeros(n, dtype=np.float64)
+    w_dd_hi = np.zeros(n, dtype=np.float64)
+    w_dd_lo = np.zeros(n, dtype=np.float64)
+    # symmetric-mod residues are 7-bit => hi part may keep 53-7-ceil(log2 N)
+    hi_bits = 53 - 7 - max(1, math.ceil(math.log2(max(n, 2))))
+    ws = []
+    for pl in p:
+        M = P // pl
+        q = pow(M % pl, -1, pl)
+        ws.append(M * q)
+    cutpos = max(w.bit_length() for w in ws) - hi_bits
+    for l, w in enumerate(ws):
+        w_hi[l], w_lo[l] = _split_fp64_at(w, cutpos)
+        w_dd_hi[l], w_dd_lo[l] = _dd_from_int(w)
+
+    # P as an exact 3-term expansion (greedy round-and-subtract)
+    P_exp = np.zeros(3, dtype=np.float64)
+    rem = P
+    for t in range(3):
+        v = float(rem)
+        # round-to-nearest may exceed rem; greedy exact peel of top 53 bits:
+        top = rem.bit_length()
+        shift = max(0, top - 53)
+        vi = (rem >> shift) << shift
+        P_exp[t] = float(vi)
+        rem -= vi
+        if rem == 0:
+            break
+    if rem != 0:
+        raise ValueError("P needs more than 159 bits; reduce N")
+
+    garner_inv = np.zeros((n, n), dtype=np.int32)
+    for t in range(n):
+        for s in range(t):
+            garner_inv[s, t] = pow(p[s], -1, p[t])
+
+    weights_dd = np.zeros((n, 2), dtype=np.float64)
+    W = 1
+    for t in range(n):
+        weights_dd[t, 0], weights_dd[t, 1] = _dd_from_int(W)
+        W *= p[t]
+
+    return CRTContext(
+        n=n,
+        moduli=p,
+        P=P,
+        log2_P=_log2_bigint(P),
+        w_hi=w_hi,
+        w_lo=w_lo,
+        w_dd_hi=w_dd_hi,
+        w_dd_lo=w_dd_lo,
+        P_exp=P_exp,
+        garner_inv=garner_inv,
+        weights_dd=weights_dd,
+        moduli_arr=np.asarray(p, dtype=np.int32),
+        half_arr=np.asarray([(pl - 1) // 2 for pl in p], dtype=np.int32),
+    )
+
+
+def _log2_bigint(x: int) -> float:
+    top = x.bit_length()
+    if top <= 53:
+        return math.log2(x)
+    shift = top - 53
+    return math.log2(x >> shift) + shift
+
+
+def min_moduli_for_bits(bits: float) -> int:
+    """Smallest N whose product exceeds 2^bits."""
+    for n in range(1, MAX_MODULI + 1):
+        if make_crt_context(n).log2_P > bits:
+            return n
+    raise ValueError(f"cannot reach {bits} bits with {MAX_MODULI} moduli")

@@ -1,0 +1,91 @@
+"""The paper's performance model (SIII-C), parameterized by hardware.
+
+  t = mem_bytes(m, n, k, N, c, mode, prec) / b  +  int8_ops(...) / p
+
+with b = sustained memory bandwidth (B/s) and p = int8 engine throughput
+(OPS).  TFLOPS is reported as 8 m n k / t * 1e-12 (complex GEMM flops).
+
+Hardware presets include the paper's GPUs and our TPU v5e target
+(819 GB/s HBM, 394 TOPS int8 = 2x the 197 TFLOP/s bf16 MXU rate).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str
+    mem_bw: float          # B/s
+    int8_ops: float        # OPS
+    native_c64: float      # native CGEMM flop/s (for speedup comparisons)
+    native_c128: float     # native ZGEMM flop/s
+
+
+TPU_V5E = HW("tpu-v5e", 819e9, 394e12, 197e12, 0.0)  # no native f64 at all
+GH200 = HW("gh200", 4000e9, 1979e12, 67e12, 34e12)
+B200 = HW("b200", 8000e9, 4500e12, 75e12, 37e12)
+RTX5080 = HW("rtx5080", 960e9, 450e12, 56e12, 0.88e12)
+MI300X = HW("mi300x", 5300e9, 2615e12, 163e12, 163e12)
+
+HARDWARE = {h.name: h for h in (TPU_V5E, GH200, B200, RTX5080, MI300X)}
+
+
+def complex_time_s(
+    m: int,
+    n: int,
+    k: int,
+    n_moduli: int,
+    hw: HW,
+    mode: str = "fast",
+    prec: str = "z",     # 'z' (complex128 in) | 'c' (complex64 in)
+    c: float | None = None,
+) -> float:
+    """Paper SIII-C total-time model for complex GEMM emulation."""
+    N = n_moduli
+    cc = float(c if c is not None else N)
+    b, p = hw.mem_bw, hw.int8_ops
+    if mode == "fast":
+        if prec == "z":
+            mem = ((3 * N + 32 + cc) * k + 4) * (m + n) + (16 * N + 16 + 2 * cc) * m * n
+        else:
+            mem = ((3 * N + 16 + cc) * k + 4) * (m + n) + (16 * N + 8 + 2 * cc) * m * n
+        ops = 6 * N * m * n * k
+    elif mode == "accu":
+        if prec == "z":
+            mem = ((35 + 3 * N + cc) * k + 8) * (m + n) + (16 * N + 40 + 2 * cc) * m * n
+        else:
+            mem = ((19 + 3 * N + cc) * k + 8) * (m + n) + (16 * N + 32 + 2 * cc) * m * n
+        ops = 6 * (N + 1) * m * n * k
+    else:
+        raise ValueError(mode)
+    return mem / b + ops / p
+
+
+def complex_tflops(m, n, k, n_moduli, hw: HW, mode="fast", prec="z", c=None):
+    t = complex_time_s(m, n, k, n_moduli, hw, mode, prec, c)
+    return 8.0 * m * n * k / t * 1e-12
+
+
+def real_time_s(m, n, k, n_moduli, hw: HW, mode="fast", prec="d", c=None):
+    """Real-GEMM variant ([30] + SIV-C): N int8 GEMMs of (m,k,n)."""
+    N = n_moduli
+    cc = float(c if c is not None else N)
+    b, p = hw.mem_bw, hw.int8_ops
+    in_bytes = 8 if prec == "d" else 4
+    mem = ((N + 2 * in_bytes + cc) * k + 2) * (m + n) + (6 * N + in_bytes + 2 * cc) * m * n
+    ops = 2 * (N if mode == "fast" else N + 1) * m * n * k
+    return mem / b + ops / p
+
+
+def real_tflops(m, n, k, n_moduli, hw: HW, mode="fast", prec="d", c=None):
+    t = real_time_s(m, n, k, n_moduli, hw, mode, prec, c)
+    return 2.0 * m * n * k / t * 1e-12
+
+
+def ozaki1_complex_time_s(m, n, k, slices: int, hw: HW) -> float:
+    """Ozaki-I cost shape (SIV-B): S(S+1)/2 int8 complex products, each a
+    Karatsuba triple => 3*S(S+1)/2 real int8 GEMMs (memory terms omitted —
+    used only for the >=algorithmic-factor comparison)."""
+    s = slices
+    return (3 * s * (s + 1) / 2) * 2 * m * n * k / hw.int8_ops

@@ -1,0 +1,85 @@
+"""GEMM backend policy — the framework-facing integration of the technique.
+
+Any dense layer in `repro.models` routes its matmuls through `policy_matmul`,
+so the paper's emulation is a first-class, config-selectable feature
+(`gemm_backend` in the arch configs), analogous to the paper's LD_PRELOAD
+interposition of cuBLAS calls — but composable and differentiable.
+
+The emulated forward is wrapped in a custom VJP: trunc() has zero gradient,
+but the emulation approximates an exact GEMM to (beyond-)float precision, so
+the correct cotangents are those of the exact GEMM — themselves computed with
+the same emulated backend (keeping the whole training step int8-dominated).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from .gemm import ozaki2_gemm
+
+Backend = Literal["native", "ozaki2_f32", "ozaki2_f64"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmPolicy:
+    """Static (hashable) matmul policy threaded through the model configs."""
+
+    backend: Backend = "native"
+    n_moduli: int | None = None
+    mode: str = "fast"            # 'fast' | 'accu'
+    method: str = "paper"         # CRT reconstruction path
+
+    @property
+    def compute_dtype(self):
+        return {"native": None, "ozaki2_f32": jnp.float32, "ozaki2_f64": jnp.float64}[
+            self.backend
+        ]
+
+
+NATIVE = GemmPolicy()
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def emulated_matmul(x: jnp.ndarray, w: jnp.ndarray, policy: GemmPolicy):
+    return _emulated_fwd_raw(x, w, policy)
+
+
+def _emulated_fwd_raw(x, w, policy):
+    ct = policy.compute_dtype
+    y = ozaki2_gemm(
+        x.astype(ct),
+        w.astype(ct),
+        n_moduli=policy.n_moduli,
+        mode=policy.mode,
+        method=policy.method,
+    )
+    return y.astype(x.dtype)
+
+
+def _emulated_fwd(x, w, policy):
+    return _emulated_fwd_raw(x, w, policy), (x, w)
+
+
+def _emulated_bwd(policy, res, g):
+    x, w = res
+    # dX = G @ W^T, dW = X^T @ G — also emulated (int8-engine dominated).
+    dx = _emulated_fwd_raw(g, w.swapaxes(-1, -2), policy)
+    dw = _emulated_fwd_raw(x.swapaxes(-1, -2), g, policy)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+emulated_matmul.defvjp(_emulated_fwd, _emulated_bwd)
+
+
+def policy_matmul(x: jnp.ndarray, w: jnp.ndarray, policy: GemmPolicy) -> jnp.ndarray:
+    """x: (..., k) @ w: (k, n) under the policy's backend."""
+    if policy.backend == "native":
+        return jnp.matmul(x, w)
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    y = emulated_matmul(x2, w, policy)
+    return y.reshape(lead + (w.shape[-1],))

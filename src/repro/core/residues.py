@@ -1,0 +1,120 @@
+"""Integer conversion + residue decomposition (Alg. 1 steps IV, V-i/ii/iv).
+
+Exactness strategy (DESIGN.md S2, TPU adaptation):
+
+The scaled integers a' = trunc(a * mu) can be as large as ~2^(log2(P)/2), far
+beyond 2^53, so a naive float `mod` is wrong.  But a' is always *exactly
+representable* (mu is a power of two and trunc is exact), so we peel it into
+base-2^24 limbs, each limb exactly representable and < 2^24, then reduce each
+limb with precomputed (2^24)^i mod p_l in small exact arithmetic.  The same
+code path is exact in f64 (CPU host) and in f32 (TPU kernels), because every
+intermediate stays below 2^24 (f32-exact) after the peel.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from .moduli import CRTContext
+
+LIMB_BITS = 24
+LIMB = float(1 << LIMB_BITS)
+
+
+def num_limbs_for_bits(bits: float) -> int:
+    """Limbs needed to hold |a'| <= 2^bits."""
+    return max(1, math.ceil((bits + 1) / LIMB_BITS))
+
+
+def quantize(a: jnp.ndarray, scale: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """a' = trunc(a * scale) with the scale broadcast along `axis`.
+
+    `scale` holds exact powers of two, so the product and trunc are exact.
+    """
+    shape = [1] * a.ndim
+    shape[axis] = -1
+    return jnp.trunc(a * scale.reshape(shape))
+
+
+def split_limbs(x: jnp.ndarray, n_limbs: int) -> jnp.ndarray:
+    """Exactly split integer-valued float x into signed base-2^24 limbs.
+
+    Returns (n_limbs, *x.shape) with x == sum_i limbs[i] * 2^(24*i) and
+    |limbs[i]| < 2^24.  Each peel is exact: the low part is a contiguous
+    lower-bit slice of x's significand (see DESIGN.md S2).
+    """
+    limbs = []
+    rem = x
+    for i in reversed(range(1, n_limbs)):
+        base = jnp.asarray(LIMB**i, dtype=x.dtype)
+        hi = jnp.trunc(rem / base)
+        rem = rem - hi * base
+        limbs.append(hi)
+    limbs.append(rem)
+    return jnp.stack(limbs[::-1], axis=0)
+
+
+def _limb_radix_table(ctx: CRTContext, n_limbs: int) -> np.ndarray:
+    """(n_limbs, N) table of 2^(24*i) mod p_l, symmetric range."""
+    tab = np.zeros((n_limbs, ctx.n), dtype=np.int32)
+    for i in range(n_limbs):
+        for l, p in enumerate(ctx.moduli):
+            r = pow(1 << LIMB_BITS, i, p)
+            if r > (p - 1) // 2:
+                r -= p
+            tab[i, l] = r
+    return tab
+
+
+def sym_mod_small(v: jnp.ndarray, p, half) -> jnp.ndarray:
+    """Symmetric mod for |v| small enough that v/p rounds within +/-1.
+
+    v may be any float/int array with |v| <= ~2^44 (f64) / ~2^20 (f32).
+    Result in [-(p-1)/2, (p-1)/2].  Exact: n is an integer, v - n*p is exact
+    (small magnitudes), and one correction step fixes a +/-1 rounding of n.
+    """
+    v = jnp.asarray(v)
+    n = jnp.round(v / p)
+    r = v - n * p
+    r = jnp.where(r > half, r - p, r)
+    r = jnp.where(r < -half, r + p, r)
+    return r
+
+
+def sym_mod_int32(v: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Exact symmetric mod of int32 values (post-GEMM reduction, step V-iv)."""
+    half = (p - 1) // 2
+    r = jnp.remainder(v, jnp.int32(p))  # in [0, p)
+    return jnp.where(r > half, r - p, r).astype(jnp.int32)
+
+
+def residues_from_quantized(
+    aq: jnp.ndarray, ctx: CRTContext, n_limbs: int
+) -> jnp.ndarray:
+    """Map integer-valued float a' -> (N, *shape) int8 symmetric residues.
+
+    Steps V-i/ii of Alg. 1.  Exact for |a'| < 2^(24 * n_limbs).
+    """
+    limbs = split_limbs(aq, n_limbs)  # (L, ...) floats, |limb| < 2^24
+    radix = _limb_radix_table(ctx, n_limbs)  # (L, N) int32 host constants
+    outs = []
+    for l, p in enumerate(ctx.moduli):
+        half = (p - 1) // 2
+        acc = jnp.zeros_like(aq)
+        for i in range(n_limbs):
+            # |limb mod| <= (p-1)/2; times |radix| <= (p-1)/2 => < 2^14
+            r_i = sym_mod_small(limbs[i], float(p), float(half))
+            acc = acc + r_i * float(radix[i, l])
+        # |acc| <= n_limbs * 127^2 < 2^17 -> exact final reduction
+        outs.append(sym_mod_small(acc, float(p), float(half)))
+    return jnp.stack(outs, axis=0).astype(jnp.int8)
+
+
+def residues(
+    a: jnp.ndarray, scale: jnp.ndarray, axis: int, ctx: CRTContext, n_limbs: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """quantize + residue-decompose; returns (a_quantized_float, int8 residues)."""
+    aq = quantize(a, scale, axis)
+    return aq, residues_from_quantized(aq, ctx, n_limbs)

@@ -1,0 +1,148 @@
+"""Scaling-vector determination (Alg. 1 step III; paper SIII-B).
+
+Two modes, both for real and complex operands:
+
+* fast  — Cauchy-Schwarz bound on the row/column 2-norms of the block
+          embedding (paper eqs. 11-12).  One pass over A and B.
+* accu  — auxiliary 7-bit int8 product bounds sum_h |a'||b'| directly
+          (paper eqs. 13-14).  Tighter => fewer moduli for target accuracy.
+
+All scale factors are exact powers of two; we carry their integer exponents
+(the paper stores them as INT16) and materialize mu = 2^e via ldexp (exact).
+
+GPU->TPU adaptation: the paper bounds CUDA's __log2f error with
+delta = 0.5/(1-4u) in round-down/round-up mode; we use f64 log2 with an
+explicit safety factor DELTA = 0.5*(1+2^-40) and floor() — same contract
+(the computed bound always over-estimates log2 of the true norm).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .intmul import int8_matmul
+from .moduli import CRTContext
+
+DELTA = 0.5 * (1.0 + 2.0**-40)
+_F64 = jnp.float64
+
+
+def ilogb(x: jnp.ndarray) -> jnp.ndarray:
+    """floor(log2 |x|) for x > 0, exact (frexp-based; paper uses ilogb())."""
+    _, e = jnp.frexp(x)
+    return (e - 1).astype(jnp.int32)
+
+
+def _p_fast(ctx: CRTContext) -> float:
+    # P'_fast = (log2(P-1) - 1)/2 - 1  (precomputed host-side)
+    return (ctx.log2_P - 1.0) / 2.0 - 1.0
+
+
+def _p_accu(ctx: CRTContext) -> float:
+    # P'_accu = log2(P-1)/2 - 0.5
+    return ctx.log2_P / 2.0 - 0.5
+
+
+def _exp2i(e: jnp.ndarray) -> jnp.ndarray:
+    return jnp.ldexp(jnp.asarray(1.0, dtype=_F64), e.astype(jnp.int32))
+
+
+def _fast_exponent(
+    absmax: jnp.ndarray, norm2_scaled: jnp.ndarray, ctx: CRTContext
+) -> jnp.ndarray:
+    """floor(P'fast - max(1, delta*log2(sum a_hat^2))) - ilogb(max|a|).
+
+    `norm2_scaled` is sum of (a * 2^-ilogb(max))^2 per row/col, in [1, 4k] —
+    the explicit normalization that the paper folds into __log2f range
+    reduction.  Zero rows get exponent 0 (mu = 1).
+    """
+    e_max = ilogb(jnp.where(absmax > 0, absmax, 1.0))
+    t = jnp.maximum(norm2_scaled, 1.0)
+    bound = jnp.maximum(1.0, DELTA * jnp.log2(t))
+    e = jnp.floor(_p_fast(ctx) - bound).astype(jnp.int32) - e_max
+    return jnp.where(absmax > 0, e, 0).astype(jnp.int32)
+
+
+def scale_fast_real(a: jnp.ndarray, b: jnp.ndarray, ctx: CRTContext):
+    """Returns integer exponents (e_mu[m], e_nu[n]); mu = 2^e_mu etc."""
+    a = a.astype(_F64)
+    b = b.astype(_F64)
+    amax = jnp.max(jnp.abs(a), axis=1)
+    bmax = jnp.max(jnp.abs(b), axis=0)
+    an = a * _exp2i(-ilogb(jnp.where(amax > 0, amax, 1.0)))[:, None]
+    bn = b * _exp2i(-ilogb(jnp.where(bmax > 0, bmax, 1.0)))[None, :]
+    e_mu = _fast_exponent(amax, jnp.sum(an * an, axis=1), ctx)
+    e_nu = _fast_exponent(bmax, jnp.sum(bn * bn, axis=0), ctx)
+    return e_mu, e_nu
+
+
+def scale_fast_complex(ar, ai, br, bi, ctx: CRTContext):
+    """Complex fast mode: block embedding (eq. 6) makes row i and i+m of
+    A-hat share norms, so mu stays an m-vector (paper SIII-B)."""
+    ar, ai = ar.astype(_F64), ai.astype(_F64)
+    br, bi = br.astype(_F64), bi.astype(_F64)
+    amax = jnp.maximum(jnp.max(jnp.abs(ar), axis=1), jnp.max(jnp.abs(ai), axis=1))
+    bmax = jnp.maximum(jnp.max(jnp.abs(br), axis=0), jnp.max(jnp.abs(bi), axis=0))
+    sa = _exp2i(-ilogb(jnp.where(amax > 0, amax, 1.0)))[:, None]
+    sb = _exp2i(-ilogb(jnp.where(bmax > 0, bmax, 1.0)))[None, :]
+    na = jnp.sum((ar * sa) ** 2 + (ai * sa) ** 2, axis=1)
+    nb = jnp.sum((br * sb) ** 2 + (bi * sb) ** 2, axis=0)
+    e_mu = _fast_exponent(amax, na, ctx)
+    e_nu = _fast_exponent(bmax, nb, ctx)
+    return e_mu, e_nu
+
+
+def _bar_int8(x_abs: jnp.ndarray, e_bar: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """ceil(|x| * 2^e_bar) as int8 (<= 64; 7-bit upper-bound matrix)."""
+    shape = [1] * x_abs.ndim
+    shape[axis] = -1
+    v = jnp.ceil(x_abs * _exp2i(e_bar).reshape(shape))
+    return jnp.clip(v, 0, 127).astype(jnp.int8)
+
+
+def _accu_exponent(cbar_max: jnp.ndarray, e_bar: jnp.ndarray, ctx: CRTContext):
+    t = jnp.maximum(cbar_max.astype(_F64), 1.0)
+    e = jnp.floor(_p_accu(ctx) - DELTA * jnp.log2(t)).astype(jnp.int32)
+    return e + e_bar
+
+
+def scale_accurate_real(a: jnp.ndarray, b: jnp.ndarray, ctx: CRTContext):
+    a = a.astype(_F64)
+    b = b.astype(_F64)
+    amax = jnp.max(jnp.abs(a), axis=1)
+    bmax = jnp.max(jnp.abs(b), axis=0)
+    # scale so the max-abs integer part fits 6 bits: max*2^e in [32, 64)
+    e_abar = 5 - ilogb(jnp.where(amax > 0, amax, 1.0))
+    e_bbar = 5 - ilogb(jnp.where(bmax > 0, bmax, 1.0))
+    abar = _bar_int8(jnp.abs(a), e_abar, 0)
+    bbar = _bar_int8(jnp.abs(b), e_bbar, 1)
+    cbar = int8_matmul(abar, bbar)  # exact upper bound of sum mu|a| nu|b|
+    e_mu = _accu_exponent(jnp.max(cbar, axis=1), e_abar, ctx)
+    e_nu = _accu_exponent(jnp.max(cbar, axis=0), e_bbar, ctx)
+    return jnp.where(amax > 0, e_mu, 0), jnp.where(bmax > 0, e_nu, 0)
+
+
+def scale_accurate_complex(ar, ai, br, bi, ctx: CRTContext):
+    """Paper SIII-B accurate mode: Cbar_I = AbarI BbarR + AbarR BbarI,
+    Cbar_R = Cbar_I + (AbarR - AbarI)(BbarR - BbarI)."""
+    ar, ai = ar.astype(_F64), ai.astype(_F64)
+    br, bi = br.astype(_F64), bi.astype(_F64)
+    amax = jnp.maximum(jnp.max(jnp.abs(ar), axis=1), jnp.max(jnp.abs(ai), axis=1))
+    bmax = jnp.maximum(jnp.max(jnp.abs(br), axis=0), jnp.max(jnp.abs(bi), axis=0))
+    e_abar = 5 - ilogb(jnp.where(amax > 0, amax, 1.0))
+    e_bbar = 5 - ilogb(jnp.where(bmax > 0, bmax, 1.0))
+    abar_r = _bar_int8(jnp.abs(ar), e_abar, 0)
+    abar_i = _bar_int8(jnp.abs(ai), e_abar, 0)
+    bbar_r = _bar_int8(jnp.abs(br), e_bbar, 1)
+    bbar_i = _bar_int8(jnp.abs(bi), e_bbar, 1)
+    cbar_i = int8_matmul(abar_i, bbar_r) + int8_matmul(abar_r, bbar_i)
+    # (AbarR - AbarI) etc. are error-free in int8 (values in [-64, 64])
+    cbar_r = cbar_i + int8_matmul(abar_r - abar_i, bbar_r - bbar_i)
+    cmax = jnp.maximum(cbar_r, cbar_i)
+    e_mu = _accu_exponent(jnp.max(cmax, axis=1), e_abar, ctx)
+    e_nu = _accu_exponent(jnp.max(cmax, axis=0), e_bbar, ctx)
+    return jnp.where(amax > 0, e_mu, 0), jnp.where(bmax > 0, e_nu, 0)
+
+
+def exp2_vector(e: jnp.ndarray) -> jnp.ndarray:
+    """Materialize the power-of-two scale vector from integer exponents."""
+    return _exp2i(e)

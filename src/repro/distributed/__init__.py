@@ -1,0 +1,19 @@
+from .sharding import (
+    DEFAULT_RULES,
+    batch_pspec,
+    batch_sharding,
+    optimizer_spec,
+    pspec_for_axes,
+    tree_pspecs,
+    tree_shardings,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "batch_pspec",
+    "batch_sharding",
+    "optimizer_spec",
+    "pspec_for_axes",
+    "tree_pspecs",
+    "tree_shardings",
+]

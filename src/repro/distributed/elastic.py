@@ -1,0 +1,46 @@
+"""Elastic scaling: resume the same checkpoint on a different mesh.
+
+Node failure at scale => rebuild a smaller (or later, larger) mesh from the
+healthy hosts and continue.  Because (a) checkpoints are mesh-agnostic host
+arrays and (b) the data pipeline is a pure function of (step, shard), the
+only work is re-deriving shardings for the new mesh and device_put'ing —
+`reshard` below.  Training then continues bit-compatibly modulo batch
+layout.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from ..checkpoint import Checkpointer, latest_step
+from .sharding import DEFAULT_RULES, tree_shardings
+
+
+def reshard(tree, shardings):
+    """Move a (host or device) pytree onto new shardings (new mesh)."""
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def elastic_restore(
+    ckpt_dir: str,
+    abstract_params,
+    new_mesh: Mesh,
+    rules=None,
+    like=None,
+):
+    """Load the latest checkpoint and shard it for `new_mesh`.
+
+    Returns (step, params) with params laid out per the rules on the new
+    mesh.  `like` defaults to materialized shapes from abstract_params.
+    """
+    rules = rules or DEFAULT_RULES
+    step = latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    ckpt = Checkpointer(ckpt_dir)
+    from ..models.params import abstract_arrays
+
+    like = like if like is not None else abstract_arrays(abstract_params)
+    shardings = tree_shardings(abstract_params, rules, new_mesh)
+    params = ckpt.restore(step, like, shardings)
+    return step, params

@@ -1,0 +1,142 @@
+"""GPipe-style pipeline parallelism over a mesh axis (DESIGN.md S4: the
+'pod' axis doubles as the pipeline axis for cross-DCN-friendly training).
+
+The stacked layer parameters of a homogeneous decoder are split into
+`n_stages` contiguous stages sharded over the pipeline axis; microbatches
+flow stage-to-stage via `ppermute` inside `shard_map`.  Everything is plain
+differentiable JAX: `jax.grad` of the pipelined loss yields the reverse
+pipeline automatically (ppermute transposes to the reverse shift).
+
+Schedule: classic GPipe fill-drain — T = M + S - 1 ticks for M microbatches
+over S stages; bubble fraction (S-1)/T.  Embedding + head run outside the
+pipelined region (they are cheap relative to the stack and keep the stage
+function homogeneous).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from ..models.layers import apply_mlp, apply_norm
+from ..models.blocks import BLOCKS
+
+
+def _stage_fn(cfg: ModelConfig, lp, x, positions):
+    """Run this stage's layers (scan) on activations x: (B, S, d)."""
+    bk, mk, _ = cfg.layer_groups[0]
+
+    def body(carry, layer_p):
+        h = carry
+        hn = apply_norm(cfg.norm, layer_p["norm1"], h)
+        h = h + BLOCKS[bk]["apply"](cfg, layer_p["block"], hn, positions)
+        if mk != "none":
+            hn2 = apply_norm(cfg.norm, layer_p["norm2"], h)
+            h = h + apply_mlp(mk, layer_p["mlp"], hn2, cfg.gemm_policy)
+        return h, None
+
+    out, _ = jax.lax.scan(body, x, lp)
+    return out
+
+
+def pipeline_apply(
+    cfg: ModelConfig,
+    group_params,
+    h: jnp.ndarray,
+    positions: jnp.ndarray,
+    mesh: Mesh,
+    axis: str = "pp",
+    n_micro: int = 4,
+):
+    """Pipelined layer stack. h: (B, S, d) embedded activations (replicated
+    over `axis`); returns transformed activations, bit-equal to the
+    sequential stack (tests/test_pipeline.py)."""
+    if len(cfg.layer_groups) != 1:
+        raise ValueError("pipeline supports homogeneous layer stacks")
+    n_stages = mesh.shape[axis]
+    n_layers = cfg.n_layers
+    if n_layers % n_stages:
+        raise ValueError(f"{n_layers} layers not divisible into {n_stages} stages")
+    b = h.shape[0]
+    if b % n_micro:
+        raise ValueError(f"batch {b} not divisible by n_micro {n_micro}")
+
+    # (L, ...) -> (S, L/S, ...): stage dim sharded over the pipeline axis
+    per = n_layers // n_stages
+    staged = jax.tree.map(
+        lambda x: x.reshape((n_stages, per) + x.shape[1:]), group_params
+    )
+    mb = h.reshape((n_micro, b // n_micro) + h.shape[1:])  # (M, b/M, S, d)
+    pos_mb = positions[: b // n_micro]
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(axis), P(), P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+    def run(stage_p, mb_in, pos):
+        stage_p = jax.tree.map(lambda x: x[0], stage_p)  # local (per, ...)
+        idx = jax.lax.axis_index(axis)
+        m = mb_in.shape[0]
+        ticks = m + n_stages - 1
+        fwd_perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+        def tick(carry, t):
+            state, outputs = carry
+            # stage 0 ingests microbatch t (clamped; masked later)
+            feed = mb_in[jnp.clip(t, 0, m - 1)]
+            x = jnp.where(idx == 0, feed, state)
+            y = _stage_fn(cfg, stage_p, x, pos)
+            # emit from the last stage at ticks t >= S-1 -> microbatch t-S+1
+            out_slot = jnp.clip(t - (n_stages - 1), 0, m - 1)
+            write = (idx == n_stages - 1) & (t >= n_stages - 1)
+            outputs = jax.lax.dynamic_update_index_in_dim(
+                outputs,
+                jnp.where(write, y, outputs[out_slot]),
+                out_slot,
+                axis=0,
+            )
+            # pass activations downstream
+            nxt = jax.lax.ppermute(y, axis, fwd_perm)
+            return (nxt, outputs), None
+
+        init = (jnp.zeros_like(mb_in[0]), jnp.zeros_like(mb_in))
+        (_, outputs), _ = jax.lax.scan(
+            tick, init, jnp.arange(ticks, dtype=jnp.int32)
+        )
+        # outputs live on the last stage; broadcast to all shards
+        outputs = jax.lax.psum(
+            jnp.where(idx == n_stages - 1, outputs, jnp.zeros_like(outputs)),
+            axis,
+        )
+        return outputs
+
+    out = run(staged, mb, pos_mb)
+    return out.reshape(h.shape)
+
+
+def pipeline_loss(model, params, batch, mesh, axis: str = "pp", n_micro: int = 4):
+    """Drop-in pipelined Model.loss for homogeneous decoder configs."""
+    cfg = model.cfg
+    h, positions, _ = _embed(model, params, batch)
+    h = pipeline_apply(cfg, params["groups"][0], h, positions, mesh, axis, n_micro)
+    h = apply_norm(cfg.norm, params["final_norm"], h)
+    logits = model._head(params, h)
+    tokens = batch["tokens"]
+    targets = jnp.concatenate([tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], 1)
+    mask = jnp.concatenate(
+        [jnp.ones_like(tokens[:, 1:], jnp.float32),
+         jnp.zeros_like(tokens[:, :1], jnp.float32)], 1,
+    )
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _embed(model, params, batch):
+    return model._embed_inputs(params, batch) + (None,)

@@ -1,0 +1,143 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Parameters/caches declare logical axis names in their ParamMeta ('vocab',
+'ff', 'qkv', 'experts', ...); these rules map them onto the physical mesh
+axes ('pod', 'data', 'model').  Changing the parallelism layout = changing
+this table, not the model code.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.params import ParamMeta, _map_like
+
+# tensor-parallel over 'model'; DP/batch over ('pod','data'); ZeRO-1 for
+# optimizer state adds 'data' on the first free axis (see optimizer_spec).
+# The KV cache shards its *sequence* dim over 'model' (flash-decoding style)
+# because kv_heads (1-24 on the assigned archs) rarely divide the 16-way
+# model axis, while the 32k/512k cache length always does.
+DEFAULT_RULES: dict[str, Any] = {
+    "vocab": "model",
+    "ff": "model",
+    "qkv": "model",
+    "kv_qkv": "model",
+    "heads": "model",
+    "kv_heads": None,
+    "kv_seq": "model",
+    "experts": "model",      # expert parallelism
+    "ssm_inner": "model",
+    "embed": None,
+    "layers": None,          # scan axis (pipeline axis when --pp is used)
+    "batch": ("pod", "data"),
+    "seq": None,             # flipped to 'model' under sequence parallelism
+}
+
+
+def _mesh_axes(mesh: Mesh) -> set[str]:
+    return set(mesh.axis_names)
+
+
+def _axes_size(target, mesh: Mesh) -> int:
+    if isinstance(target, (tuple, list)):
+        n = 1
+        for t in target:
+            n *= mesh.shape[t]
+        return n
+    return mesh.shape[target]
+
+
+def _resolve(
+    axis: str | None, rules: Mapping[str, Any], mesh: Mesh, dim=None, used=None
+):
+    """Map a logical axis onto mesh axes; drop to replicated when the mesh
+    axes are absent, already claimed by an earlier dimension (left-to-right
+    precedence — e.g. MoE experts take 'model' before the per-expert ff), or
+    the dimension size is not divisible (pjit arguments require exact
+    divisibility)."""
+    if axis is None:
+        return None
+    target = rules.get(axis, None)
+    if target is None:
+        return None
+    used = used if used is not None else set()
+    if isinstance(target, (tuple, list)):
+        kept = tuple(
+            t for t in target if t in _mesh_axes(mesh) and t not in used
+        )
+        if not kept:
+            return None
+        if dim is not None and dim % _axes_size(kept, mesh):
+            return None
+        used.update(kept)
+        return kept
+    if target not in _mesh_axes(mesh) or target in used:
+        return None
+    if dim is not None and dim % mesh.shape[target]:
+        return None
+    used.add(target)
+    return target
+
+
+def pspec_for_axes(
+    axes: Sequence[str | None], rules, mesh: Mesh, shape=None
+) -> P:
+    dims = shape if shape is not None else [None] * len(axes)
+    used: set = set()
+    return P(*[_resolve(a, rules, mesh, d, used) for a, d in zip(axes, dims)])
+
+
+def pspec_for_meta(meta: ParamMeta, rules, mesh: Mesh) -> P:
+    return pspec_for_axes(meta.axes, rules, mesh, meta.shape)
+
+
+def tree_pspecs(abstract_params, rules, mesh: Mesh):
+    """ParamMeta tree -> PartitionSpec tree (size-aware)."""
+    return _map_like(abstract_params, lambda _, m: pspec_for_meta(m, rules, mesh))
+
+
+def tree_shardings(abstract_params, rules, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_pspecs(abstract_params, rules, mesh),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def optimizer_spec(param_spec: P, shape, mesh: Mesh) -> P:
+    """ZeRO-1: shard optimizer state over 'data' on the first free axis
+    whose size divides the data axis.
+
+    The m/v/master leaves mirror the parameter but additionally split one
+    unsharded dimension across the data axis, so AdamW state for the
+    26-32B archs fits v5e HBM (DESIGN.md S4).
+    """
+    if "data" not in _mesh_axes(mesh):
+        return param_spec
+    nd = mesh.shape["data"]
+    parts = list(param_spec)
+    parts += [None] * (len(shape) - len(parts))
+    used = {
+        a
+        for p in parts
+        if p is not None
+        for a in (p if isinstance(p, (tuple, list)) else (p,))
+    }
+    if "data" in used:  # already data-sharded (e.g. ZeRO-3 param rules)
+        return P(*parts)
+    for i, (p, d) in enumerate(zip(parts, shape)):
+        if p is None and d % nd == 0:
+            parts[i] = "data"
+            return P(*parts)
+    return param_spec
+
+
+def batch_pspec(mesh: Mesh, rules=None) -> P:
+    rules = rules or DEFAULT_RULES
+    return P(_resolve("batch", rules, mesh))
+
+
+def batch_sharding(mesh: Mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, batch_pspec(mesh, rules))

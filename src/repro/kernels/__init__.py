@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the Ozaki-II hot spots (validated in interpret
+mode on CPU; see tests/test_kernels.py for the per-kernel allclose sweeps).
+"""
+from .crt_garner import crt_garner
+from .flash_attention import flash_attention
+from .int8_mod_gemm import int8_mod_gemm
+from .karatsuba_fused import karatsuba_mod_gemm
+from .ops import ozaki2_cgemm_kernels, ozaki2_gemm_kernels
+from .residue_cast import residue_cast
+
+__all__ = [
+    "crt_garner",
+    "flash_attention",
+    "int8_mod_gemm",
+    "karatsuba_mod_gemm",
+    "ozaki2_cgemm_kernels",
+    "ozaki2_gemm_kernels",
+    "residue_cast",
+]

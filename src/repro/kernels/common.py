@@ -1,0 +1,73 @@
+"""Shared helpers for the Ozaki-II Pallas TPU kernels.
+
+Everything here is exact f32/int32 arithmetic: the kernels never touch f64
+(TPU has none).  Values stay below 2^24 after the limb peel, where f32
+arithmetic on integers is error-free.
+"""
+from __future__ import annotations
+
+import jax
+
+import jax.numpy as jnp
+import numpy as np
+
+LIMB_BITS = 24
+LIMB = float(1 << LIMB_BITS)
+
+
+def interpret_default() -> bool:
+    """Run kernels in interpret mode off-TPU (this container is CPU-only)."""
+    return jax.default_backend() != "tpu"
+
+
+def sym_mod_f32(v, p: float, half: float):
+    """Symmetric mod for f32 integer values |v| <~ 2^20 (exact, see core)."""
+    n = jnp.round(v * (1.0 / p))
+    r = v - n * p
+    r = jnp.where(r > half, r - p, r)
+    r = jnp.where(r < -half, r + p, r)
+    return r
+
+
+def sym_mod_int32_via_f32(d, p: int):
+    """Exact symmetric mod of int32 (|d| < 2^31) using an exact 16-bit split.
+
+    d = dh*2^16 + dl with dh = d >> 16 (floor), dl = d & 0xffff in [0, 2^16);
+    both below 2^24 so the f32 modular arithmetic is exact.
+    """
+    half = float((p - 1) // 2)
+    pf = float(p)
+    m16 = float(pow(1 << 16, 1, p))  # 2^16 mod p (representative in [0,p))
+    dh = jnp.right_shift(d, 16).astype(jnp.float32)  # arithmetic shift: floor
+    dl = jnp.bitwise_and(d, (1 << 16) - 1).astype(jnp.float32)
+    rh = sym_mod_f32(dh, pf, half)
+    rl = sym_mod_f32(dl, pf, half)
+    return sym_mod_f32(rh * m16 + rl, pf, half)
+
+
+def limb_radix_f32(moduli, n_limbs: int) -> np.ndarray:
+    """(n_limbs, N) f32 table of symmetric 2^(24 i) mod p_l."""
+    tab = np.zeros((n_limbs, len(moduli)), dtype=np.float32)
+    for i in range(n_limbs):
+        for l, p in enumerate(moduli):
+            r = pow(1 << LIMB_BITS, i, p)
+            if r > (p - 1) // 2:
+                r -= p
+            tab[i, l] = float(r)
+    return tab
+
+
+def split_scale_exponent(e: np.ndarray | jnp.ndarray, bias: int = 0):
+    """Split exponents e+bias into two f32-safe power-of-two factors.
+
+    Returns (s1, s2) f32 with s1*s2 == 2^(e+bias) exactly, each factor's
+    exponent within f32 normal range for |e+bias| <= 252.
+    """
+    et = e + bias
+    e1 = et // 2
+    e2 = et - e1
+    one = jnp.float64(1.0)
+    return (
+        jnp.ldexp(one, e1).astype(jnp.float32),
+        jnp.ldexp(one, e2).astype(jnp.float32),
+    )

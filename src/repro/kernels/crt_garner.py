@@ -1,0 +1,126 @@
+"""Pallas kernel: Garner mixed-radix CRT reconstruction + inverse scaling.
+
+TPU-native replacement for the paper's fp64 eq.(5) reconstruction (DESIGN.md
+S2): the digit recursion is exact small-integer arithmetic (done in f32 where
+every value is < 2^17, hence error-free), and the digit->value conversion
+accumulates in a double-single (two-f32, ~48-bit) pair against prescaled
+mixed-radix weights W_t * 2^-S, followed by the exact power-of-two inverse
+scaling  C = C' / (mu_i nu_j).
+
+Output: 'f32' (CGEMM/SGEMM-grade) or a (2, m, n) double-single pair
+('dd', ZGEMM-grade on TPU; ~2^-48 relative — see DESIGN.md S6).
+
+Grid: (m/bm, n/bn); the full N-deep residue stack for a tile sits in VMEM
+(N * bm * bn int8; 13 * 256 * 256 = 0.8 MiB).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..core.moduli import CRTContext
+from .common import interpret_default, split_scale_exponent, sym_mod_f32
+from ..core import expansion as ex
+
+
+def _prescale(ctx: CRTContext) -> int:
+    """Weight prescale S keeping W_t * 2^-S * 127 within f32 range."""
+    return max(0, math.ceil(ctx.log2_P) - 100)
+
+
+def _weight_table(ctx: CRTContext) -> np.ndarray:
+    """(N, 2) f32 double-single of W_t * 2^-S (exact power-of-two scaling)."""
+    s = _prescale(ctx)
+    tab = np.zeros((ctx.n, 2), dtype=np.float32)
+    W = 1
+    for t in range(ctx.n):
+        hi = np.float32(np.ldexp(float(W), -s))
+        lo = np.float32(np.ldexp(W - int(math.ldexp(float(np.float64(hi)), s)), -s))
+        tab[t, 0], tab[t, 1] = hi, lo
+        W *= ctx.moduli[t]
+    return tab
+
+
+def _kernel(e_ref, r1_ref, r2_ref, c1_ref, c2_ref, out_ref, *, ctx, out_dd):
+    moduli = ctx.moduli
+    n = ctx.n
+    # --- Garner digits (exact f32 integer arithmetic, all values < 2^17) ---
+    digits = []
+    for t in range(n):
+        pf, half = float(moduli[t]), float((moduli[t] - 1) // 2)
+        r = e_ref[t, :, :].astype(jnp.float32)
+        for s in range(t):
+            r = sym_mod_f32((r - digits[s]) * float(ctx.garner_inv[s, t]), pf, half)
+        digits.append(r)
+    # --- digits -> value, double-single accumulation, MS digit first ---
+    wt = _weight_table(ctx)
+    hi = jnp.zeros_like(digits[0])
+    lo = jnp.zeros_like(digits[0])
+    for t in range(n - 1, -1, -1):
+        ph, pe = ex.two_prod(jnp.float32(wt[t, 0]), digits[t])
+        pe = pe + jnp.float32(wt[t, 1]) * digits[t]
+        hi, lo = ex.dd_add(hi, lo, ph, pe)
+    # --- exact inverse power-of-two scaling (folds in 2^S) ---
+    rr = (r1_ref[...] * r2_ref[...])[:, None]
+    cc = (c1_ref[...] * c2_ref[...])[None, :]
+    if out_dd:
+        out_ref[0, :, :] = (hi * rr) * cc
+        out_ref[1, :, :] = (lo * rr) * cc
+    else:
+        out_ref[...] = ((hi + lo) * rr) * cc
+
+
+def crt_garner(
+    e_res: jnp.ndarray,
+    e_mu: jnp.ndarray,
+    e_nu: jnp.ndarray,
+    ctx: CRTContext,
+    *,
+    out_dd: bool = False,
+    bm: int = 256,
+    bn: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """e_res: (N, m, n) int8 residues of C'; e_mu/e_nu: integer scale
+    exponents.  Returns C = C'/(mu nu) as (m,n) f32 or (2,m,n) double-single.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    n_mod, m, n = e_res.shape
+    assert n_mod == ctx.n
+    bm, bn = min(bm, m), min(bn, n)
+    if m % bm or n % bn:
+        raise ValueError(f"({m},{n}) not divisible by ({bm},{bn})")
+    s = _prescale(ctx)
+    s_r = s // 2
+    r1, r2 = split_scale_exponent(-e_mu, bias=s_r)
+    c1, c2 = split_scale_exponent(-e_nu, bias=s - s_r)
+    out_shape = (
+        jax.ShapeDtypeStruct((2, m, n), jnp.float32)
+        if out_dd
+        else jax.ShapeDtypeStruct((m, n), jnp.float32)
+    )
+    out_spec = (
+        pl.BlockSpec((2, bm, bn), lambda i, j: (0, i, j))
+        if out_dd
+        else pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, ctx=ctx, out_dd=out_dd),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((ctx.n, bm, bn), lambda i, j: (0, i, j)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=out_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(e_res, r1, r2, c1, c2)

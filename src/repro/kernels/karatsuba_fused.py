@@ -1,0 +1,116 @@
+"""Pallas kernel: fused Karatsuba modular complex GEMM for one modulus.
+
+Beyond-paper optimization (EXPERIMENTS.md SPerf): the paper runs the three
+Karatsuba products D = AR.BR, E = AI.BI, F = (AR+AI)(BR+BI) as separate
+int8 GEMM kernel launches with int32 intermediates in HBM.  On TPU we fuse
+all three into one kernel that
+
+  * reads only the 4 residue planes (AR, AI, BR, BI) — the (AR+AI) mod p and
+    (BR+BI) mod p operands are formed in VMEM per tile (exact f32 mod of
+    values <= 254), never materialized in HBM;
+  * keeps the three int32 accumulators in VMEM scratch;
+  * emits the final CR/CI int8 residues directly:
+        CR = D - E,  CI = F - D - E   (mod p).
+
+HBM traffic per modulus drops from 6 int8 plane reads + 3 int32 (m,n)
+writes + 3 int32 reads + 2 int8 writes to 4 int8 reads + 2 int8 writes.
+
+Grid: (m/bm, n/bn, k/bk), k innermost, 3 int32 VMEM accumulators.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import interpret_default, sym_mod_f32, sym_mod_int32_via_f32
+
+
+def _dot_i8(a, b):
+    return jax.lax.dot_general(
+        a, b, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _kernel(ar_ref, ai_ref, br_ref, bi_ref, cr_ref, ci_ref,
+            d_acc, e_acc, f_acc, *, p, k_steps):
+    pf, half = float(p), float((p - 1) // 2)
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        d_acc[...] = jnp.zeros_like(d_acc)
+        e_acc[...] = jnp.zeros_like(e_acc)
+        f_acc[...] = jnp.zeros_like(f_acc)
+
+    ar, ai = ar_ref[...], ai_ref[...]
+    br, bi = br_ref[...], bi_ref[...]
+    # (AR + AI) mod p formed in VMEM: |sum| <= 254 -> exact f32 mod -> int8
+    asum = sym_mod_f32(ar.astype(jnp.float32) + ai.astype(jnp.float32), pf, half
+                       ).astype(jnp.int8)
+    bsum = sym_mod_f32(br.astype(jnp.float32) + bi.astype(jnp.float32), pf, half
+                       ).astype(jnp.int8)
+    d_acc[...] += _dot_i8(ar, br)
+    e_acc[...] += _dot_i8(ai, bi)
+    f_acc[...] += _dot_i8(asum, bsum)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _epilogue():
+        dr = sym_mod_int32_via_f32(d_acc[...], p)
+        de = sym_mod_int32_via_f32(e_acc[...], p)
+        df = sym_mod_int32_via_f32(f_acc[...], p)
+        cr_ref[...] = sym_mod_f32(dr - de, pf, half).astype(jnp.int8)
+        ci_ref[...] = sym_mod_f32(df - dr - de, pf, half).astype(jnp.int8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("p", "bm", "bn", "bk", "interpret")
+)
+def karatsuba_mod_gemm(
+    ar: jnp.ndarray,
+    ai: jnp.ndarray,
+    br: jnp.ndarray,
+    bi: jnp.ndarray,
+    *,
+    p: int,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool | None = None,
+):
+    """Residues of (CR', CI') = (AR'+iAI')(BR'+iBI') mod p. All int8 (m,k)/(k,n)."""
+    if interpret is None:
+        interpret = interpret_default()
+    m, k = ar.shape
+    _, n = br.shape
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"({m},{n},{k}) not divisible by ({bm},{bn},{bk})")
+    k_steps = k // bk
+    return pl.pallas_call(
+        functools.partial(_kernel, p=p, k_steps=k_steps),
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((m, n), jnp.int8),
+            jax.ShapeDtypeStruct((m, n), jnp.int8),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.int32),
+            pltpu.VMEM((bm, bn), jnp.int32),
+            pltpu.VMEM((bm, bn), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ar, ai, br, bi)

@@ -1,0 +1,118 @@
+"""jit'd public wrappers around the Pallas kernels + a full kernel-path GEMM.
+
+`ozaki2_gemm_kernels` / `ozaki2_cgemm_kernels` chain the three kernels into
+the complete emulation pipeline exactly as it would run on a TPU chip:
+residue_cast -> N x int8_mod_gemm (or fused Karatsuba) -> crt_garner.
+On CPU the kernels execute in interpret mode; tests compare the pipeline
+against `repro.core` (which itself is validated against exact integers).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core import scaling
+from ..core.gemm import default_n_moduli
+from ..core.moduli import make_crt_context
+from ..core.residues import num_limbs_for_bits
+from .common import split_scale_exponent
+from .crt_garner import crt_garner
+from .int8_mod_gemm import int8_mod_gemm
+from .karatsuba_fused import karatsuba_mod_gemm
+from .residue_cast import residue_cast
+
+
+def _prep(a, b, n_moduli, mode, complex_input):
+    ctx = make_crt_context(n_moduli)
+    if complex_input:
+        ar, ai = jnp.real(a), jnp.imag(a)
+        br, bi = jnp.real(b), jnp.imag(b)
+        if mode == "fast":
+            e_mu, e_nu = scaling.scale_fast_complex(ar, ai, br, bi, ctx)
+        else:
+            e_mu, e_nu = scaling.scale_accurate_complex(ar, ai, br, bi, ctx)
+        parts = (ar, ai, br, bi)
+    else:
+        if mode == "fast":
+            e_mu, e_nu = scaling.scale_fast_real(a, b, ctx)
+        else:
+            e_mu, e_nu = scaling.scale_accurate_real(a, b, ctx)
+        parts = (a, b)
+    n_limbs = num_limbs_for_bits(ctx.log2_P / 2.0 + 8.0)
+    return ctx, e_mu, e_nu, n_limbs, parts
+
+
+def _cast(x, e, axis, ctx, n_limbs, interpret):
+    s1, s2 = split_scale_exponent(e)
+    return residue_cast(
+        x.astype(jnp.float32),
+        s1,
+        s2,
+        moduli=ctx.moduli,
+        n_limbs=n_limbs,
+        scale_axis=axis,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_moduli", "mode", "interpret")
+)
+def ozaki2_gemm_kernels(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    n_moduli: int | None = None,
+    mode: str = "fast",
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Full kernel-path real GEMM emulation (f32 in / f32 out).
+
+    This is the TPU execution plan; numerically it provides f32-grade output
+    (the double-single 'dd' output path of crt_garner serves f64-grade).
+    """
+    if n_moduli is None:
+        n_moduli = default_n_moduli(jnp.float32, mode)
+    ctx, e_mu, e_nu, n_limbs, (ax, bx) = _prep(a, b, n_moduli, mode, False)
+    ares = _cast(ax, e_mu, 0, ctx, n_limbs, interpret)
+    bres = _cast(bx, e_nu, 1, ctx, n_limbs, interpret)
+    e_planes = [
+        int8_mod_gemm(ares[l], bres[l], p=int(ctx.moduli[l]), interpret=interpret)
+        for l in range(ctx.n)
+    ]
+    e_res = jnp.stack(e_planes, axis=0)
+    return crt_garner(e_res, e_mu, e_nu, ctx, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_moduli", "mode", "interpret")
+)
+def ozaki2_cgemm_kernels(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    n_moduli: int | None = None,
+    mode: str = "fast",
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Full kernel-path complex GEMM emulation (complex64 in/out) using the
+    fused-Karatsuba modular kernel (one launch per modulus)."""
+    if n_moduli is None:
+        n_moduli = default_n_moduli(jnp.complex64, mode)
+    ctx, e_mu, e_nu, n_limbs, (ar, ai, br, bi) = _prep(a, b, n_moduli, mode, True)
+    arr = _cast(ar, e_mu, 0, ctx, n_limbs, interpret)
+    ari = _cast(ai, e_mu, 0, ctx, n_limbs, interpret)
+    brr = _cast(br, e_nu, 1, ctx, n_limbs, interpret)
+    bri = _cast(bi, e_nu, 1, ctx, n_limbs, interpret)
+    er_planes, ei_planes = [], []
+    for l in range(ctx.n):
+        cr, ci = karatsuba_mod_gemm(
+            arr[l], ari[l], brr[l], bri[l], p=int(ctx.moduli[l]), interpret=interpret
+        )
+        er_planes.append(cr)
+        ei_planes.append(ci)
+    er = jnp.stack(er_planes, axis=0)
+    ei = jnp.stack(ei_planes, axis=0)
+    cr = crt_garner(er, e_mu, e_nu, ctx, interpret=interpret)
+    ci = crt_garner(ei, e_mu, e_nu, ctx, interpret=interpret)
+    return jax.lax.complex(cr, ci)

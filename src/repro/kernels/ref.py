@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets in tests).
+
+These reuse the validated `repro.core` reference pipeline so the kernels are
+checked against the same code that reproduces the paper's accuracy tables.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import crt
+from ..core.intmul import int8_matmul
+from ..core.moduli import CRTContext, make_crt_context
+from ..core.residues import (
+    residues_from_quantized,
+    sym_mod_int32,
+)
+
+
+def residue_cast_ref(
+    a: jnp.ndarray,
+    scale1: jnp.ndarray,
+    scale2: jnp.ndarray,
+    *,
+    moduli: tuple[int, ...],
+    n_limbs: int,
+    scale_axis: int = 0,
+) -> jnp.ndarray:
+    ctx = make_crt_context(len(moduli), moduli)
+    scale = (scale1 * scale2).astype(jnp.float64)
+    shape = [1, 1]
+    shape[scale_axis] = -1
+    aq = jnp.trunc(a.astype(jnp.float64) * scale.reshape(shape))
+    return residues_from_quantized(aq, ctx, n_limbs)
+
+
+def int8_mod_gemm_ref(a: jnp.ndarray, b: jnp.ndarray, *, p: int) -> jnp.ndarray:
+    d = int8_matmul(a, b)
+    return sym_mod_int32(d, p).astype(jnp.int8)
+
+
+def karatsuba_mod_gemm_ref(ar, ai, br, bi, *, p: int):
+    asum = sym_mod_int32(ar.astype(jnp.int32) + ai.astype(jnp.int32), p).astype(jnp.int8)
+    bsum = sym_mod_int32(br.astype(jnp.int32) + bi.astype(jnp.int32), p).astype(jnp.int8)
+    d = sym_mod_int32(int8_matmul(ar, br), p)
+    e = sym_mod_int32(int8_matmul(ai, bi), p)
+    f = sym_mod_int32(int8_matmul(asum, bsum), p)
+    cr = sym_mod_int32(d - e, p).astype(jnp.int8)
+    ci = sym_mod_int32(f - d - e, p).astype(jnp.int8)
+    return cr, ci
+
+
+def crt_garner_ref(
+    e_res: jnp.ndarray, e_mu: jnp.ndarray, e_nu: jnp.ndarray, ctx: CRTContext
+) -> jnp.ndarray:
+    """f64 reference of the Garner reconstruction + inverse scaling."""
+    hi, lo = crt.reconstruct_garner(e_res, ctx)
+    return crt.inverse_scale(hi, lo, e_mu, e_nu, jnp.float64)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True) -> jnp.ndarray:
+    """Naive softmax attention oracle. q: (B,S,H,D); k,v: (B,S,KV,D)."""
+    import math
+
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, d).astype(jnp.float32) / math.sqrt(d)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)

@@ -1,0 +1,424 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first
+# init).  The dry-run — and only the dry-run — builds the production mesh
+# with 512 placeholder host devices.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this prints/records:
+  * compiled.memory_analysis()  — proves the per-device working set,
+  * compiled.cost_analysis()    — per-device HLO FLOPs / bytes,
+  * the collective schedule     — bytes per collective kind parsed from the
+                                  partitioned HLO (all-gather / all-reduce /
+                                  reduce-scatter / all-to-all / permute),
+used by benchmarks/roofline.py to derive the three roofline terms
+(EXPERIMENTS.md SRoofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b \
+      --shape train_4k [--multi-pod] [--backend ozaki2_f32] [--seq-shard]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro  # noqa: F401  (enables x64 for the core library)
+from repro.configs import ARCHS, get_config
+from repro.configs.shapes import SHAPES, applicable, input_specs
+from repro.core.policy import GemmPolicy
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    pspec_for_axes,
+    tree_shardings,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model
+from repro.models.params import abstract_arrays
+from repro.optim import AdamWConfig
+from repro.train.step import make_train_step
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _line_result_bytes(line: str) -> int:
+    """Bytes of the op result type(s) on an HLO text line (LHS of '= ... op(')."""
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return 0
+    # result types appear between '=' and the op name
+    mloc = None
+    for c in _COLLECTIVES:
+        i = lhs[1].find(c + "(")
+        if i >= 0:
+            mloc = i
+            break
+    if mloc is None:
+        return 0
+    typestr = lhs[1][:mloc]
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(typestr):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    out = {c: 0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        if " = " not in line:
+            continue
+        for c in _COLLECTIVES:
+            if f" {c}(" in line or f"{c}-start(" in line or f" {c}(" in line:
+                b = _line_result_bytes(line)
+                if b:
+                    out[c] += b
+                    out["count"] += 1
+                break
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def _mem_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if ma is None:
+        return {"error": "unavailable on this backend"}
+    keys = (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    )
+    return {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+
+
+def _opt_abstract(params_abs, opt_cfg: AdamWConfig):
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    out = {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "m": jax.tree.map(f32, params_abs),
+        "v": jax.tree.map(f32, params_abs),
+    }
+    if opt_cfg.use_master:
+        out["master"] = jax.tree.map(f32, params_abs)
+    return out
+
+
+def build_cell(cfg, shape_name: str, mesh, grad_accum: int = 1, rules=None):
+    """Returns (jitted_fn, example_args) for one cell.
+
+    With mesh=None the cell is built unsharded (the flop-accounting path)."""
+    model = Model(cfg)
+    spec = SHAPES[shape_name]
+    rules = rules or DEFAULT_RULES
+    if spec.kind == "train":
+        opt_cfg = AdamWConfig()
+        step, shardings = make_train_step(
+            model, opt_cfg, mesh=mesh, grad_accum=grad_accum, donate=False,
+            rules=rules,
+        )
+        params_abs = abstract_arrays(model.abstract_params())
+        args = (params_abs, _opt_abstract(params_abs, opt_cfg), input_specs(cfg, shape_name))
+        return step, args
+    params_abs = abstract_arrays(model.abstract_params())
+    cache_abs_meta = model.cache_abstract(spec.global_batch, spec.seq_len)
+    cache_abs = abstract_arrays(cache_abs_meta)
+    if mesh is not None:
+        params_sh = tree_shardings(model.abstract_params(), rules, mesh)
+        cache_sh = tree_shardings(cache_abs_meta, rules, mesh)
+
+        def _batch_leaf(sds):
+            axes = ("batch",) + (None,) * (len(sds.shape) - 1)
+            spec = pspec_for_axes(axes, rules, mesh, sds.shape)
+            return NamedSharding(mesh, spec)
+
+        batch_sh = jax.tree.map(_batch_leaf, input_specs(cfg, shape_name))
+    if spec.kind == "prefill":
+        fn = (
+            jax.jit(model.prefill, in_shardings=(params_sh, batch_sh, cache_sh))
+            if mesh is not None
+            else jax.jit(model.prefill)
+        )
+        return fn, (params_abs, input_specs(cfg, shape_name), cache_abs)
+    # decode
+    fn = (
+        jax.jit(
+            model.decode_step,
+            in_shardings=(
+                params_sh,
+                batch_sh["tokens"],
+                cache_sh,
+                NamedSharding(mesh, P()),
+            ),
+        )
+        if mesh is not None
+        else jax.jit(model.decode_step)
+    )
+    tok = input_specs(cfg, shape_name)["tokens"]
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return fn, (params_abs, tok, cache_abs, pos)
+
+
+def _unrolled_cost(cfg, shape_name: str, n_devices: int) -> dict:
+    """Lower (no compile, no mesh) a scan-unrolled variant of the cell and
+    read its cost analysis: XLA counts while-loop bodies ONCE, so the scanned
+    production module under-reports flops by ~n_layers. The unrolled module
+    gives the true totals; per-device = total / n_devices."""
+    # NOTE: moe_group_size keeps its production value — GShard dispatch cost
+    # scales quadratically with group size, so a single giant group would
+    # inflate the count.  The group scan is then counted once per layer,
+    # i.e. ~1 group/device of MoE work (2 groups/device on the single pod) —
+    # a conservative, documented approximation (EXPERIMENTS.md SDry-run).
+    cost_cfg = dataclasses.replace(
+        cfg,
+        scan_unroll=True,
+        remat=False,
+        kv_chunk=2**30,
+        # sharding constraints need a mesh; the cost lowering is unpartitioned
+        act_pspec=None,
+        embed_pspec=None,
+        moe_dispatch_pspec=None,
+    )
+    try:
+        fn, args = build_cell(cost_cfg, shape_name, mesh=None, grad_accum=1)
+        lowered = fn.lower(*args)
+        cost = lowered.cost_analysis() or {}
+        return {
+            "flops_total": float(cost.get("flops", 0.0)),
+            "flops_per_device": float(cost.get("flops", 0.0)) / n_devices,
+            "bytes_total_unopt": float(cost.get("bytes accessed", 0.0)),
+        }
+    except Exception as e:  # pragma: no cover
+        return {"error": f"{type(e).__name__}: {e}"}
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    backend: str = "native",
+    seq_shard: bool = False,
+    grad_accum: int = 1,
+    vocab_chunk: int | None = None,
+    moe_shard_tokens: bool = False,
+    zero3: bool = False,
+    kv_chunk: int | None = None,
+    moe_group: int | None = None,
+    out_dir: str | None = None,
+    verbose: bool = True,
+):
+    cfg = get_config(arch)
+    ok, why = applicable(cfg, shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}"
+    if backend != "native":
+        cell_id += f"__{backend}"
+    if seq_shard:
+        cell_id += "__sp"
+    if grad_accum > 1:
+        cell_id += f"__ga{grad_accum}"
+    if vocab_chunk:
+        cell_id += f"__vc{vocab_chunk}"
+    if moe_shard_tokens:
+        cell_id += "__moest"
+    if zero3:
+        cell_id += "__zero3"
+    if kv_chunk:
+        cell_id += f"__kv{kv_chunk}"
+    if moe_group:
+        cell_id += f"__mg{moe_group}"
+    if not ok:
+        rec = {"cell": cell_id, "status": "skipped", "reason": why}
+        _emit(rec, out_dir, verbose)
+        return rec
+
+    overrides = {}
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    if backend != "native":
+        overrides["gemm_policy"] = GemmPolicy(backend=backend)
+        overrides["embed_pspec"] = (batch_axes, None, None)
+    if seq_shard:
+        overrides["act_pspec"] = (batch_axes, "model", None)
+    if vocab_chunk:
+        overrides["loss_vocab_chunk"] = vocab_chunk
+    if moe_shard_tokens:
+        overrides["moe_dispatch_pspec"] = (
+            (("pod", "data"),) if multi_pod else (("data",),)
+        )
+    if kv_chunk:
+        overrides["kv_chunk"] = kv_chunk
+    if moe_group:
+        overrides["moe_group_size"] = moe_group
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+
+    rules = dict(DEFAULT_RULES)
+    if zero3:
+        # ZeRO-3-style parameter storage: the d_model ('embed') axis of every
+        # weight additionally shards over 'data'; XLA gathers layer weights
+        # on the fly inside the scan (SPerf hillclimb 1, iteration 4).
+        rules["embed"] = "data"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        fn, args = build_cell(cfg, shape_name, mesh, grad_accum, rules=rules)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        cost = compiled.cost_analysis() or {}
+        mem = _mem_analysis_dict(compiled)
+        try:
+            hlo = compiled.as_text()
+        except Exception:
+            hlo = lowered.as_text()
+        coll = collective_bytes(hlo)
+    n_dev = 512 if multi_pod else 256
+    unrolled = _unrolled_cost(cfg, shape_name, n_dev)
+    # loop-body correction: scale compiled per-device bytes & collective bytes
+    # by the (unrolled / compiled) flops ratio (EXPERIMENTS.md SDry-run).
+    scale = 1.0
+    if unrolled.get("flops_per_device") and float(cost.get("flops", 0)) > 0:
+        scale = max(1.0, unrolled["flops_per_device"] / float(cost["flops"]))
+    rec = {
+        "cell": cell_id,
+        "status": "ok",
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": [2, 16, 16] if multi_pod else [16, 16],
+        "backend": backend,
+        "seq_shard": seq_shard,
+        "grad_accum": grad_accum,
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "unrolled": unrolled,
+        "loop_scale": scale,
+        "flops_per_device_corrected": unrolled.get(
+            "flops_per_device", float(cost.get("flops", 0.0))
+        ),
+        "bytes_per_device_corrected": float(cost.get("bytes accessed", 0.0)) * scale,
+        "cost_analysis": {
+            k: float(v)
+            for k, v in cost.items()
+            if isinstance(v, (int, float)) and k in (
+                "flops", "bytes accessed", "transcendentals",
+                "utilization operand 0 {}", "optimal_seconds")
+        },
+        "memory_analysis": mem,
+        "collectives": coll,
+        "collective_bytes_corrected": coll["total"] * scale,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+    }
+    _emit(rec, out_dir, verbose)
+    return rec
+
+
+def _emit(rec: dict, out_dir: str | None, verbose: bool):
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, rec["cell"] + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    if verbose:
+        if rec["status"] == "skipped":
+            print(f"[skip] {rec['cell']}: {rec['reason']}")
+            return
+        mem = rec["memory_analysis"]
+        memstr = (
+            f"args={mem.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+            f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+            f"out={mem.get('output_size_in_bytes', 0)/2**30:.2f}GiB"
+            if "error" not in mem
+            else f"mem: {mem['error']}"
+        )
+        c = rec["collectives"]
+        print(
+            f"[ok]   {rec['cell']}: flops/dev={rec['flops_per_device']:.3e} "
+            f"bytes/dev={rec['bytes_per_device']:.3e} {memstr} "
+            f"coll={c['total']/2**20:.1f}MiB({c['count']} ops: "
+            f"ag={c['all-gather']/2**20:.0f} ar={c['all-reduce']/2**20:.0f} "
+            f"rs={c['reduce-scatter']/2**20:.0f} a2a={c['all-to-all']/2**20:.0f} "
+            f"cp={c['collective-permute']/2**20:.0f}) "
+            f"compile={rec['compile_s']:.0f}s"
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--backend", default="native",
+                    choices=["native", "ozaki2_f32", "ozaki2_f64"])
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--all", action="store_true", help="sweep every cell")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+    if args.all:
+        failures = []
+        for arch in ARCHS:
+            for shape in SHAPES:
+                for mp in meshes:
+                    try:
+                        run_cell(arch, shape, mp, out_dir=args.out)
+                    except Exception as e:  # keep sweeping; record the bug
+                        failures.append((arch, shape, mp, f"{type(e).__name__}: {e}"))
+                        print(f"[FAIL] {arch}/{shape}/mp={mp}: {type(e).__name__}: {e}")
+        print(f"sweep done, {len(failures)} failures")
+        for f in failures:
+            print("  FAIL:", f)
+        return
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required unless --all")
+    for mp in meshes:
+        run_cell(
+            args.arch,
+            args.shape,
+            mp,
+            backend=args.backend,
+            seq_shard=args.seq_shard,
+            grad_accum=args.grad_accum,
+            out_dir=args.out,
+        )
+
+
+if __name__ == "__main__":
+    main()

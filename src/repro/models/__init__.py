@@ -1,0 +1,5 @@
+"""Model substrate: configs, blocks, and the assembled decoder Model."""
+from .config import ModelConfig
+from .transformer import Model
+
+__all__ = ["Model", "ModelConfig"]

@@ -1,0 +1,496 @@
+"""Per-layer blocks: GQA attention, Mamba2 SSD, RG-LRU, MoE MLP.
+
+Uniform interface per block kind:
+  abstract(cfg)                      -> ParamMeta tree
+  apply(cfg, p, x, positions)        -> y                     (full sequence)
+  cache_abstract(cfg, b, cache_len)  -> ParamMeta tree        (decode cache)
+  prefill(cfg, p, x, positions, cache) -> (y, cache)
+  decode(cfg, p, x, cache, pos)      -> (y, cache)            (x: (B, 1, d))
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (
+    AttnSpec,
+    apply_linear,
+    apply_mlp,
+    apply_rope,
+    attention,
+    linear_abstract,
+    mlp_abstract,
+)
+from .params import ParamMeta
+
+_NEG_POS = jnp.int32(2**30)  # sentinel "future" position for empty cache slots
+
+
+# =================================================================== attention
+
+
+def attn_abstract(cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.dtype
+    return {
+        "q": linear_abstract(d, h * hd, ("embed", "qkv"), dt, cfg.qkv_bias),
+        "k": linear_abstract(d, kv * hd, ("embed", "kv_qkv"), dt, cfg.qkv_bias),
+        "v": linear_abstract(d, kv * hd, ("embed", "kv_qkv"), dt, cfg.qkv_bias),
+        "o": linear_abstract(h * hd, d, ("qkv", "embed"), dt),
+    }
+
+
+def _qkv(cfg: ModelConfig, p, x, positions):
+    b, s, _ = x.shape
+    q = apply_linear(p["q"], x, cfg.gemm_policy).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = apply_linear(p["k"], x, cfg.gemm_policy).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = apply_linear(p["v"], x, cfg.gemm_policy).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_pct, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_pct, cfg.rope_theta)
+    return q, k, v
+
+
+def _spec(cfg: ModelConfig, kv_chunk=None) -> AttnSpec:
+    return AttnSpec(
+        causal=True,
+        window=cfg.window,
+        softcap=cfg.attn_logit_softcap,
+        kv_chunk=kv_chunk if kv_chunk is not None else cfg.kv_chunk,
+    )
+
+
+def attn_apply(cfg: ModelConfig, p, x, positions):
+    q, k, v = _qkv(cfg, p, x, positions)
+    pos1 = positions[0] if positions.ndim > 1 else positions
+    out = attention(q, k, v, _spec(cfg), pos1, pos1)
+    b, s, _, _ = q.shape
+    return apply_linear(p["o"], out.reshape(b, s, -1), cfg.gemm_policy)
+
+
+def attn_cache_len(cfg: ModelConfig, max_len: int) -> int:
+    # windowed layers only ever need `window` slots (ring buffer) — this is
+    # what makes long_500k decoding feasible for recurrentgemma.
+    return min(max_len, cfg.window) if cfg.window else max_len
+
+
+def attn_cache_abstract(cfg: ModelConfig, b: int, cache_len: int) -> dict:
+    c = attn_cache_len(cfg, cache_len)
+    kvshape = (b, c, cfg.n_kv_heads, cfg.head_dim)
+    axes = ("batch", "kv_seq", "kv_heads", None)
+    return {
+        "k": ParamMeta(kvshape, axes, cfg.dtype, "zeros"),
+        "v": ParamMeta(kvshape, axes, cfg.dtype, "zeros"),
+        "pos": ParamMeta((c,), (None,), jnp.int32, "future_pos"),
+    }
+
+
+def attn_prefill(cfg: ModelConfig, p, x, positions, cache):
+    q, k, v = _qkv(cfg, p, x, positions)
+    pos1 = positions[0] if positions.ndim > 1 else positions
+    out = attention(q, k, v, _spec(cfg), pos1, pos1)
+    b, s, _, _ = q.shape
+    c = cache["k"].shape[1]
+    if s >= c:  # keep the last c tokens, slot = pos % c (ring layout)
+        ktail, vtail, ptail = k[:, -c:], v[:, -c:], pos1[-c:]
+        slot = ptail % c
+        new_k = jnp.zeros_like(cache["k"]).at[:, slot].set(ktail)
+        new_v = jnp.zeros_like(cache["v"]).at[:, slot].set(vtail)
+        new_pos = (jnp.zeros_like(cache["pos"]) + _NEG_POS).at[slot].set(ptail)
+    else:
+        slot = pos1 % c
+        new_k = cache["k"].at[:, slot].set(k)
+        new_v = cache["v"].at[:, slot].set(v)
+        new_pos = cache["pos"].at[slot].set(pos1)
+    cache = {"k": new_k, "v": new_v, "pos": new_pos}
+    y = apply_linear(p["o"], out.reshape(b, s, -1), cfg.gemm_policy)
+    return y, cache
+
+
+def attn_decode(cfg: ModelConfig, p, x, cache, pos):
+    b = x.shape[0]
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k, v = _qkv(cfg, p, x, positions)
+    c = cache["k"].shape[1]
+    slot = (pos % c).astype(jnp.int32)
+    zero = jnp.int32(0)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (zero, slot, zero, zero))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (zero, slot, zero, zero))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"], positions, (slot,))
+    out = attention(
+        q, ck, cv, _spec(cfg, kv_chunk=c), positions, cpos, kv_valid=cpos <= pos
+    )
+    y = apply_linear(p["o"], out.reshape(b, 1, -1), cfg.gemm_policy)
+    return y, {"k": ck, "v": cv, "pos": cpos}
+
+
+# =================================================================== mamba2 SSD
+
+
+def ssd_abstract(cfg: ModelConfig) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_ch = di + 2 * gn
+    dt = cfg.dtype
+    return {
+        "in_proj": linear_abstract(d, 2 * di + 2 * gn + h, ("embed", "ssm_inner"), dt),
+        "conv_w": ParamMeta((cfg.conv_width, conv_ch), (None, "ssm_inner"), dt),
+        "conv_b": ParamMeta((conv_ch,), ("ssm_inner",), dt, "zeros"),
+        "dt_bias": ParamMeta((h,), (None,), jnp.float32, "zeros"),
+        "a_log": ParamMeta((h,), (None,), jnp.float32, "zeros"),
+        "d_skip": ParamMeta((h,), (None,), jnp.float32, "ones"),
+        "norm": ParamMeta((di,), ("ssm_inner",), dt, "ones"),
+        "out_proj": linear_abstract(di, d, ("ssm_inner", "embed"), dt),
+    }
+
+
+def _segsum(x):
+    """(..., Q) -> (..., Q, Q): sum_{k=j+1..i} x_k for i >= j else -inf."""
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    q = x.shape[-1]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_scan(xbar, a_dt, bmat, cmat, init_state=None, chunk=128):
+    """Chunked state-space-duality scan (Mamba-2, alg. 'SSD').
+
+    xbar: (B,S,H,P) dt-weighted inputs; a_dt: (B,S,H) log-decays;
+    bmat/cmat: (B,S,N) (single group).  Returns y (B,S,H,P), final_state
+    (B,H,P,N).  All f32.
+    """
+    b, s, h, p = xbar.shape
+    n = bmat.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    xc = xbar.reshape(b, nc, chunk, h, p)
+    ac = a_dt.reshape(b, nc, chunk, h)
+    bc = bmat.reshape(b, nc, chunk, n)
+    cc = cmat.reshape(b, nc, chunk, n)
+
+    acs = jnp.cumsum(ac, axis=2)  # (B,Nc,Q,H) inclusive
+    # intra-chunk (diagonal blocks)
+    l_mat = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))  # (B,Nc,H,Q,Q)
+    g_mat = jnp.einsum("bcin,bcjn->bcij", cc, bc)
+    y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp", g_mat, l_mat, xc)
+    # per-chunk end states
+    decay_states = jnp.exp(acs[:, :, -1:, :] - acs)  # (B,Nc,Q,H)
+    states = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", decay_states, bc, xc)
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(acs[:, :, -1, :])  # (B,Nc,H)
+
+    def body(carry, xs):
+        st, gamma = xs
+        new = carry * gamma[:, :, None, None] + st
+        return new, carry  # emit state *before* this chunk
+
+    init = (
+        jnp.zeros((b, h, p, n), xbar.dtype) if init_state is None else init_state
+    )
+    final_state, prev_states = jax.lax.scan(
+        body, init, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1))
+    )
+    prev_states = prev_states.swapaxes(0, 1)  # (B,Nc,H,P,N)
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", cc, prev_states, jnp.exp(acs))
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+def _causal_conv(x, w, b, carry=None):
+    """Depthwise causal conv along seq. x: (B,S,C); w: (W,C). carry: (B,W-1,C)."""
+    width = w.shape[0]
+    pad = (
+        jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+        if carry is None
+        else carry
+    )
+    xp = jnp.concatenate([pad, x], axis=1).astype(jnp.float32)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i].astype(jnp.float32) for i in range(width)
+    )
+    new_carry = xp[:, -(width - 1) :].astype(x.dtype) if width > 1 else pad
+    return (out + b.astype(jnp.float32)).astype(x.dtype), new_carry
+
+
+def _ssd_inner(cfg: ModelConfig, p, x, conv_carry, state, chunk=128):
+    b, s, _ = x.shape
+    di, gn, h = cfg.d_inner, cfg.ssm_ngroups * cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = apply_linear(p["in_proj"], x, cfg.gemm_policy)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * gn], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_carry)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32))
+    xin, bmat, cmat = jnp.split(xbc, [di, di + gn], axis=-1)
+    n = cfg.ssm_state
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"])  # (H,)
+    xh = xin.reshape(b, s, h, cfg.ssm_headdim)
+    y, final_state = ssd_scan(
+        xh * dt[..., None], dt * a, bmat[..., :n], cmat[..., :n], state, chunk
+    )
+    y = y + p["d_skip"][:, None] * xh
+    y = y.reshape(b, s, di)
+    # gated RMSNorm (mamba2): norm(y * silu(z)) * scale
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-6)
+    y = (y * p["norm"].astype(jnp.float32)).astype(x.dtype)
+    return apply_linear(p["out_proj"], y, cfg.gemm_policy), new_conv, final_state
+
+
+def ssd_apply(cfg: ModelConfig, p, x, positions):
+    y, _, _ = _ssd_inner(cfg, p, x, None, None)
+    return y
+
+
+def ssd_cache_abstract(cfg: ModelConfig, b: int, cache_len: int) -> dict:
+    di, gn = cfg.d_inner, cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "conv": ParamMeta(
+            (b, cfg.conv_width - 1, di + 2 * gn), ("batch", None, "ssm_inner"),
+            cfg.dtype, "zeros",
+        ),
+        "state": ParamMeta(
+            (b, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+            ("batch", None, None, None), jnp.float32, "zeros",
+        ),
+    }
+
+
+def ssd_prefill(cfg: ModelConfig, p, x, positions, cache):
+    y, conv, state = _ssd_inner(cfg, p, x, cache["conv"] * 0, cache["state"] * 0)
+    return y, {"conv": conv, "state": state}
+
+
+def ssd_decode(cfg: ModelConfig, p, x, cache, pos):
+    b = x.shape[0]
+    di, gn, h, n = (
+        cfg.d_inner,
+        cfg.ssm_ngroups * cfg.ssm_state,
+        cfg.ssm_heads,
+        cfg.ssm_state,
+    )
+    zxbcdt = apply_linear(p["in_proj"], x, cfg.gemm_policy)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * gn], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], cache["conv"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32))[:, 0]  # (B, C)
+    xin, bmat, cmat = jnp.split(xbc, [di, di + gn], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)[:, 0] + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a)  # (B,H)
+    xh = xin.reshape(b, h, cfg.ssm_headdim)
+    state = cache["state"] * da[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, bmat[..., :n]
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, cmat[..., :n])
+    y = y + p["d_skip"][:, None] * xh
+    y = y.reshape(b, 1, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-6)
+    y = (y * p["norm"].astype(jnp.float32)).astype(x.dtype)
+    return apply_linear(p["out_proj"], y, cfg.gemm_policy), {
+        "conv": new_conv,
+        "state": state,
+    }
+
+
+# =================================================================== rg-lru
+
+
+def rglru_abstract(cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    dt = cfg.dtype
+    return {
+        "in_x": linear_abstract(d, w, ("embed", "ssm_inner"), dt),
+        "in_gate": linear_abstract(d, w, ("embed", "ssm_inner"), dt),
+        "conv_w": ParamMeta((cfg.conv_width, w), (None, "ssm_inner"), dt),
+        "conv_b": ParamMeta((w,), ("ssm_inner",), dt, "zeros"),
+        "w_a": linear_abstract(w, w, ("ssm_inner", None), dt),
+        "w_x": linear_abstract(w, w, ("ssm_inner", None), dt),
+        "lam": ParamMeta((w,), (None,), jnp.float32, "ones"),
+        "out": linear_abstract(w, d, ("ssm_inner", "embed"), dt),
+    }
+
+
+_LRU_C = 8.0
+
+
+def _rglru_gates(cfg, p, xc):
+    r = jax.nn.sigmoid(apply_linear(p["w_a"], xc, cfg.gemm_policy).astype(jnp.float32))
+    i = jax.nn.sigmoid(apply_linear(p["w_x"], xc, cfg.gemm_policy).astype(jnp.float32))
+    # log a_t = -c * r_t * softplus(lam)  (a = sigmoid(lam)^(c r) in griffin)
+    log_a = -_LRU_C * r * jax.nn.softplus(p["lam"])
+    a = jnp.exp(log_a)
+    gated_x = i * xc.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+    return a, b
+
+
+def _rglru_apply_seq(cfg, p, xc, h0=None):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t via associative scan."""
+    a, b = _rglru_gates(cfg, p, xc)  # (B,S,W) each
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h  # (B,S,W) f32
+
+
+def rglru_apply(cfg: ModelConfig, p, x, positions):
+    gate = jax.nn.gelu(
+        apply_linear(p["in_gate"], x, cfg.gemm_policy).astype(jnp.float32)
+    )
+    xb = apply_linear(p["in_x"], x, cfg.gemm_policy)
+    xc, _ = _causal_conv(xb, p["conv_w"], p["conv_b"])
+    h = _rglru_apply_seq(cfg, p, xc)
+    y = (h * gate).astype(x.dtype)
+    return apply_linear(p["out"], y, cfg.gemm_policy)
+
+
+def rglru_cache_abstract(cfg: ModelConfig, b: int, cache_len: int) -> dict:
+    w = cfg.lru_width
+    return {
+        "conv": ParamMeta(
+            (b, cfg.conv_width - 1, w), ("batch", None, "ssm_inner"), cfg.dtype, "zeros"
+        ),
+        "h": ParamMeta((b, w), ("batch", "ssm_inner"), jnp.float32, "zeros"),
+    }
+
+
+def rglru_prefill(cfg: ModelConfig, p, x, positions, cache):
+    gate = jax.nn.gelu(
+        apply_linear(p["in_gate"], x, cfg.gemm_policy).astype(jnp.float32)
+    )
+    xb = apply_linear(p["in_x"], x, cfg.gemm_policy)
+    xc, conv = _causal_conv(xb, p["conv_w"], p["conv_b"], cache["conv"] * 0)
+    h = _rglru_apply_seq(cfg, p, xc)
+    y = (h * gate).astype(x.dtype)
+    out = apply_linear(p["out"], y, cfg.gemm_policy)
+    return out, {"conv": conv, "h": h[:, -1]}
+
+
+def rglru_decode(cfg: ModelConfig, p, x, cache, pos):
+    gate = jax.nn.gelu(
+        apply_linear(p["in_gate"], x, cfg.gemm_policy).astype(jnp.float32)
+    )
+    xb = apply_linear(p["in_x"], x, cfg.gemm_policy)
+    xc, conv = _causal_conv(xb, p["conv_w"], p["conv_b"], cache["conv"])
+    a, b = _rglru_gates(cfg, p, xc[:, 0])
+    h = a * cache["h"] + b
+    y = (h[:, None] * gate).astype(x.dtype)
+    out = apply_linear(p["out"], y, cfg.gemm_policy)
+    return out, {"conv": conv, "h": h}
+
+
+# =================================================================== moe
+
+
+def moe_abstract(cfg: ModelConfig) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    dt = cfg.dtype
+    out = {
+        "router": ParamMeta((d, e), ("embed", "experts"), jnp.float32),
+        "gate": ParamMeta((e, d, ff), ("experts", "embed", "ff"), dt),
+        "up": ParamMeta((e, d, ff), ("experts", "embed", "ff"), dt),
+        "down": ParamMeta((e, ff, d), ("experts", "ff", "embed"), dt),
+    }
+    if cfg.moe_shared:
+        out["shared"] = mlp_abstract("swiglu", d, ff * cfg.moe_shared, dt)
+    return out
+
+
+def _moe_group(cfg: ModelConfig, p, xg):
+    """GShard-style top-k dispatch for one token group. xg: (T, d)."""
+    t, d = xg.shape
+    e, k = cfg.moe_experts, cfg.moe_topk
+    cap = max(k, int(math.ceil(cfg.moe_capacity_factor * t * k / e)))
+    logits = (xg.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    topv, topi = jax.lax.top_k(probs, k)  # (T, K)
+    topv = topv / jnp.maximum(jnp.sum(topv, axis=-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.float32)  # (T, K, E)
+    # slot position of each (token, k) inside its expert queue
+    pos_in_e = jnp.cumsum(onehot.reshape(t * k, e), axis=0).reshape(t, k, e) - 1.0
+    slot_idx = jnp.sum(pos_in_e * onehot, axis=-1)  # (T, K)
+    # one_hot of indices >= cap is all-zero => capacity overflow tokens drop
+    oh_slot = jax.nn.one_hot(slot_idx.astype(jnp.int32), cap, dtype=jnp.float32)
+    # batched per-token (K,E)^T @ (K,C): no (T,K,E,C) intermediate
+    combine = jnp.einsum("tke,tkc->tec", onehot * topv[..., None], oh_slot)
+    dispatch = (combine > 0).astype(cfg.dtype)  # (T, E, C)
+    xe = jnp.einsum("td,tec->ecd", xg.astype(cfg.dtype), dispatch)  # (E, C, d)
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["gate"]).astype(jnp.float32))
+    up = jnp.einsum("ecd,edf->ecf", xe, p["up"]).astype(jnp.float32)
+    ye = jnp.einsum("ecf,efd->ecd", (gate * up).astype(cfg.dtype), p["down"])
+    out = jnp.einsum("ecd,tec->td", ye.astype(jnp.float32), combine)
+    # load-balance aux loss (Switch): E * mean(frac_tokens * mean_prob)
+    frac = jnp.mean(onehot[:, 0, :], axis=0)
+    aux = e * jnp.sum(frac * jnp.mean(probs, axis=0))
+    return out.astype(xg.dtype), aux
+
+
+def moe_apply(cfg: ModelConfig, p, x, group_size: int | None = None):
+    b, s, d = x.shape
+    tokens = x.reshape(-1, d)
+    t = tokens.shape[0]
+    group_size = group_size or cfg.moe_group_size
+    g = max(1, t // min(group_size, t))
+    if t % g:
+        g = 1
+    grouped = tokens.reshape(g, t // g, d)
+
+    if cfg.moe_dispatch_pspec is not None:
+        # EP layout (SPerf): groups batched + sharded over the data axes, so
+        # top-k dispatch is data-local; only the expert combine crosses the
+        # 'model' (expert) axis.  The sequential scan below would otherwise
+        # process one (single-shard) group at a time.
+        from jax.sharding import PartitionSpec as P
+
+        gspec = P(cfg.moe_dispatch_pspec[0], None, None)
+        grouped = jax.lax.with_sharding_constraint(grouped, gspec)
+        ys, auxs = jax.vmap(lambda xg: _moe_group(cfg, p, xg))(grouped)
+        ys = jax.lax.with_sharding_constraint(ys, gspec)
+        y = ys.reshape(b, s, d)
+    else:
+        def body(_, xg):
+            yg, aux = _moe_group(cfg, p, xg)
+            return None, (yg, aux)
+
+        _, (ys, auxs) = jax.lax.scan(body, None, grouped)
+        y = ys.reshape(b, s, d)
+    if cfg.moe_shared:
+        y = y + apply_mlp("swiglu", p["shared"], x, cfg.gemm_policy)
+    return y, jnp.mean(auxs)
+
+
+BLOCKS = {
+    "attn": {
+        "abstract": attn_abstract,
+        "apply": attn_apply,
+        "cache": attn_cache_abstract,
+        "prefill": attn_prefill,
+        "decode": attn_decode,
+    },
+    "ssd": {
+        "abstract": ssd_abstract,
+        "apply": ssd_apply,
+        "cache": ssd_cache_abstract,
+        "prefill": ssd_prefill,
+        "decode": ssd_decode,
+    },
+    "rglru": {
+        "abstract": rglru_abstract,
+        "apply": rglru_apply,
+        "cache": rglru_cache_abstract,
+        "prefill": rglru_prefill,
+        "decode": rglru_decode,
+    },
+}

@@ -1,0 +1,204 @@
+"""Shared neural-net building blocks (pure JAX, pytree params).
+
+All matmuls route through `repro.core.policy.policy_matmul`, so any layer can
+run on the Ozaki-II emulated GEMM backend (the paper's technique as a
+first-class framework feature).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..core.policy import GemmPolicy, policy_matmul
+from .params import ParamMeta
+
+# ---------------------------------------------------------------- norms
+
+
+def norm_abstract(kind: str, d: int, dtype) -> dict:
+    out = {"scale": ParamMeta((d,), ("embed",), dtype, "ones")}
+    if kind == "layernorm":
+        out["bias"] = ParamMeta((d,), ("embed",), dtype, "zeros")
+    return out
+
+
+def apply_norm(kind: str, p: dict, x: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (xf * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mean) ** 2, axis=-1, keepdims=True)
+    xf = (xf - mean) * jax.lax.rsqrt(var + eps)
+    out = xf * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- linear
+
+
+def linear_abstract(d_in, d_out, axes, dtype, bias=False, scale=None) -> dict:
+    out = {"w": ParamMeta((d_in, d_out), axes, dtype, "normal", scale)}
+    if bias:
+        out["b"] = ParamMeta((d_out,), (axes[1],), dtype, "zeros")
+    return out
+
+
+def apply_linear(p: dict, x: jnp.ndarray, policy: GemmPolicy) -> jnp.ndarray:
+    y = policy_matmul(x, p["w"], policy)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------- rope
+
+
+def rope_frequencies(head_dim: int, pct: float, theta: float) -> jnp.ndarray:
+    rot = int(head_dim * pct) // 2 * 2
+    return 1.0 / theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, pct: float, theta: float):
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    rot = int(d * pct) // 2 * 2
+    freqs = rope_frequencies(d, pct, theta)  # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = x[..., : rot // 2].astype(jnp.float32)
+    x2 = x[..., rot // 2 : rot].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([r1, r2], axis=-1).astype(x.dtype)
+    if rot < d:
+        out = jnp.concatenate([out, x[..., rot:]], axis=-1)
+    return out
+
+
+def sinusoidal_embedding(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------- attention
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    causal: bool = True
+    window: int | None = None
+    softcap: float | None = None
+    kv_chunk: int = 1024
+
+
+def _apply_logit_mods(logits, spec: AttnSpec, q_pos, kv_pos, kv_valid=None):
+    if spec.softcap:
+        logits = spec.softcap * jnp.tanh(logits / spec.softcap)
+    mask = jnp.ones(logits.shape[-2:], dtype=bool)
+    if spec.causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if spec.window is not None:
+        mask &= q_pos[:, None] - kv_pos[None, :] < spec.window
+    if kv_valid is not None:
+        mask &= kv_valid[None, :]
+    return jnp.where(mask, logits, -1e30)
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    spec: AttnSpec,
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,
+    kv_valid: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Blockwise (flash-semantics) GQA attention in pure JAX.
+
+    q: (B, Sq, H, D);  k, v: (B, Skv, KV, D);  H = KV * G.
+    Online-softmax scan over KV chunks keeps activations O(Sq * kv_chunk),
+    which is what makes the 32k-prefill shapes compile at scale.
+    """
+    b, sq, h, d = q.shape
+    _, skv, kv, _ = k.shape
+    g = h // kv
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, sq, kv, g, d).astype(jnp.float32) * scale
+
+    chunk = min(spec.kv_chunk, skv)
+    if skv % chunk:
+        chunk = skv  # fall back to one block for ragged sizes
+    nblk = skv // chunk
+    kc = k.reshape(b, nblk, chunk, kv, d)
+    vc = v.reshape(b, nblk, chunk, kv, d)
+    pc = kv_pos.reshape(nblk, chunk)
+    valc = None if kv_valid is None else kv_valid.reshape(nblk, chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        if valc is None:
+            kb, vb, pb = xs
+            vab = None
+        else:
+            kb, vb, pb, vab = xs
+        logits = jnp.einsum("bskgd,btkd->bkgst", qg, kb.astype(jnp.float32))
+        logits = _apply_logit_mods(logits, spec, q_pos, pb, vab)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kv, g, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, sq, d), jnp.float32)
+    xs = (
+        kc.swapaxes(0, 1),
+        vc.swapaxes(0, 1),
+        pc,
+    ) + (() if valc is None else (valc,))
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------- mlps
+
+
+def mlp_abstract(cfg_mlp: str, d: int, ff: int, dtype) -> dict:
+    if cfg_mlp in ("swiglu", "geglu"):
+        return {
+            "gate": linear_abstract(d, ff, ("embed", "ff"), dtype),
+            "up": linear_abstract(d, ff, ("embed", "ff"), dtype),
+            "down": linear_abstract(ff, d, ("ff", "embed"), dtype),
+        }
+    return {
+        "up": linear_abstract(d, ff, ("embed", "ff"), dtype),
+        "down": linear_abstract(ff, d, ("ff", "embed"), dtype),
+    }
+
+
+def apply_mlp(cfg_mlp: str, p: dict, x: jnp.ndarray, policy: GemmPolicy):
+    if cfg_mlp in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg_mlp == "swiglu" else jax.nn.gelu
+        g = act(apply_linear(p["gate"], x, policy))
+        u = apply_linear(p["up"], x, policy)
+        return apply_linear(p["down"], g * u, policy)
+    h = apply_linear(p["up"], x, policy)
+    if cfg_mlp == "gelu":
+        h = jax.nn.gelu(h)
+    elif cfg_mlp == "sq_relu":  # nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(f"unknown mlp {cfg_mlp!r}")
+    return apply_linear(p["down"], h, policy)

@@ -1,0 +1,324 @@
+"""Full decoder model: embedding -> scanned layer groups -> norm -> head.
+
+Supports all 10 assigned architecture families (dense / SSM / hybrid / MoE /
+VLM+audio backbones with stub frontends) through `ModelConfig`.
+
+Parameters of each homogeneous (block_kind, mlp_kind) group are stacked along
+a leading 'layers' axis and driven by `lax.scan` (MaxText-style) so the HLO
+stays compact for 64-layer models; `cfg.remat` wraps the scan body in
+jax.checkpoint for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import BLOCKS, moe_abstract, moe_apply
+from .config import ModelConfig
+from .layers import (
+    apply_mlp,
+    apply_norm,
+    mlp_abstract,
+    norm_abstract,
+    sinusoidal_embedding,
+)
+from .params import ParamMeta, abstract_arrays, materialize, stack_metas
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------ params
+
+    def _layer_abstract(self, block_kind: str, mlp_kind: str) -> dict:
+        cfg = self.cfg
+        out = {
+            "norm1": norm_abstract(cfg.norm, cfg.d_model, cfg.dtype),
+            "block": BLOCKS[block_kind]["abstract"](cfg),
+        }
+        if mlp_kind != "none":
+            out["norm2"] = norm_abstract(cfg.norm, cfg.d_model, cfg.dtype)
+            if mlp_kind == "moe":
+                out["mlp"] = moe_abstract(cfg)
+            elif mlp_kind == "dense_first":
+                out["mlp"] = mlp_abstract(
+                    cfg.mlp if cfg.mlp != "moe" else "swiglu",
+                    cfg.d_model,
+                    cfg.first_dense_ff,
+                    cfg.dtype,
+                )
+            else:
+                out["mlp"] = mlp_abstract(mlp_kind, cfg.d_model, cfg.d_ff, cfg.dtype)
+        return out
+
+    def abstract_params(self) -> dict:
+        cfg = self.cfg
+        out = {
+            "embed": ParamMeta(
+                (cfg.vocab, cfg.d_model),
+                ("vocab", "embed"),
+                cfg.dtype,
+                scale=cfg.d_model**-0.5,  # sane tied-head logits at init
+            ),
+            "groups": [
+                stack_metas(self._layer_abstract(bk, mk), cnt)
+                for bk, mk, cnt in cfg.layer_groups
+            ],
+            "final_norm": norm_abstract(cfg.norm, cfg.d_model, cfg.dtype),
+        }
+        if not cfg.tie_embeddings:
+            out["head"] = ParamMeta(
+                (cfg.d_model, cfg.vocab), ("embed", "vocab"), cfg.dtype
+            )
+        return out
+
+    def init(self, key: jax.Array) -> dict:
+        return materialize(self.abstract_params(), key)
+
+    def param_shapes(self) -> dict:
+        return abstract_arrays(self.abstract_params())
+
+    # ------------------------------------------------------------ embedding
+
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        h = jnp.take(params["embed"], tokens, axis=0)
+        spec = cfg.embed_pspec or (
+            (cfg.act_pspec[0], None, None) if cfg.act_pspec else None
+        )
+        if spec is not None:
+            from jax.sharding import PartitionSpec as P
+
+            h = jax.lax.with_sharding_constraint(h, P(*spec))
+        if cfg.frontend is not None and "prefix_embeds" in batch:
+            h = jnp.concatenate([batch["prefix_embeds"].astype(h.dtype), h], axis=1)
+        s = h.shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(h.shape[0], 0)
+        if cfg.pos == "sinusoidal":
+            h = h + sinusoidal_embedding(positions, cfg.d_model).astype(h.dtype)
+        return h, positions
+
+    def _head(self, params, h):
+        cfg = self.cfg
+        w = params["embed"].T if cfg.tie_embeddings else params["head"]
+        return (h.astype(jnp.float32) @ w.astype(jnp.float32)).astype(jnp.float32)
+
+    # ------------------------------------------------------------ forward
+
+    def _constrain(self, x):
+        # Megatron-style sequence parallelism on the inter-layer activations:
+        # the saved scan carry is sharded (batch x seq), cutting per-device
+        # activation memory n_model-fold (see EXPERIMENTS.md SPerf).
+        if self.cfg.act_pspec is not None:
+            from jax.sharding import PartitionSpec as P
+
+            x = jax.lax.with_sharding_constraint(x, P(*self.cfg.act_pspec))
+        return x
+
+    def _run_group(self, gp, bk, mk, x, positions):
+        cfg = self.cfg
+
+        def body(carry, lp):
+            x = self._constrain(carry)
+            hn = apply_norm(cfg.norm, lp["norm1"], x)
+            x = x + BLOCKS[bk]["apply"](cfg, lp["block"], hn, positions)
+            aux = jnp.zeros((), jnp.float32)
+            if mk != "none":
+                hn2 = apply_norm(cfg.norm, lp["norm2"], x)
+                if mk == "moe":
+                    y, aux = moe_apply(cfg, lp["mlp"], hn2)
+                elif mk == "dense_first":
+                    y = apply_mlp(
+                        cfg.mlp if cfg.mlp != "moe" else "swiglu",
+                        lp["mlp"],
+                        hn2,
+                        cfg.gemm_policy,
+                    )
+                else:
+                    y = apply_mlp(mk, lp["mlp"], hn2, cfg.gemm_policy)
+                x = x + y
+            return self._constrain(x), aux
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, auxs = jax.lax.scan(fn, x, gp, unroll=True if cfg.scan_unroll else 1)
+        return x, jnp.sum(auxs)
+
+    def backbone(self, params, batch):
+        """Pre-head hidden states. Returns (h, positions, aux_loss)."""
+        cfg = self.cfg
+        h, positions = self._embed_inputs(params, batch)
+        aux_total = jnp.zeros((), jnp.float32)
+        for gp, (bk, mk, _) in zip(params["groups"], cfg.layer_groups):
+            h, aux = self._run_group(gp, bk, mk, h, positions)
+            aux_total = aux_total + aux
+        h = apply_norm(cfg.norm, params["final_norm"], h)
+        return h, positions, aux_total
+
+    def forward(self, params, batch):
+        """Full-sequence logits (training). Returns (logits_f32, aux_loss)."""
+        h, _, aux_total = self.backbone(params, batch)
+        return self._head(params, h), aux_total
+
+    def _chunked_ce(self, params, h, targets, mask):
+        """Cross entropy over vocab slabs — never materializes the
+        (B, S, vocab) f32 logits (SPerf: memory-term optimization)."""
+        cfg = self.cfg
+        w = params["embed"].T if cfg.tie_embeddings else params["head"]
+        v = w.shape[-1]
+        chunk = min(cfg.loss_vocab_chunk, v)
+        n_chunks = -(-v // chunk)
+        pad = n_chunks * chunk - v
+        if pad:
+            w = jnp.pad(w, ((0, 0), (0, pad)))
+        wc = w.reshape(w.shape[0], n_chunks, chunk).transpose(1, 0, 2)
+
+        def body(carry, xs):
+            m, l, gold = carry
+            wi, i = xs
+            logits = (h.astype(jnp.float32) @ wi.astype(jnp.float32))
+            base = i * chunk
+            idx = jnp.arange(chunk, dtype=jnp.int32)[None, None, :] + base
+            logits = jnp.where(idx < v, logits, -1e30)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            l = l * jnp.exp(m - m_new) + jnp.sum(
+                jnp.exp(logits - m_new[..., None]), axis=-1
+            )
+            in_chunk = (targets >= base) & (targets < base + chunk)
+            g = jnp.take_along_axis(
+                logits, jnp.clip(targets - base, 0, chunk - 1)[..., None], axis=-1
+            )[..., 0]
+            gold = jnp.where(in_chunk, g, gold)
+            return (m_new, l, gold), None
+
+        b, s = targets.shape
+        init = (
+            jnp.full((b, s), -1e30, jnp.float32),
+            jnp.zeros((b, s), jnp.float32),
+            jnp.full((b, s), -1e30, jnp.float32),
+        )
+        body = jax.checkpoint(body)
+        (m, l, gold), _ = jax.lax.scan(
+            body, init, (wc, jnp.arange(n_chunks, dtype=jnp.int32)),
+            unroll=True if cfg.scan_unroll else 1,
+        )
+        logz = m + jnp.log(jnp.maximum(l, 1e-30))
+        ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return ce
+
+    def loss(self, params, batch):
+        """Next-token CE over the token region (prefix embeds excluded).
+
+        Targets keep the full sequence length (the final position is masked
+        instead of sliced away): odd-sized S-1 slices force uneven tiled
+        shardings under SP and crash the XLA scatter partitioner."""
+        cfg = self.cfg
+        n_prefix = (
+            batch["prefix_embeds"].shape[1]
+            if (cfg.frontend is not None and "prefix_embeds" in batch)
+            else 0
+        )
+        tokens = batch["tokens"]
+        targets = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1
+        )
+        mask = batch.get(
+            "loss_mask", jnp.ones_like(tokens, jnp.float32)
+        ).astype(jnp.float32)
+        mask = mask * jnp.concatenate(
+            [jnp.ones_like(tokens[:, 1:], jnp.float32),
+             jnp.zeros_like(tokens[:, :1], jnp.float32)], axis=1
+        )
+        if cfg.loss_vocab_chunk:
+            h, _, aux = self.backbone(params, batch)
+            h = h[:, n_prefix:, :]
+            ce = self._chunked_ce(params, h, targets, mask)
+        else:
+            logits, aux = self.forward(params, batch)
+            pred = logits[:, n_prefix:, :]
+            logz = jax.nn.logsumexp(pred, axis=-1)
+            gold = jnp.take_along_axis(pred, targets[..., None], axis=-1)[..., 0]
+            ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------ serving
+
+    def cache_abstract(self, batch_size: int, cache_len: int) -> list:
+        cfg = self.cfg
+        return [
+            stack_metas(
+                BLOCKS[bk]["cache"](cfg, batch_size, cache_len), cnt
+            )
+            for bk, mk, cnt in cfg.layer_groups
+        ]
+
+    def init_cache(self, batch_size: int, cache_len: int) -> list:
+        return materialize(
+            self.cache_abstract(batch_size, cache_len), jax.random.PRNGKey(0)
+        )
+
+    def prefill(self, params, batch, cache):
+        """Run the prompt, fill the cache; returns (last-position logits, cache)."""
+        cfg = self.cfg
+        h, positions = self._embed_inputs(params, batch)
+        new_caches = []
+        for gp, gc, (bk, mk, _) in zip(
+            params["groups"], cache, cfg.layer_groups
+        ):
+            def body(carry, xs, bk=bk, mk=mk):
+                x = carry
+                lp, lc = xs
+                hn = apply_norm(cfg.norm, lp["norm1"], x)
+                y, nc = BLOCKS[bk]["prefill"](cfg, lp["block"], hn, positions, lc)
+                x = x + y
+                x = self._apply_mlp_serve(lp, mk, x)
+                return x, nc
+
+            h, nc = jax.lax.scan(
+                body, h, (gp, gc), unroll=True if cfg.scan_unroll else 1
+            )
+            new_caches.append(nc)
+        h = apply_norm(cfg.norm, params["final_norm"], h)
+        return self._head(params, h[:, -1:, :]), new_caches
+
+    def decode_step(self, params, token, cache, pos):
+        """One decode step. token: (B, 1) int32; pos: scalar int32 position."""
+        cfg = self.cfg
+        h = jnp.take(params["embed"], token, axis=0)
+        if cfg.pos == "sinusoidal":
+            p1 = jnp.full((1, 1), pos, jnp.int32)
+            h = h + sinusoidal_embedding(p1, cfg.d_model).astype(h.dtype)
+        new_caches = []
+        for gp, gc, (bk, mk, _) in zip(params["groups"], cache, cfg.layer_groups):
+            def body(carry, xs, bk=bk, mk=mk):
+                x = carry
+                lp, lc = xs
+                hn = apply_norm(cfg.norm, lp["norm1"], x)
+                y, nc = BLOCKS[bk]["decode"](cfg, lp["block"], hn, lc, pos)
+                x = x + y
+                x = self._apply_mlp_serve(lp, mk, x)
+                return x, nc
+
+            h, nc = jax.lax.scan(
+                body, h, (gp, gc), unroll=True if cfg.scan_unroll else 1
+            )
+            new_caches.append(nc)
+        h = apply_norm(cfg.norm, params["final_norm"], h)
+        return self._head(params, h), new_caches
+
+    def _apply_mlp_serve(self, lp, mk, x):
+        cfg = self.cfg
+        if mk == "none":
+            return x
+        hn2 = apply_norm(cfg.norm, lp["norm2"], x)
+        if mk == "moe":
+            y, _ = moe_apply(cfg, lp["mlp"], hn2)
+        elif mk == "dense_first":
+            y = apply_mlp(
+                cfg.mlp if cfg.mlp != "moe" else "swiglu", lp["mlp"], hn2,
+                cfg.gemm_policy,
+            )
+        else:
+            y = apply_mlp(mk, lp["mlp"], hn2, cfg.gemm_policy)
+        return x + y

@@ -1,0 +1,4 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update
+from .schedules import cosine_warmup
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_warmup"]

@@ -1,0 +1,85 @@
+"""AdamW with decoupled weight decay and global-norm clipping (hand-rolled;
+the container has no optax).  Optimizer state (m, v, f32 master copy) is a
+pytree mirroring the params, so pjit shards it with the ZeRO-1 rules in
+`repro.distributed.sharding` (extra 'data'-axis sharding on the largest dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    use_master: bool = True  # keep f32 master weights for bf16 params
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    import numpy as np
+
+    # numpy-backed zeros: eager jnp constants of equal shape+dtype share a
+    # buffer, which breaks donation ("donate same buffer twice" at Execute).
+    zeros = lambda p: jnp.asarray(np.zeros(p.shape, np.float32))
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+    if cfg.use_master:
+        # jnp.array(copy=True): astype(f32) is a no-op alias for f32 params,
+        # and donating both params and master then trips XLA.
+        state["master"] = jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params
+        )
+    return state
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    masters = state.get("master", params)
+
+    def upd(p, g, m, v, w):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        w32 = w.astype(jnp.float32)
+        w32 = w32 - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * w32)
+        return w32.astype(p.dtype), m, v, w32
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_w = treedef.flatten_up_to(masters)
+    out = [upd(*args) for args in zip(flat_p, flat_g, flat_m, flat_v, flat_w)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_state = {
+        "step": step,
+        "m": treedef.unflatten([o[1] for o in out]),
+        "v": treedef.unflatten([o[2] for o in out]),
+    }
+    if cfg.use_master:
+        new_state["master"] = treedef.unflatten([o[3] for o in out])
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,55 @@
+"""Batched serving engine: jitted prefill + single-token decode steps.
+
+The decode step is the unit the `decode_*`/`long_*` dry-run shapes lower:
+one new token against a KV/state cache of the configured length.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import Model
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, cache_len: int, batch_size: int):
+        self.model = model
+        self.params = params
+        self.cache_len = cache_len
+        self.batch_size = batch_size
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+
+    def generate(
+        self,
+        batch: dict,
+        max_new_tokens: int,
+        temperature: float = 0.0,
+        key=None,
+    ):
+        """Greedy/temperature sampling; returns (B, max_new_tokens) tokens."""
+        cfg = self.model.cfg
+        cache = self.model.init_cache(self.batch_size, self.cache_len)
+        logits, cache = self._prefill(self.params, batch, cache)
+        npre = cfg.n_prefix_embeds if cfg.frontend else 0
+        pos = batch["tokens"].shape[1] + npre
+        out = []
+        tok = self._sample(logits[:, -1, :], temperature, key, 0)
+        for i in range(max_new_tokens):
+            out.append(tok)
+            logits, cache = self._decode(
+                self.params, tok, cache, jnp.int32(pos + i)
+            )
+            tok = self._sample(logits[:, -1, :], temperature, key, i + 1)
+        return jnp.concatenate(out, axis=1)
+
+    @functools.partial(jax.jit, static_argnums=(0, 2))
+    def _sample(self, logits, temperature, key, i):
+        if temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        k = jax.random.fold_in(key, i)
+        return jax.random.categorical(k, logits / temperature, axis=-1)[
+            :, None
+        ].astype(jnp.int32)

@@ -1,0 +1,4 @@
+from .step import TrainState, make_train_step
+from .loop import TrainLoopConfig, train_loop
+
+__all__ = ["TrainState", "TrainLoopConfig", "make_train_step", "train_loop"]

@@ -1,0 +1,122 @@
+"""The jitted training step: loss -> grads (with microbatch accumulation) ->
+AdamW, fully sharded via in/out shardings derived from the logical rules.
+
+`make_train_step(..., mesh=None)` also works on a single device (tests,
+examples); with a mesh it returns the pjit'd step plus the sharding trees
+used by the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..distributed.sharding import (
+    DEFAULT_RULES,
+    batch_sharding,
+    optimizer_spec,
+    tree_pspecs,
+    tree_shardings,
+)
+from ..models.transformer import Model
+from ..optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+
+    def tree(self):
+        return {"params": self.params, "opt": self.opt}
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: AdamWConfig,
+    schedule: Callable | None = None,
+    mesh: Mesh | None = None,
+    rules=None,
+    grad_accum: int = 1,
+    donate: bool = True,
+):
+    """Returns (train_step, shardings) — shardings is None off-mesh."""
+    rules = rules or DEFAULT_RULES
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def step_fn(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+        else:
+            # split the global batch into microbatches along the batch dim
+            def micro(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((grad_accum, -1) + x.shape[1:]), batch
+            )
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(micro, (zero, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+            metrics = {}
+        lr_scale = schedule(opt_state["step"]) if schedule else 1.0
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg, lr_scale
+        )
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    if mesh is None:
+        return jax.jit(step_fn, donate_argnums=(0, 1) if donate else ()), None
+
+    abstract = model.abstract_params()
+    pspecs = tree_pspecs(abstract, rules, mesh)
+    param_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs, is_leaf=lambda x: isinstance(x, P)
+    )
+    from ..distributed.sharding import pspec_for_meta
+    from ..models.params import _map_like
+
+    opt_leaf_sh = _map_like(
+        abstract,
+        lambda _, m: NamedSharding(
+            mesh, optimizer_spec(pspec_for_meta(m, rules, mesh), m.shape, mesh)
+        ),
+    )
+    opt_sh = {
+        "step": NamedSharding(mesh, P()),
+        "m": opt_leaf_sh,
+        "v": opt_leaf_sh,
+    }
+    if opt_cfg.use_master:
+        opt_sh["master"] = opt_leaf_sh
+    batch_sh = batch_sharding(mesh, rules)
+    metrics_sh = NamedSharding(mesh, P())
+    step = jax.jit(
+        step_fn,
+        in_shardings=(param_sh, opt_sh, batch_sh),
+        out_shardings=(param_sh, opt_sh, metrics_sh),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return step, {"params": param_sh, "opt": opt_sh, "batch": batch_sh}
+
+
+def init_state(model: Model, opt_cfg: AdamWConfig, key, shardings=None):
+    params = model.init(key)
+    opt = adamw_init(params, opt_cfg)
+    if shardings is not None:
+        params = jax.tree.map(jax.device_put, params, shardings["params"])
+        opt = jax.tree.map(jax.device_put, opt, shardings["opt"])
+    return params, opt

@@ -1,0 +1,25 @@
+# NOTE: no xla_force_host_platform_device_count here — unit tests and
+# benches must see the single real CPU device (the 512-device production
+# mesh exists only inside launch/dryrun.py).  Multi-device behaviour is
+# tested via subprocesses (tests/test_distributed.py).
+import numpy as np
+import pytest
+
+import repro  # noqa: F401  (enables x64 for the numeric core)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def phi_matrix(rng, shape, phi, dtype):
+    """The paper's SIV-A test-matrix generator: (rand-0.5)*exp(randn*phi)."""
+    u = rng.random(shape)
+    g = rng.standard_normal(shape)
+    m = (u - 0.5) * np.exp(g * phi)
+    if np.issubdtype(np.dtype(dtype), np.complexfloating):
+        u2 = rng.random(shape)
+        g2 = rng.standard_normal(shape)
+        m = m + 1j * (u2 - 0.5) * np.exp(g2 * phi)
+    return m.astype(dtype)

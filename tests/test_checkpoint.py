@@ -1,0 +1,73 @@
+"""Checkpoint: roundtrip, atomicity, async, GC, resume, elastic reshard."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer, latest_step
+
+
+def _tree(rng):
+    return {
+        "a": jnp.asarray(rng.standard_normal((4, 8)), jnp.float32),
+        "groups": [
+            {"w": jnp.asarray(rng.standard_normal((2, 3)), jnp.bfloat16)},
+            {"w": jnp.asarray(rng.integers(0, 5, (7,)), jnp.int32)},
+        ],
+        "step": jnp.int32(7),
+    }
+
+
+def test_roundtrip(tmp_path, rng):
+    ck = Checkpointer(str(tmp_path))
+    tree = _tree(rng)
+    ck.save(10, tree)
+    out = ck.restore(10, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float64), np.asarray(b, np.float64)
+        )
+        assert a.dtype == b.dtype
+
+
+def test_latest_and_gc(tmp_path, rng):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = _tree(rng)
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree)
+    assert latest_step(str(tmp_path)) == 4
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_3", "step_4"]
+
+
+def test_async_save(tmp_path, rng):
+    ck = Checkpointer(str(tmp_path))
+    tree = _tree(rng)
+    ck.save(5, tree, blocking=False)
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 5
+    out = ck.restore(5, tree)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+
+
+def test_no_tmp_left_behind(tmp_path, rng):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(rng))
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_meta(tmp_path, rng):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(3, _tree(rng), extra_meta={"mesh": [16, 16]})
+    assert ck.meta(3)["mesh"] == [16, 16]
+
+
+def test_restore_into_shapestructs(tmp_path, rng):
+    """Elastic path: restore without live arrays (ShapeDtypeStruct 'like')."""
+    ck = Checkpointer(str(tmp_path))
+    tree = _tree(rng)
+    ck.save(2, tree)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    out = ck.restore(2, like)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))

@@ -1,0 +1,142 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracles.
+
+The three integer kernels must be BIT-EXACT against the oracles; the Garner
+reconstruction kernel is compared at its double-single precision.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.moduli import make_crt_context
+from repro.kernels import (
+    crt_garner,
+    int8_mod_gemm,
+    karatsuba_mod_gemm,
+    ozaki2_cgemm_kernels,
+    ozaki2_gemm_kernels,
+    residue_cast,
+)
+from repro.kernels import ref
+from repro.kernels.common import split_scale_exponent
+
+SHAPES_MK = [(128, 256), (256, 512), (8, 128)]
+MODULI_SWEEP = [3, 199, 251, 255]
+
+
+@pytest.mark.parametrize("m,k", SHAPES_MK)
+@pytest.mark.parametrize("n_mod", [2, 7, 13])
+@pytest.mark.parametrize("scale_axis", [0, 1])
+def test_residue_cast_sweep(rng, m, k, n_mod, scale_axis):
+    ctx = make_crt_context(n_mod)
+    a = (rng.standard_normal((m, k)) * 10.0 ** rng.integers(-3, 4)).astype(np.float32)
+    dim = m if scale_axis == 0 else k
+    e = rng.integers(-10, 20, size=dim).astype(np.int32)
+    s1, s2 = split_scale_exponent(jnp.asarray(e))
+    kw = dict(moduli=ctx.moduli, n_limbs=2, scale_axis=scale_axis)
+    out = residue_cast(jnp.asarray(a), s1, s2, bm=min(128, m), bk=128, **kw)
+    expect = ref.residue_cast_ref(jnp.asarray(a), s1, s2, **kw)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("m,n,k", [(128, 128, 256), (256, 64, 512), (8, 128, 128)])
+@pytest.mark.parametrize("p", MODULI_SWEEP)
+def test_int8_mod_gemm_sweep(rng, m, n, k, p):
+    h = (p - 1) // 2
+    a = rng.integers(-h, h + 1, size=(m, k)).astype(np.int8)
+    b = rng.integers(-h, h + 1, size=(k, n)).astype(np.int8)
+    out = int8_mod_gemm(jnp.asarray(a), jnp.asarray(b), p=p, bm=128, bn=64, bk=128)
+    expect = ref.int8_mod_gemm_ref(jnp.asarray(a), jnp.asarray(b), p=p)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("p", MODULI_SWEEP)
+def test_karatsuba_fused_sweep(rng, p):
+    m, n, k = 128, 128, 256
+    h = (p - 1) // 2
+    mats = [
+        rng.integers(-h, h + 1, size=s).astype(np.int8)
+        for s in [(m, k), (m, k), (k, n), (k, n)]
+    ]
+    cr, ci = karatsuba_mod_gemm(*map(jnp.asarray, mats), p=p, bm=128, bn=128, bk=128)
+    er, ei = ref.karatsuba_mod_gemm_ref(*map(jnp.asarray, mats), p=p)
+    np.testing.assert_array_equal(np.asarray(cr), np.asarray(er))
+    np.testing.assert_array_equal(np.asarray(ci), np.asarray(ei))
+
+
+@pytest.mark.parametrize("n_mod", [2, 7, 13, 16])
+@pytest.mark.parametrize("out_dd", [False, True])
+def test_crt_garner_sweep(rng, n_mod, out_dd):
+    ctx = make_crt_context(n_mod)
+    m, n = 128, 128
+    e = np.stack(
+        [
+            rng.integers(-(p - 1) // 2, (p - 1) // 2 + 1, size=(m, n))
+            for p in ctx.moduli
+        ]
+    ).astype(np.int8)
+    emu = rng.integers(10, 60, size=m).astype(np.int32)
+    enu = rng.integers(10, 60, size=n).astype(np.int32)
+    out = crt_garner(jnp.asarray(e), jnp.asarray(emu), jnp.asarray(enu), ctx, out_dd=out_dd)
+    expect = np.asarray(ref.crt_garner_ref(jnp.asarray(e), jnp.asarray(emu), jnp.asarray(enu), ctx))
+    got = (
+        np.asarray(out[0], np.float64) + np.asarray(out[1], np.float64)
+        if out_dd
+        else np.asarray(out, np.float64)
+    )
+    tol = 2.0**-44 if out_dd else 2.0**-21
+    denom = np.maximum(np.abs(expect), np.max(np.abs(expect)) * 1e-6 + 1e-300)
+    assert np.max(np.abs(got - expect) / denom) < tol
+
+
+def test_full_kernel_gemm_pipeline(rng):
+    m, k, n = 256, 512, 256
+    a = (rng.random((m, k)) - 0.5).astype(np.float32)
+    b = (rng.random((k, n)) - 0.5).astype(np.float32)
+    y = np.asarray(ozaki2_gemm_kernels(jnp.asarray(a), jnp.asarray(b), n_moduli=8))
+    expect = a.astype(np.float64) @ b.astype(np.float64)
+    scale = np.max(np.abs(expect))
+    assert np.max(np.abs(y - expect)) / scale < 1e-5
+
+
+def test_full_kernel_cgemm_pipeline(rng):
+    m, k, n = 256, 512, 256
+    a = ((rng.random((m, k)) - 0.5) + 1j * (rng.random((m, k)) - 0.5)).astype(np.complex64)
+    b = ((rng.random((k, n)) - 0.5) + 1j * (rng.random((k, n)) - 0.5)).astype(np.complex64)
+    y = np.asarray(ozaki2_cgemm_kernels(jnp.asarray(a), jnp.asarray(b), n_moduli=7))
+    expect = a.astype(np.complex128) @ b.astype(np.complex128)
+    scale = np.max(np.abs(expect))
+    assert np.max(np.abs(y - expect)) / scale < 1e-5
+
+
+@pytest.mark.parametrize(
+    "b,s,h,kv,d", [(2, 256, 4, 2, 64), (1, 512, 8, 1, 32), (2, 128, 4, 4, 64)]
+)
+@pytest.mark.parametrize("dtype", [np.float32, "bfloat16"])
+def test_flash_attention_sweep(rng, b, s, h, kv, d, dtype):
+    from repro.kernels import flash_attention
+
+    dt = jnp.dtype(dtype)
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), dt)
+    k = jnp.asarray(rng.standard_normal((b, s, kv, d)), dt)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, d)), dt)
+    out = flash_attention(q, k, v, causal=True, bq=128, bk=128)
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dt == jnp.float32 else 2e-2
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32) -
+                                 expect.astype(jnp.float32)))) < tol
+
+
+def test_kernel_pipeline_matches_core_residues(rng):
+    """Kernel path and core path produce identical int8 residue planes."""
+    from repro.core import scaling
+    from repro.core.residues import quantize, residues_from_quantized
+
+    ctx = make_crt_context(7)
+    m, k = 128, 256
+    a = (rng.random((m, k)) - 0.5).astype(np.float32)
+    e = rng.integers(0, 20, size=m).astype(np.int32)
+    s1, s2 = split_scale_exponent(jnp.asarray(e))
+    kern = residue_cast(jnp.asarray(a), s1, s2, moduli=ctx.moduli, n_limbs=2)
+    aq = quantize(jnp.asarray(a, jnp.float64), scaling.exp2_vector(jnp.asarray(e)), 0)
+    core = residues_from_quantized(aq, ctx, 2)
+    np.testing.assert_array_equal(np.asarray(kern), np.asarray(core))

@@ -1,0 +1,74 @@
+"""CRT constant construction: coprimality, exact splits, Garner tables."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.moduli import (
+    MAX_MODULI,
+    default_moduli,
+    make_crt_context,
+    min_moduli_for_bits,
+)
+
+
+@pytest.mark.parametrize("n", [1, 2, 7, 13, 16, 20])
+def test_moduli_pairwise_coprime_odd(n):
+    p = default_moduli(n)
+    assert len(p) == n
+    for i in range(n):
+        assert p[i] % 2 == 1 and 3 <= p[i] <= 255
+        for j in range(i + 1, n):
+            assert math.gcd(p[i], p[j]) == 1
+
+
+@pytest.mark.parametrize("n", [2, 8, 13, 16, 20])
+def test_context_invariants(n):
+    ctx = make_crt_context(n)
+    P = 1
+    for pl in ctx.moduli:
+        P *= pl
+    assert ctx.P == P
+    assert abs(ctx.log2_P - math.log2(float(P))) < 1e-6 or ctx.log2_P > 900
+    # P expansion is exact
+    assert sum(int(x) for x in ctx.P_exp) == P
+    # w splits at a fixed absolute position: every w_hi is a multiple of
+    # 2^cutpos and w - w_hi < 2^cutpos (+ f64 rounding in the low part)
+    import math as _math
+
+    hi_bits = 53 - 7 - max(1, _math.ceil(_math.log2(max(n, 2))))
+    ws = []
+    for pl in ctx.moduli:
+        M = P // pl
+        q = pow(M % pl, -1, pl)
+        ws.append(M * q)
+    cutpos = max(w.bit_length() for w in ws) - hi_bits
+    for l, (w, pl) in enumerate(zip(ws, ctx.moduli)):
+        hi = int(ctx.w_hi[l])
+        assert hi % (1 << max(cutpos, 0)) == 0
+        assert 0 <= w - hi < (1 << max(cutpos, 1))
+        assert abs((w - hi) - ctx.w_lo[l]) <= 2.0 ** max(cutpos - 50, 0)
+        # CRT property: w_l == 1 mod p_l, == 0 mod p_j (j != l)
+        assert w % pl == 1
+        for j, pj in enumerate(ctx.moduli):
+            if j != l:
+                assert w % pj == 0
+
+
+def test_garner_tables():
+    ctx = make_crt_context(9)
+    for t in range(ctx.n):
+        for s in range(t):
+            inv = int(ctx.garner_inv[s, t])
+            assert (inv * ctx.moduli[s]) % ctx.moduli[t] == 1
+
+
+def test_min_moduli_for_bits():
+    n = min_moduli_for_bits(100.0)
+    assert make_crt_context(n).log2_P > 100.0
+    assert make_crt_context(n - 1).log2_P <= 100.0
+
+
+def test_max_moduli_bound():
+    with pytest.raises(ValueError):
+        default_moduli(MAX_MODULI + 1)

@@ -1,0 +1,118 @@
+"""End-to-end behaviour: training converges, resume-after-preemption works,
+serving generates, grad accumulation is exact, straggler watch flags."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_reduced
+from repro.data import DataConfig
+from repro.distributed.fault import PreemptionGuard, StragglerWatch
+from repro.models import Model
+from repro.optim import AdamWConfig
+from repro.serve import ServeEngine
+from repro.train import TrainLoopConfig, train_loop
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = get_reduced("qwen2.5-32b")
+    model = Model(cfg)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8, seed=0)
+    lcfg = TrainLoopConfig(steps=120, warmup=10, log_every=1000, ckpt_every=10**6)
+    params, hist = train_loop(
+        model, dcfg, lcfg, AdamWConfig(lr=3e-3, grad_clip=5.0), log=lambda *_: None
+    )
+    return cfg, model, params, hist
+
+
+def test_training_converges(trained):
+    _, _, _, hist = trained
+    first = np.mean(hist[:10])
+    last = np.mean(hist[-10:])
+    assert last < first - 0.3, (first, last)
+
+
+def test_resume_from_checkpoint(tmp_path):
+    cfg = get_reduced("mamba2-130m")
+    model = Model(cfg)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4, seed=1)
+    l1 = TrainLoopConfig(steps=8, warmup=2, ckpt_every=4, ckpt_dir=str(tmp_path),
+                         log_every=1000, async_ckpt=False)
+    train_loop(model, dcfg, l1, AdamWConfig(), log=lambda *_: None)
+    # resume: loop must start from step 8 and run only 4 more
+    l2 = TrainLoopConfig(steps=12, warmup=2, ckpt_every=100, ckpt_dir=str(tmp_path),
+                         log_every=1000)
+    _, hist = train_loop(model, dcfg, l2, AdamWConfig(), log=lambda *_: None)
+    assert len(hist) == 4
+
+
+def test_grad_accum_matches_full_batch():
+    cfg = dataclasses.replace(get_reduced("starcoder2-3b"), dtype="float32")
+    model = Model(cfg)
+    from repro.train.step import init_state, make_train_step
+
+    opt = AdamWConfig(lr=1e-3)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (8, 32)), jnp.int32)}
+    s1, _ = make_train_step(model, opt, donate=False)
+    s2, _ = make_train_step(model, opt, grad_accum=4, donate=False)
+    p, o = init_state(model, opt, jax.random.PRNGKey(0))
+    p1, _, m1 = s1(p, o, batch)
+    p2, _, m2 = s2(p, o, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=1e-3, atol=1e-5
+        )
+
+
+def test_serving_generates(trained):
+    cfg, model, params, _ = trained
+    eng = ServeEngine(model, params, cache_len=96, batch_size=4)
+    batch = {
+        "tokens": jnp.asarray(
+            np.random.default_rng(3).integers(0, cfg.vocab, (4, 16)), jnp.int32
+        )
+    }
+    toks = eng.generate(batch, 12)
+    assert toks.shape == (4, 12)
+    assert int(toks.min()) >= 0 and int(toks.max()) < cfg.vocab
+    # temperature sampling path
+    toks2 = eng.generate(batch, 4, temperature=1.0, key=jax.random.PRNGKey(0))
+    assert toks2.shape == (4, 4)
+
+
+def test_preemption_guard_flag():
+    with PreemptionGuard() as g:
+        assert not g.should_stop
+        g._handler(None, None)
+        assert g.should_stop
+
+
+def test_straggler_watch():
+    import time
+
+    w = StragglerWatch(threshold=5.0)
+    for s in range(3):
+        w.step_begin()
+        time.sleep(0.01)
+        w.step_end(s)
+    w.step_begin()
+    time.sleep(0.2)
+    assert w.step_end(3) is True
+    assert w.flagged and w.flagged[0][0] == 3
+
+
+def test_deterministic_data_sharding():
+    from repro.data import SyntheticLM
+
+    cfg = DataConfig(vocab=128, seq_len=16, global_batch=8, seed=5)
+    full = SyntheticLM(cfg).batch(7)["tokens"]
+    shards = [SyntheticLM(cfg, num_shards=4, shard=i).batch(7)["tokens"] for i in range(4)]
+    # each shard is deterministic and reproducible
+    again = SyntheticLM(cfg, num_shards=4, shard=2).batch(7)["tokens"]
+    np.testing.assert_array_equal(shards[2], again)
+    assert full.shape == (8, 16) and shards[0].shape == (2, 16)
