@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cgemm import ozaki2_cgemm
+from repro.core.perfmodel import TPU_V5E, select_formulation
 
 from .common import emit, phi_matrix, time_fn
 
@@ -26,6 +27,8 @@ def run(h: int = 512, n_moduli: int = 4):
     rng = np.random.default_rng(0)
     a = jnp.asarray(phi_matrix(rng, (h, h), 0.5, np.complex64))
     b = jnp.asarray(phi_matrix(rng, (h, h), 0.5, np.complex64))
+    picked = select_formulation(h, h, h, n_moduli, hw=TPU_V5E, prec="c")
+    emit(f"fig1/auto_pick/h{h}", 0.0, f"perfmodel_choice={picked}")
     results = {}
     for name, kwargs in [
         ("block_a", dict(formulation="block_a")),

@@ -1,21 +1,50 @@
-"""Ozaki-II CRT GEMM emulation — public API (the paper's contribution)."""
+"""Ozaki-II CRT GEMM emulation — public API (the paper's contribution).
+
+The numeric pipeline lives once in `plan.py` (static decisions) +
+`executor.py` (data path, pluggable residue backends); `gemm.py`, `cgemm.py`
+and the policy stack are thin wrappers over it.
+"""
 from .cgemm import ozaki2_cgemm
-from .gemm import PreparedOperand, default_n_moduli, gemm_prepared, ozaki2_gemm
+from .executor import (
+    PreparedOperand,
+    REFERENCE,
+    ReferenceBackend,
+    execute_plan,
+    gemm_prepared,
+    run_plan,
+)
+from .gemm import default_n_moduli, ozaki2_gemm
 from .moduli import CRTContext, default_moduli, make_crt_context, min_moduli_for_bits
-from .policy import GemmPolicy, NATIVE, emulated_matmul, policy_matmul
+from .plan import DEFAULT_MODULI, DEFAULT_N_BLOCK, EmulationPlan, make_plan
+from .policy import (
+    GemmPolicy,
+    NATIVE,
+    emulated_matmul,
+    policy_matmul,
+    prepare_weights,
+)
 
 __all__ = [
     "CRTContext",
+    "DEFAULT_MODULI",
+    "DEFAULT_N_BLOCK",
+    "EmulationPlan",
     "GemmPolicy",
     "NATIVE",
     "PreparedOperand",
+    "REFERENCE",
+    "ReferenceBackend",
     "default_moduli",
     "default_n_moduli",
     "emulated_matmul",
+    "execute_plan",
     "gemm_prepared",
     "make_crt_context",
+    "make_plan",
     "min_moduli_for_bits",
     "ozaki2_cgemm",
     "ozaki2_gemm",
     "policy_matmul",
+    "prepare_weights",
+    "run_plan",
 ]

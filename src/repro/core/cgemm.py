@@ -11,101 +11,19 @@ Three INT8 complex-multiplication formulations (paper SIII-A, Fig. 1):
 * 'block_a' (eq. 7): one (2m, 2k) x (2k, n) real GEMM per modulus.
 * 'block_b' (eq. 8): one (m, 2k) x (2k, 2n) real GEMM per modulus.
   (both shrink the exact-k limit from 2^17 to 2^16 — handled by K chunking.)
+* 'auto': pick by the SIII-C performance model (`core/perfmodel.py`).
+
+The pipeline itself lives once in `core/executor.py`; this module only
+builds the `EmulationPlan` and validates operands.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
-from . import crt, scaling
-from .gemm import _n_limbs, _residue_matmul, default_n_moduli
-from .moduli import CRTContext, make_crt_context
-from .residues import quantize, residues_from_quantized, sym_mod_int32
+from .executor import run_plan
+from .plan import DEFAULT_N_BLOCK, make_plan
 
-DEFAULT_N_BLOCK = 8192
-
-
-def _sym_mod_i32_stack(v: jnp.ndarray, ctx: CRTContext) -> jnp.ndarray:
-    outs = [sym_mod_int32(v[l], int(ctx.moduli_arr[l])) for l in range(ctx.n)]
-    return jnp.stack(outs, axis=0)
-
-
-def _karatsuba_block(arr, ari, brr, bri, ctx):
-    """Residues of (CR', CI') for one n-block via 3 int8 GEMMs per modulus."""
-    asum = _sym_mod_i32_stack(arr.astype(jnp.int32) + ari.astype(jnp.int32), ctx).astype(jnp.int8)
-    bsum = _sym_mod_i32_stack(brr.astype(jnp.int32) + bri.astype(jnp.int32), ctx).astype(jnp.int8)
-    d = _residue_matmul(arr, brr, ctx).astype(jnp.int32)  # already mod p
-    e = _residue_matmul(ari, bri, ctx).astype(jnp.int32)
-    f = _residue_matmul(asum, bsum, ctx).astype(jnp.int32)
-    er = _sym_mod_i32_stack(d - e, ctx).astype(jnp.int8)
-    ei = _sym_mod_i32_stack(f - d - e, ctx).astype(jnp.int8)
-    return er, ei
-
-
-def _block_a(arr, ari, brr, bri, ctx):
-    """eq. (7): [[AR,-AI],[AI,AR]] @ [BR;BI] = [CR;CI] — one GEMM of (2m,2k,n)."""
-    top = jnp.concatenate([arr, -ari], axis=-1)
-    bot = jnp.concatenate([ari, arr], axis=-1)
-    ahat = jnp.concatenate([top, bot], axis=-2)  # (N, 2m, 2k)
-    bhat = jnp.concatenate([brr, bri], axis=-2)  # (N, 2k, n)
-    chat = _residue_matmul(ahat, bhat, ctx)  # (N, 2m, n) int8 residues
-    m = arr.shape[-2]
-    return chat[:, :m, :], chat[:, m:, :]
-
-
-def _block_b(arr, ari, brr, bri, ctx):
-    """eq. (8): [AI,AR] @ [[BR,-BI],[BI,BR]] = [CI,CR] — one GEMM of (m,2k,2n)."""
-    ahat = jnp.concatenate([ari, arr], axis=-1)  # (N, m, 2k)
-    left = jnp.concatenate([brr, bri], axis=-2)  # (N, 2k, n)
-    right = jnp.concatenate([-bri, brr], axis=-2)
-    bhat = jnp.concatenate([left, right], axis=-1)  # (N, 2k, 2n)
-    chat = _residue_matmul(ahat, bhat, ctx)
-    n = brr.shape[-1]
-    return chat[:, :, n:], chat[:, :, :n]
-
-
-_FORMULATIONS = {"karatsuba": _karatsuba_block, "block_a": _block_a, "block_b": _block_b}
-
-
-@functools.partial(
-    jnp.vectorize, excluded=(2, 3, 4, 5, 6, 7), signature="(m,k),(k,n)->(m,n)"
-)
-def _cgemm_2d(a, b, n_moduli, mode, method, formulation, out_dtype, n_block):
-    ctx = make_crt_context(n_moduli)
-    ar, ai = jnp.real(a), jnp.imag(a)
-    br, bi = jnp.real(b), jnp.imag(b)
-    if mode == "fast":
-        e_mu, e_nu = scaling.scale_fast_complex(ar, ai, br, bi, ctx)
-    elif mode == "accu":
-        e_mu, e_nu = scaling.scale_accurate_complex(ar, ai, br, bi, ctx)
-    else:
-        raise ValueError(f"unknown mode {mode!r}")
-    nl = _n_limbs(ctx)
-    mu = scaling.exp2_vector(e_mu)
-    f64 = jnp.float64
-    arr = residues_from_quantized(quantize(ar.astype(f64), mu, 0), ctx, nl)
-    ari = residues_from_quantized(quantize(ai.astype(f64), mu, 0), ctx, nl)
-    real_dtype = {"complex64": jnp.float32, "complex128": jnp.float64}[
-        jnp.dtype(out_dtype).name
-    ]
-    kernel = _FORMULATIONS[formulation]
-    n = b.shape[1]
-    n_block_eff = n_block or n
-    blocks = []
-    for j0 in range(0, n, n_block_eff):
-        sl = slice(j0, j0 + n_block_eff)
-        nu = scaling.exp2_vector(e_nu[sl])
-        brr = residues_from_quantized(quantize(br[:, sl].astype(f64), nu, 1), ctx, nl)
-        bri = residues_from_quantized(quantize(bi[:, sl].astype(f64), nu, 1), ctx, nl)
-        er, ei = kernel(arr, ari, brr, bri, ctx)
-        rh, rl = crt.reconstruct(er, ctx, method)
-        ih, il = crt.reconstruct(ei, ctx, method)
-        cr = crt.inverse_scale(rh, rl, e_mu, e_nu[sl], real_dtype)
-        ci = crt.inverse_scale(ih, il, e_mu, e_nu[sl], real_dtype)
-        blocks.append(jax.lax.complex(cr, ci))
-    return blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks, axis=1)
+__all__ = ["DEFAULT_N_BLOCK", "ozaki2_cgemm"]
 
 
 def ozaki2_cgemm(
@@ -119,14 +37,23 @@ def ozaki2_cgemm(
     n_block: int | None = None,
 ) -> jnp.ndarray:
     """Emulated complex GEMM: C ~= A @ B for complex64 (CGEMM) / complex128
-    (ZGEMM) operands, per the paper's Ozaki-II complex extension."""
+    (ZGEMM) operands, per the paper's Ozaki-II complex extension.
+
+    formulation: 'karatsuba' | 'block_a' | 'block_b' | 'auto' (SIII-C model).
+    n_block: int | None | 'auto' (paper's 8192-column blocking when n is big).
+    """
     if a.dtype != b.dtype:
         raise ValueError(f"dtype mismatch {a.dtype} vs {b.dtype}")
     if not jnp.issubdtype(a.dtype, jnp.complexfloating):
         raise ValueError("ozaki2_cgemm expects complex operands")
-    out_dtype = jnp.dtype(out_dtype or a.dtype)
-    if n_moduli is None:
-        n_moduli = default_n_moduli(a.dtype, mode)
-    return _cgemm_2d(
-        a, b, int(n_moduli), mode, method, formulation, out_dtype, n_block
+    plan = make_plan(
+        a.dtype,
+        n_moduli=n_moduli,
+        mode=mode,
+        method=method,
+        formulation=formulation,
+        out_dtype=out_dtype,
+        n_block=n_block,
+        shape=(a.shape[-2], a.shape[-1], b.shape[-1]),
     )
+    return run_plan(plan, a, b)

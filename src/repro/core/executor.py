@@ -1,0 +1,457 @@
+"""The single executor for Ozaki-II emulation plans (real and complex).
+
+One code path drives Alg. 1 for every public entry point:
+
+    scale -> quantize -> residue-cast -> per-modulus int8 GEMMs
+          -> CRT reconstruct -> exact inverse scaling
+
+parameterized by an :class:`EmulationPlan` (static decisions) and a
+*residue backend* supplying the three data-touching primitives:
+
+  cast(x, e, axis)            scale+trunc+limb-split -> (N, ...) int8 residues
+  residue_matmul(ares, bres)  (N,m,k) x (N,k,n) -> (N,m,n) int8 residues
+  karatsuba(arr, ari, brr, bri)  fused complex residue product (3 GEMMs)
+  reconstruct(e_res, e_mu, e_nu, method, out_dtype)  CRT + inverse scaling
+
+`ReferenceBackend` is the jnp path (exact f64 host arithmetic, all three CRT
+methods); `repro.kernels.ops.KernelBackend` is the Pallas TPU path.  The two
+block-embedding formulations (paper eqs. 7/8) are composed here from
+`residue_matmul`, so any backend gets all three Fig. 1 strategies for free.
+
+Everything is jit-compatible: plans and backends are static (hashable), and
+batching over leading operand dims is provided by `run_plan`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import crt, scaling
+from .intmul import int8_matmul
+from .moduli import CRTContext, K_CHUNK_LIMIT, make_crt_context
+from .plan import EmulationPlan, make_plan, n_limbs_for_ctx
+from .residues import quantize, residues_from_quantized, sym_mod_int32
+
+
+def _sym_mod_stack(d: jnp.ndarray, ctx: CRTContext) -> jnp.ndarray:
+    outs = [sym_mod_int32(d[l], int(ctx.moduli_arr[l])) for l in range(ctx.n)]
+    return jnp.stack(outs, axis=0)
+
+
+def chunked_residue_matmul(mod_gemm_stack, ares, bres, ctx: CRTContext):
+    """K-chunk an (N,m,k)x(N,k,n) residue product so every int8 GEMM
+    accumulates exactly in int32 (k <= K_CHUNK_LIMIT per call), reducing
+    mod p between chunks (residue arithmetic is closed).
+
+    `mod_gemm_stack(ares, bres) -> (N,m,n) int8` is the backend's un-chunked
+    per-modulus primitive; this is the single implementation of the chunking
+    invariant shared by every backend.
+    """
+    k = ares.shape[-1]
+    if k <= K_CHUNK_LIMIT:
+        return mod_gemm_stack(ares, bres)
+    acc = None
+    for k0 in range(0, k, K_CHUNK_LIMIT):
+        e = mod_gemm_stack(
+            ares[..., k0 : k0 + K_CHUNK_LIMIT],
+            bres[:, k0 : k0 + K_CHUNK_LIMIT, :],
+        ).astype(jnp.int32)
+        acc = e if acc is None else acc + e
+    # |acc| <= n_chunks*127 << 2^31
+    return _sym_mod_stack(acc, ctx).astype(jnp.int8)
+
+
+# ================================================================ backends
+
+
+@dataclasses.dataclass(frozen=True)
+class ReferenceBackend:
+    """jnp reference data path (exact f64 host arithmetic; core/intmul.py)."""
+
+    def cast(self, x, e, axis, ctx, n_limbs):
+        """quantize by 2^e along `axis` and residue-decompose (steps IV/V-i/ii)."""
+        xq = quantize(x.astype(jnp.float64), scaling.exp2_vector(e), axis)
+        return residues_from_quantized(xq, ctx, n_limbs)
+
+    def residue_matmul(self, ares, bres, ctx):
+        """(N,m,k) x (N,k,n) -> (N,m,n) int8 residues of A'B' (steps V-iii/iv),
+        K-chunked by the shared `chunked_residue_matmul`."""
+        return chunked_residue_matmul(
+            lambda a, b: _sym_mod_stack(int8_matmul(a, b), ctx).astype(jnp.int8),
+            ares,
+            bres,
+            ctx,
+        )
+
+    def karatsuba(self, arr, ari, brr, bri, ctx):
+        """Residues of (CR', CI') via 3 int8 GEMMs per modulus (paper eq. 10)."""
+        asum = _sym_mod_stack(
+            arr.astype(jnp.int32) + ari.astype(jnp.int32), ctx
+        ).astype(jnp.int8)
+        bsum = _sym_mod_stack(
+            brr.astype(jnp.int32) + bri.astype(jnp.int32), ctx
+        ).astype(jnp.int8)
+        d = self.residue_matmul(arr, brr, ctx).astype(jnp.int32)  # already mod p
+        e = self.residue_matmul(ari, bri, ctx).astype(jnp.int32)
+        f = self.residue_matmul(asum, bsum, ctx).astype(jnp.int32)
+        er = _sym_mod_stack(d - e, ctx).astype(jnp.int8)
+        ei = _sym_mod_stack(f - d - e, ctx).astype(jnp.int8)
+        return er, ei
+
+    def reconstruct(self, e_res, e_mu, e_nu, ctx, method, out_dtype):
+        """CRT reconstruction (steps V-v/vi) + exact inverse scaling."""
+        hi, lo = crt.reconstruct(e_res, ctx, method)
+        return crt.inverse_scale(hi, lo, e_mu, e_nu, out_dtype)
+
+
+REFERENCE = ReferenceBackend()
+
+
+# ------------------------------------------------- composed complex embeds
+
+
+def _block_a(backend, arr, ari, brr, bri, ctx):
+    """eq. (7): [[AR,-AI],[AI,AR]] @ [BR;BI] = [CR;CI] — one GEMM of (2m,2k,n)."""
+    top = jnp.concatenate([arr, -ari], axis=-1)
+    bot = jnp.concatenate([ari, arr], axis=-1)
+    ahat = jnp.concatenate([top, bot], axis=-2)  # (N, 2m, 2k)
+    bhat = jnp.concatenate([brr, bri], axis=-2)  # (N, 2k, n)
+    chat = backend.residue_matmul(ahat, bhat, ctx)  # (N, 2m, n) int8 residues
+    m = arr.shape[-2]
+    return chat[:, :m, :], chat[:, m:, :]
+
+
+def _block_b(backend, arr, ari, brr, bri, ctx):
+    """eq. (8): [AI,AR] @ [[BR,-BI],[BI,BR]] = [CI,CR] — one GEMM of (m,2k,2n)."""
+    ahat = jnp.concatenate([ari, arr], axis=-1)  # (N, m, 2k)
+    left = jnp.concatenate([brr, bri], axis=-2)  # (N, 2k, n)
+    right = jnp.concatenate([-bri, brr], axis=-2)
+    bhat = jnp.concatenate([left, right], axis=-1)  # (N, 2k, 2n)
+    chat = backend.residue_matmul(ahat, bhat, ctx)
+    n = brr.shape[-1]
+    return chat[:, :, n:], chat[:, :, :n]
+
+
+def _complex_product(backend, plan, arr, ari, brr, bri, ctx):
+    if plan.formulation == "karatsuba":
+        return backend.karatsuba(arr, ari, brr, bri, ctx)
+    if plan.formulation == "block_a":
+        return _block_a(backend, arr, ari, brr, bri, ctx)
+    if plan.formulation == "block_b":
+        return _block_b(backend, arr, ari, brr, bri, ctx)
+    raise ValueError(f"unknown formulation {plan.formulation!r}")
+
+
+# ================================================================ executor
+
+
+def execute_plan(plan: EmulationPlan, a, b, backend=REFERENCE):
+    """Run one 2D emulated GEMM per `plan`: C ~= A @ B, a: (m,k), b: (k,n)."""
+    return (
+        _execute_complex(plan, a, b, backend)
+        if plan.is_complex
+        else _execute_real(plan, a, b, backend)
+    )
+
+
+def _blocked_pipeline_real(plan, backend, ctx, e_mu, ares, e_nu, bres_slice, n):
+    """The shared residue-GEMM -> reconstruct loop over output-column blocks.
+
+    `bres_slice(sl)` yields the B-side residues for one block — freshly cast
+    by the executor, or sliced out of a `PreparedOperand`.
+    """
+    blocks = []
+    for sl in plan.n_block_slices(n):
+        e_r = backend.residue_matmul(ares, bres_slice(sl), ctx)
+        blocks.append(
+            backend.reconstruct(
+                e_r, e_mu, e_nu[sl], ctx, plan.method, plan.real_out_dtype
+            )
+        )
+    return blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks, axis=1)
+
+
+def _blocked_pipeline_complex(
+    plan, backend, ctx, e_mu, arr, ari, e_nu, bres_slice, n
+):
+    """Complex twin of `_blocked_pipeline_real`; `bres_slice(sl)` yields the
+    (brr, bri) residue pair for one output-column block."""
+    rdt = plan.real_out_dtype
+    blocks = []
+    for sl in plan.n_block_slices(n):
+        brr, bri = bres_slice(sl)
+        er, ei = _complex_product(backend, plan, arr, ari, brr, bri, ctx)
+        cr = backend.reconstruct(er, e_mu, e_nu[sl], ctx, plan.method, rdt)
+        ci = backend.reconstruct(ei, e_mu, e_nu[sl], ctx, plan.method, rdt)
+        blocks.append(jax.lax.complex(cr, ci))
+    return blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks, axis=1)
+
+
+def _execute_real(plan, a, b, backend):
+    ctx = plan.ctx
+    if plan.mode == "fast":
+        e_mu, e_nu = scaling.scale_fast_real(a, b, ctx)
+    else:
+        e_mu, e_nu = scaling.scale_accurate_real(a, b, ctx)
+    nl = plan.n_limbs
+    ares = backend.cast(a, e_mu, 0, ctx, nl)
+    return _blocked_pipeline_real(
+        plan, backend, ctx, e_mu, ares, e_nu,
+        lambda sl: backend.cast(b[:, sl], e_nu[sl], 1, ctx, nl),
+        b.shape[1],
+    )
+
+
+def _execute_complex(plan, a, b, backend):
+    ctx = plan.ctx
+    ar, ai = jnp.real(a), jnp.imag(a)
+    br, bi = jnp.real(b), jnp.imag(b)
+    if plan.mode == "fast":
+        e_mu, e_nu = scaling.scale_fast_complex(ar, ai, br, bi, ctx)
+    else:
+        e_mu, e_nu = scaling.scale_accurate_complex(ar, ai, br, bi, ctx)
+    nl = plan.n_limbs
+    arr = backend.cast(ar, e_mu, 0, ctx, nl)
+    ari = backend.cast(ai, e_mu, 0, ctx, nl)
+    return _blocked_pipeline_complex(
+        plan, backend, ctx, e_mu, arr, ari, e_nu,
+        lambda sl: (
+            backend.cast(br[:, sl], e_nu[sl], 1, ctx, nl),
+            backend.cast(bi[:, sl], e_nu[sl], 1, ctx, nl),
+        ),
+        b.shape[1],
+    )
+
+
+@functools.partial(
+    jnp.vectorize, excluded=(2, 3), signature="(m,k),(k,n)->(m,n)"
+)
+def _run_plan_2d(a, b, plan, backend):
+    return execute_plan(plan, a, b, backend)
+
+
+def run_plan(plan: EmulationPlan, a, b, backend=REFERENCE):
+    """Execute `plan` on (..., m, k) x (..., k, n), batched over leading dims."""
+    return _run_plan_2d(a, b, plan, backend)
+
+
+# ====================================================== prepared operands
+
+
+class PreparedOperand:
+    """Beyond-paper optimization: one-time residue-cast of a reused operand.
+
+    In iterative solvers, repeated applications (C_i = A @ B_i with a fixed
+    A) and weight-stationary serving (Y = X_i @ W), step 1 of the scheme
+    (scaling + truncation + N residue planes of the fixed operand) can be
+    computed once and amortized: the paper's step-1 memory term
+    ((3N + 32 + c) k (m+n) / b) loses the prepared side's contribution
+    entirely on every call after the first.  Scaling uses the fast
+    (Cauchy-Schwarz) per-row/column bound, which is independent of the other
+    operand — so `gemm_prepared` is bit-identical to the direct fast-mode
+    pipeline.
+
+    Supports real and complex operands, either side of the product
+    (`side='left'` prepares A row-wise; `side='right'` prepares B
+    column-wise) and leading batch dims (e.g. scan-stacked layer weights:
+    a (L, k, n) weight yields residues (L, N, k, n), sliced per layer by
+    `lax.scan` like any other parameter leaf).  Instances are registered as
+    jax pytrees so they can live inside jitted parameter trees.
+    """
+
+    def __init__(self, x, n_moduli: int | None = None, side: str = "left"):
+        if side not in ("left", "right"):
+            raise ValueError(side)
+        dt = jnp.dtype(x.dtype)
+        if n_moduli is None:
+            from .plan import default_n_moduli
+
+            n_moduli = default_n_moduli(dt, "fast")
+        n_moduli = int(n_moduli)
+        ctx = make_crt_context(n_moduli)
+        nl = n_limbs_for_ctx(ctx)
+        is_complex = jnp.issubdtype(dt, jnp.complexfloating)
+        axis = 0 if side == "left" else 1
+
+        sig = "(m,k)->(m),(l,m,k)" if side == "left" else "(m,k)->(k),(l,m,k)"
+        if is_complex:
+
+            @functools.partial(
+                jnp.vectorize, signature="(m,k)->(m),(l,m,k),(l,m,k)"
+                if side == "left" else "(m,k)->(k),(l,m,k),(l,m,k)"
+            )
+            def _prep(x2):
+                xr, xi = jnp.real(x2), jnp.imag(x2)
+                e = _solo_scale_complex(xr, xi, ctx, side)
+                sv = scaling.exp2_vector(e)
+                rr = residues_from_quantized(
+                    quantize(xr.astype(jnp.float64), sv, axis), ctx, nl
+                )
+                ri = residues_from_quantized(
+                    quantize(xi.astype(jnp.float64), sv, axis), ctx, nl
+                )
+                return e, rr, ri
+
+            e_scale, *res = _prep(x)
+        else:
+
+            @functools.partial(jnp.vectorize, signature=sig)
+            def _prep(x2):
+                e = _solo_scale_real(x2, ctx, side)
+                xq = quantize(x2.astype(jnp.float64), scaling.exp2_vector(e), axis)
+                return e, residues_from_quantized(xq, ctx, nl)
+
+            e_scale, *res = _prep(x)
+
+        self.side = side
+        self.n_moduli = n_moduli
+        self.n_limbs = nl
+        self.dtype = dt.name
+        self.e_scale = e_scale
+        self.residues = tuple(res)
+
+    # residues of the real part (kept under the historical name)
+    @property
+    def res(self):
+        return self.residues[0]
+
+    @property
+    def is_complex(self) -> bool:
+        return len(self.residues) == 2
+
+    @property
+    def ctx(self) -> CRTContext:
+        return make_crt_context(self.n_moduli)
+
+    @property
+    def operand_shape(self) -> tuple[int, int]:
+        """Logical (rows, cols) of the prepared operand (per batch element)."""
+        return self.residues[0].shape[-2:]
+
+    def __repr__(self):
+        return (
+            f"PreparedOperand(side={self.side!r}, dtype={self.dtype}, "
+            f"n_moduli={self.n_moduli}, shape={self.operand_shape})"
+        )
+
+
+def _prepared_flatten(p: PreparedOperand):
+    return (p.e_scale, p.residues), (p.side, p.n_moduli, p.n_limbs, p.dtype)
+
+
+def _prepared_unflatten(aux, children):
+    p = object.__new__(PreparedOperand)
+    p.side, p.n_moduli, p.n_limbs, p.dtype = aux
+    p.e_scale, p.residues = children[0], tuple(children[1])
+    return p
+
+
+jax.tree_util.register_pytree_node(
+    PreparedOperand, _prepared_flatten, _prepared_unflatten
+)
+
+
+def _solo_scale_real(x, ctx, side):
+    """Fast-mode exponent of one operand alone (dummy other operand)."""
+    if side == "left":
+        e, _ = scaling.scale_fast_real(x, jnp.zeros((x.shape[1], 1)), ctx)
+    else:
+        _, e = scaling.scale_fast_real(jnp.zeros((1, x.shape[0])), x, ctx)
+    return e
+
+
+def _solo_scale_complex(xr, xi, ctx, side):
+    if side == "left":
+        z = jnp.zeros((xr.shape[1], 1))
+        e, _ = scaling.scale_fast_complex(xr, xi, z, z, ctx)
+    else:
+        z = jnp.zeros((1, xr.shape[0]))
+        _, e = scaling.scale_fast_complex(z, z, xr, xi, ctx)
+    return e
+
+
+def gemm_prepared(
+    prep: PreparedOperand,
+    x: jnp.ndarray,
+    method: str = "paper",
+    formulation: str = "karatsuba",
+    out_dtype=None,
+    n_block=None,
+    backend=REFERENCE,
+) -> jnp.ndarray:
+    """Emulated product with one pre-residue-cast side (fast mode).
+
+    side='left':  C ~= prep @ x   (x is B, cast per call)
+    side='right': C ~= x @ prep   (x is A, cast per call)
+
+    `formulation` (complex operands) accepts 'auto' and `n_block` accepts
+    int | None | 'auto', resolved exactly as in the direct pipeline.
+
+    Bit-identical to the direct fast-mode pipeline: the fast scaling bound of
+    each operand is independent of the other, so the prepared exponents and
+    residues match what `ozaki2_gemm`/`ozaki2_cgemm` would compute, and
+    output-column blocking slices the same residues the unblocked path uses.
+    """
+    ctx = prep.ctx
+    if prep.residues[0].ndim != 3:
+        raise ValueError(
+            "gemm_prepared expects an unbatched (2D) prepared operand; "
+            f"got residues of shape {prep.residues[0].shape}"
+        )
+    out_dtype = jnp.dtype(out_dtype or x.dtype)
+    if prep.side == "left":
+        m, k = prep.operand_shape
+        n = x.shape[1]
+    else:
+        k, n = prep.operand_shape
+        m = x.shape[0]
+    plan = make_plan(
+        prep.dtype,
+        n_moduli=prep.n_moduli,
+        mode="fast",
+        method=method,
+        formulation=formulation if prep.is_complex else None,
+        out_dtype=out_dtype,
+        n_block=n_block,
+        shape=(m, k, n),
+    )
+    nl = prep.n_limbs
+    other_side = "left" if prep.side == "right" else "right"
+
+    if prep.is_complex:
+        xr, xi = jnp.real(x), jnp.imag(x)
+        e_other = _solo_scale_complex(xr, xi, ctx, other_side)
+        if prep.side == "left":
+            e_mu, e_nu = prep.e_scale, e_other
+            arr, ari = prep.residues
+            bres_slice = lambda sl: (  # noqa: E731
+                backend.cast(xr[:, sl], e_nu[sl], 1, ctx, nl),
+                backend.cast(xi[:, sl], e_nu[sl], 1, ctx, nl),
+            )
+        else:
+            e_mu, e_nu = e_other, prep.e_scale
+            arr = backend.cast(xr, e_mu, 0, ctx, nl)
+            ari = backend.cast(xi, e_mu, 0, ctx, nl)
+            bres_slice = lambda sl: tuple(  # noqa: E731
+                r[..., sl] for r in prep.residues
+            )
+        return _blocked_pipeline_complex(
+            plan, backend, ctx, e_mu, arr, ari, e_nu, bres_slice, n
+        )
+
+    e_other = _solo_scale_real(x, ctx, other_side)
+    if prep.side == "left":
+        e_mu, e_nu, ares = prep.e_scale, e_other, prep.res
+        bres_slice = lambda sl: backend.cast(  # noqa: E731
+            x[:, sl], e_nu[sl], 1, ctx, nl
+        )
+    else:
+        e_mu, e_nu = e_other, prep.e_scale
+        ares = backend.cast(x, e_mu, 0, ctx, nl)
+        bres_slice = lambda sl: prep.res[..., sl]  # noqa: E731
+    return _blocked_pipeline_real(
+        plan, backend, ctx, e_mu, ares, e_nu, bres_slice, n
+    )

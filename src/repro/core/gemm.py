@@ -3,161 +3,32 @@
 Pipeline (Alg. 1):  scale -> trunc -> residues -> N int8 GEMMs -> per-modulus
 reduction -> CRT reconstruction -> exact inverse scaling.
 
+This module is a thin wrapper: the pipeline itself lives once in
+`core/executor.py`, driven by an `EmulationPlan` (`core/plan.py`).  The same
+executor also serves the complex path (`core/cgemm.py`) and the Pallas
+kernel path (`kernels/ops.py`).
+
 Everything is jit-compatible with static (n_moduli, mode, method, n_block).
 """
 from __future__ import annotations
 
-import functools
-from typing import Sequence
-
 import jax.numpy as jnp
 
-from . import crt, scaling
-from .intmul import int8_matmul
-from .moduli import CRTContext, K_CHUNK_LIMIT, make_crt_context
-from .residues import (
-    num_limbs_for_bits,
-    quantize,
-    residues_from_quantized,
-    sym_mod_int32,
-)
+from .executor import PreparedOperand, gemm_prepared, run_plan
+from .plan import DEFAULT_MODULI, default_n_moduli, make_plan, n_limbs_for_ctx
 
-# Defaults matching the paper's accuracy bands (SIV-A / [30]):
-#   CGEMM-level: fast 6-9, accu 6-8;  ZGEMM/DGEMM-level: fast 13/14-18, accu 13/14-17.
-DEFAULT_MODULI = {
-    ("float32", "fast"): 8,
-    ("float32", "accu"): 7,
-    ("float64", "fast"): 16,
-    ("float64", "accu"): 15,
-    ("complex64", "fast"): 7,
-    ("complex64", "accu"): 7,
-    ("complex128", "fast"): 14,
-    ("complex128", "accu"): 14,
-}
+__all__ = [
+    "DEFAULT_MODULI",
+    "PreparedOperand",
+    "default_n_moduli",
+    "gemm_prepared",
+    "ozaki2_gemm",
+]
 
 
-def default_n_moduli(dtype, mode: str) -> int:
-    key = (jnp.dtype(dtype).name, mode)
-    if key not in DEFAULT_MODULI:
-        raise ValueError(f"no default moduli count for {key}")
-    return DEFAULT_MODULI[key]
-
-
-def _n_limbs(ctx: CRTContext) -> int:
-    # |a'| <= 2^(P'_accu + 6) <= 2^(log2(P)/2 + 6); +2 safety margin.
-    return num_limbs_for_bits(ctx.log2_P / 2.0 + 8.0)
-
-
-def _residue_matmul(ares: jnp.ndarray, bres: jnp.ndarray, ctx: CRTContext):
-    """(N,m,k) x (N,k,n) -> (N,m,n) int8 residues of A'B' (steps V-iii/iv).
-
-    K is chunked so every int8 GEMM accumulates exactly in int32; chunks are
-    reduced mod p between accumulations (residue arithmetic is closed).
-    """
-    k = ares.shape[-1]
-    if k <= K_CHUNK_LIMIT:
-        d = int8_matmul(ares, bres)
-        return _sym_mod_stack(d, ctx)
-    acc = None
-    for k0 in range(0, k, K_CHUNK_LIMIT):
-        d = int8_matmul(ares[..., k0 : k0 + K_CHUNK_LIMIT], bres[:, k0 : k0 + K_CHUNK_LIMIT, :])
-        e = _sym_mod_stack(d, ctx).astype(jnp.int32)
-        acc = e if acc is None else acc + e
-    return _sym_mod_stack(acc, ctx)  # |acc| <= n_chunks*127 << 2^31
-
-
-def _sym_mod_stack(d: jnp.ndarray, ctx: CRTContext) -> jnp.ndarray:
-    outs = [sym_mod_int32(d[l], int(ctx.moduli_arr[l])) for l in range(ctx.n)]
-    return jnp.stack(outs, axis=0).astype(jnp.int8)
-
-
-@functools.partial(
-    jnp.vectorize, excluded=(2, 3, 4, 5, 6), signature="(m,k),(k,n)->(m,n)"
-)
-def _gemm_2d(a, b, n_moduli, mode, method, out_dtype, n_block):
-    ctx = make_crt_context(n_moduli)
-    if mode == "fast":
-        e_mu, e_nu = scaling.scale_fast_real(a, b, ctx)
-    elif mode == "accu":
-        e_mu, e_nu = scaling.scale_accurate_real(a, b, ctx)
-    else:
-        raise ValueError(f"unknown mode {mode!r}")
-    nl = _n_limbs(ctx)
-    a64 = a.astype(jnp.float64)
-    b64 = b.astype(jnp.float64)
-    aq = quantize(a64, scaling.exp2_vector(e_mu), axis=0)
-    ares = residues_from_quantized(aq, ctx, nl)
-    n = b.shape[1]
-    blocks = []
-    n_block_eff = n_block or n
-    for j0 in range(0, n, n_block_eff):
-        bq = quantize(b64[:, j0 : j0 + n_block_eff], scaling.exp2_vector(e_nu[j0 : j0 + n_block_eff]), axis=1)
-        bres = residues_from_quantized(bq, ctx, nl)
-        e_r = _residue_matmul(ares, bres, ctx)
-        hi, lo = crt.reconstruct(e_r, ctx, method)
-        blocks.append(crt.inverse_scale(hi, lo, e_mu, e_nu[j0 : j0 + n_block_eff], out_dtype))
-    return blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks, axis=1)
-
-
-class PreparedOperand:
-    """Beyond-paper optimization: one-time residue-cast of a reused operand.
-
-    In iterative solvers / repeated applications (C_i = A @ B_i with a fixed
-    A), step 1 of the scheme (scaling + truncation + N residue planes of A)
-    can be computed once and amortized: the paper's step-1 memory term
-    ((3N + 32 + c) k (m+n) / b) loses its A-side contribution entirely on
-    every call after the first.  Scaling uses the fast (Cauchy-Schwarz)
-    per-row bound, which is independent of the other operand.
-    """
-
-    def __init__(self, a: jnp.ndarray, n_moduli: int, side: str = "left"):
-        from . import scaling as _sc
-
-        if side not in ("left", "right"):
-            raise ValueError(side)
-        self.side = side
-        self.n_moduli = n_moduli
-        self.ctx = make_crt_context(n_moduli)
-        a64 = a.astype(jnp.float64)
-        amax = jnp.max(jnp.abs(a64), axis=1 if side == "left" else 0)
-        norm_scale = _sc.exp2_vector(
-            -_sc.ilogb(jnp.where(amax > 0, amax, 1.0))
-        )
-        if side == "left":
-            an = a64 * norm_scale[:, None]
-            nrm = jnp.sum(an * an, axis=1)
-        else:
-            an = a64 * norm_scale[None, :]
-            nrm = jnp.sum(an * an, axis=0)
-        self.e_scale = _sc._fast_exponent(amax, nrm, self.ctx)
-        nl = _n_limbs(self.ctx)
-        axis = 0 if side == "left" else 1
-        aq = quantize(a64, _sc.exp2_vector(self.e_scale), axis)
-        self.residues = residues_from_quantized(aq, self.ctx, nl)
-        self.n_limbs = nl
-
-
-def gemm_prepared(
-    prep: PreparedOperand,
-    b: jnp.ndarray,
-    method: str = "paper",
-    out_dtype=None,
-) -> jnp.ndarray:
-    """C ~= A @ B with A pre-residue-cast (fast mode). B is cast per call."""
-    if prep.side != "left":
-        raise NotImplementedError("right-prepared operands: transpose instead")
-    from . import scaling as _sc
-
-    ctx = prep.ctx
-    out_dtype = jnp.dtype(out_dtype or b.dtype)
-    b64 = b.astype(jnp.float64)
-    e_mu = prep.e_scale
-    _, e_nu = _sc.scale_fast_real(jnp.zeros((1, b.shape[0])), b64, ctx)
-    bq = quantize(b64, _sc.exp2_vector(e_nu), axis=1)
-    bres = residues_from_quantized(bq, ctx, prep.n_limbs)
-    e_r = _residue_matmul(prep.residues, bres, ctx)
-    hi, lo = crt.reconstruct(e_r, ctx, method)
-    return crt.inverse_scale(hi, lo, e_mu, e_nu, out_dtype)
+# limb count for residue decomposition — kept under the historical name for
+# external callers; the formula lives in the plan layer
+_n_limbs = n_limbs_for_ctx
 
 
 def ozaki2_gemm(
@@ -176,10 +47,19 @@ def ozaki2_gemm(
       accuracy-matching setting).  mode: 'fast' | 'accu'.
     method: CRT reconstruction — 'paper' (eq. 5) | 'dd' | 'garner'.
     n_block: output-column blocking (paper SIII-A blocking variant).
+
+    Complex operands are routed to the complex plan (Karatsuba formulation);
+    use `ozaki2_cgemm` to control the formulation.
     """
     if a.dtype != b.dtype:
         raise ValueError(f"dtype mismatch {a.dtype} vs {b.dtype}")
-    out_dtype = jnp.dtype(out_dtype or a.dtype)
-    if n_moduli is None:
-        n_moduli = default_n_moduli(a.dtype, mode)
-    return _gemm_2d(a, b, int(n_moduli), mode, method, out_dtype, n_block)
+    plan = make_plan(
+        a.dtype,
+        n_moduli=n_moduli,
+        mode=mode,
+        method=method,
+        out_dtype=out_dtype,
+        n_block=n_block,
+        shape=(a.shape[-2], a.shape[-1], b.shape[-1]),
+    )
+    return run_plan(plan, a, b)

@@ -83,6 +83,69 @@ def real_tflops(m, n, k, n_moduli, hw: HW, mode="fast", prec="d", c=None):
     return 2.0 * m * n * k / t * 1e-12
 
 
+# Fixed per-GEMM-launch overhead (dispatch + epilogue barrier), used by the
+# formulation auto-selection: Karatsuba issues 3N small GEMMs per product,
+# the block embeddings one 4x-sized GEMM per modulus — at small m,n,k the
+# launch term dominates and the embeddings win (paper Fig. 1 crossover).
+GEMM_LAUNCH_S = 5e-6
+
+
+def formulation_time_s(
+    formulation: str,
+    m: int,
+    n: int,
+    k: int,
+    n_moduli: int,
+    hw: HW,
+    mode: str = "fast",
+    prec: str = "z",
+    karatsuba_launches: int = 3,
+) -> float:
+    """SIII-C time model specialized per Fig. 1 complex-product strategy.
+
+    `complex_time_s` assumes the Karatsuba op count (6 N m n k int8 ops);
+    the block embeddings (eqs. 7/8) do 4 real products worth (8 N m n k) and
+    additionally materialize the embedded operands in HBM, but need only one
+    GEMM launch per modulus.  Accu mode prices one extra modulus plane
+    (matching `complex_time_s`'s 6(N+1) op count) in every per-plane term.
+    `karatsuba_launches` is per modulus: 3 for the composed reference path,
+    1 when the backend fuses the triple into one kernel
+    (`kernels/karatsuba_fused.py`).
+    """
+    neff = n_moduli if mode == "fast" else n_moduli + 1
+    base = complex_time_s(m, n, k, n_moduli, hw, mode, prec)
+    if formulation == "karatsuba":
+        return base + karatsuba_launches * neff * GEMM_LAUNCH_S
+    extra_ops = 2 * neff * m * n * k / hw.int8_ops  # 8N mnk vs the model's 6N
+    if formulation == "block_a":
+        embed_bytes = 2 * neff * (4 * m * k + 2 * k * n)  # write+read Ahat/Bhat
+    elif formulation == "block_b":
+        embed_bytes = 2 * neff * (2 * m * k + 4 * k * n)
+    else:
+        raise ValueError(f"unknown formulation {formulation!r}")
+    return base + extra_ops + embed_bytes / hw.mem_bw + neff * GEMM_LAUNCH_S
+
+
+def select_formulation(
+    m: int,
+    n: int,
+    k: int,
+    n_moduli: int,
+    hw: HW = TPU_V5E,
+    mode: str = "fast",
+    prec: str = "z",
+    karatsuba_launches: int = 3,
+) -> str:
+    """Pick the fastest Fig. 1 complex-product strategy under the SIII-C
+    model (used by `core/plan.py` for ``formulation='auto'``)."""
+    return min(
+        ("karatsuba", "block_a", "block_b"),
+        key=lambda f: formulation_time_s(
+            f, m, n, k, n_moduli, hw, mode, prec, karatsuba_launches
+        ),
+    )
+
+
 def ozaki1_complex_time_s(m, n, k, slices: int, hw: HW) -> float:
     """Ozaki-I cost shape (SIV-B): S(S+1)/2 int8 complex products, each a
     Karatsuba triple => 3*S(S+1)/2 real int8 GEMMs (memory terms omitted —

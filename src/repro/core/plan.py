@@ -1,0 +1,206 @@
+"""Static emulation plans: every Ozaki-II GEMM is described by one object.
+
+An :class:`EmulationPlan` captures the *static* decisions of the scheme —
+dtype class (real/complex), number of CRT moduli, scaling mode, CRT
+reconstruction method, complex formulation (paper Fig. 1), output blocking
+and the K-chunk limit — and nothing data-dependent.  It is frozen/hashable so
+it can sit inside jit static arguments, `jnp.vectorize(excluded=...)` slots
+and `GemmPolicy` configs.
+
+`make_plan` is the single front door used by every public entry point
+(`ozaki2_gemm`, `ozaki2_cgemm`, the Pallas-kernel wrappers and the policy
+stack): it applies the paper's per-dtype moduli defaults and — when the
+caller passes ``formulation="auto"`` / ``n_block="auto"`` with shape hints —
+consults the SIII-C performance model (`core/perfmodel.py`) to pick the
+complex formulation and output-column blocking.
+
+The data path that *executes* a plan lives in `core/executor.py`; the plan
+itself never touches arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+from .moduli import CRTContext, make_crt_context
+from .residues import num_limbs_for_bits
+
+# Defaults matching the paper's accuracy bands (SIV-A / [30]):
+#   CGEMM-level: fast 6-9, accu 6-8;  ZGEMM/DGEMM-level: fast 13/14-18, accu 13/14-17.
+DEFAULT_MODULI = {
+    ("float32", "fast"): 8,
+    ("float32", "accu"): 7,
+    ("float64", "fast"): 16,
+    ("float64", "accu"): 15,
+    ("complex64", "fast"): 7,
+    ("complex64", "accu"): 7,
+    ("complex128", "fast"): 14,
+    ("complex128", "accu"): 14,
+}
+
+# Paper SIII-A: output-column blocks of 8192 keep the Karatsuba working set
+# resident; used by the auto n_block selection.
+DEFAULT_N_BLOCK = 8192
+
+REAL_FORMULATION = "real"
+COMPLEX_FORMULATIONS = ("karatsuba", "block_a", "block_b")
+
+_REAL_OF_COMPLEX = {"complex64": "float32", "complex128": "float64"}
+
+
+def default_n_moduli(dtype, mode: str) -> int:
+    key = (jnp.dtype(dtype).name, mode)
+    if key not in DEFAULT_MODULI:
+        raise ValueError(f"no default moduli count for {key}")
+    return DEFAULT_MODULI[key]
+
+
+def n_limbs_for_ctx(ctx: CRTContext) -> int:
+    """Limb count for the residue decomposition of one CRT context:
+    |a'| <= 2^(P'_accu + 6) <= 2^(log2(P)/2 + 6); +2 safety margin."""
+    return num_limbs_for_bits(ctx.log2_P / 2.0 + 8.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class EmulationPlan:
+    """Static description of one emulated GEMM (real or complex).
+
+    Fields are plain str/int so the plan is hashable and can be threaded as a
+    jit-static argument.  Derived objects (CRT context, limb count) are
+    recomputed on demand — `make_crt_context` is lru-cached, so this is free.
+    """
+
+    dtype: str                 # compute dtype name (float32/.../complex128)
+    n_moduli: int
+    mode: str                  # 'fast' | 'accu'
+    method: str                # CRT reconstruction: 'paper' | 'dd' | 'garner'
+    formulation: str           # 'real' | 'karatsuba' | 'block_a' | 'block_b'
+    n_block: int | None        # output-column blocking (paper SIII-A)
+    out_dtype: str             # result dtype name
+
+    # ------------------------------------------------------------ derived
+
+    @property
+    def is_complex(self) -> bool:
+        return self.formulation != REAL_FORMULATION
+
+    @property
+    def ctx(self) -> CRTContext:
+        return make_crt_context(self.n_moduli)
+
+    @property
+    def n_limbs(self) -> int:
+        return n_limbs_for_ctx(self.ctx)
+
+    @property
+    def real_out_dtype(self):
+        """dtype of each real component of the output."""
+        name = self.out_dtype
+        return jnp.dtype(_REAL_OF_COMPLEX.get(name, name))
+
+    def n_block_slices(self, n: int):
+        """Output-column block slices (one full slice when unblocked)."""
+        nb = self.n_block or n
+        return [slice(j0, j0 + nb) for j0 in range(0, n, nb)]
+
+
+def make_plan(
+    dtype,
+    n_moduli: int | None = None,
+    mode: str = "fast",
+    method: str = "paper",
+    formulation: str | None = None,
+    out_dtype=None,
+    n_block=None,
+    shape: tuple[int, int, int] | None = None,
+    hw=None,
+    fused_karatsuba: bool = False,
+) -> EmulationPlan:
+    """Build an :class:`EmulationPlan` from user-facing knobs.
+
+    dtype: compute dtype of the operands; complex dtypes yield complex plans.
+    formulation: for complex plans one of 'karatsuba' | 'block_a' | 'block_b'
+      | 'auto' (perfmodel-driven, needs `shape`); ignored/`'real'` for real.
+    n_block: int, None, or 'auto' (paper's 8192 blocking when n is larger).
+    shape: optional (m, k, n) hint for the auto selections.
+    hw: `perfmodel.HW` target for 'auto' (default: the TPU v5e preset).
+    fused_karatsuba: the executing backend fuses the Karatsuba triple into
+      one launch per modulus (the Pallas kernel path) — changes the launch
+      term the 'auto' selection charges Karatsuba.
+    """
+    dt = jnp.dtype(dtype)
+    if mode not in ("fast", "accu"):
+        raise ValueError(f"unknown mode {mode!r}")
+    is_complex = jnp.issubdtype(dt, jnp.complexfloating)
+    if n_moduli is None:
+        n_moduli = default_n_moduli(dt, mode)
+    out_dt = jnp.dtype(out_dtype or dt)
+    if jnp.issubdtype(out_dt, jnp.complexfloating) != is_complex:
+        raise ValueError(
+            f"out_dtype {out_dt.name} does not match the "
+            f"{'complex' if is_complex else 'real'} compute dtype {dt.name}"
+        )
+
+    if not is_complex:
+        formulation = REAL_FORMULATION
+    else:
+        formulation = formulation or "karatsuba"
+        if formulation == "auto":
+            formulation = _auto_formulation(
+                shape, int(n_moduli), mode, dt, hw, fused_karatsuba
+            )
+        if formulation not in COMPLEX_FORMULATIONS:
+            raise ValueError(f"unknown complex formulation {formulation!r}")
+
+    if n_block == "auto":
+        n_block = _auto_n_block(shape)
+    if n_block is not None:
+        n_block = int(n_block)
+        if n_block <= 0:
+            raise ValueError(f"n_block must be positive, got {n_block}")
+
+    return EmulationPlan(
+        dtype=dt.name,
+        n_moduli=int(n_moduli),
+        mode=mode,
+        method=method,
+        formulation=formulation,
+        n_block=n_block,
+        out_dtype=out_dt.name,
+    )
+
+
+def _auto_formulation(shape, n_moduli, mode, dt, hw, fused_karatsuba=False):
+    from . import perfmodel
+
+    if shape is None:
+        raise ValueError(
+            "formulation='auto' needs the (m, k, n) shape hint to consult "
+            "the performance model; pass shape= or pick a formulation"
+        )
+    m, k, n = shape
+    prec = "c" if dt.name == "complex64" else "z"
+    return perfmodel.select_formulation(
+        m, n, k, n_moduli,
+        hw=hw or perfmodel.TPU_V5E,
+        mode=mode,
+        prec=prec,
+        karatsuba_launches=1 if fused_karatsuba else 3,
+    )
+
+
+def _auto_n_block(shape) -> int | None:
+    if shape is None:
+        raise ValueError(
+            "n_block='auto' needs the (m, k, n) shape hint; pass shape= "
+            "or an explicit block size"
+        )
+    n = shape[2]
+    if n <= DEFAULT_N_BLOCK:
+        return None
+    # round the block count up so blocks stay balanced (paper uses flat 8192;
+    # equalizing avoids a ragged tail block)
+    blocks = math.ceil(n / DEFAULT_N_BLOCK)
+    return math.ceil(n / blocks)

@@ -5,10 +5,24 @@ so the paper's emulation is a first-class, config-selectable feature
 (`gemm_backend` in the arch configs), analogous to the paper's LD_PRELOAD
 interposition of cuBLAS calls — but composable and differentiable.
 
+Backends cover both halves of the paper: `ozaki2_f32`/`ozaki2_f64` run the
+real SGEMM/DGEMM emulation, `ozaki2_c64`/`ozaki2_c128` the complex
+CGEMM/ZGEMM emulation (SIII) with a selectable Fig. 1 `formulation` and
+output-column `n_block`.  All four build an `EmulationPlan` and run the
+shared executor (`core/executor.py`).
+
 The emulated forward is wrapped in a custom VJP: trunc() has zero gradient,
 but the emulation approximates an exact GEMM to (beyond-)float precision, so
 the correct cotangents are those of the exact GEMM — themselves computed with
 the same emulated backend (keeping the whole training step int8-dominated).
+For complex operands the cotangents use the plain (non-conjugating)
+transpose, matching JAX's `dot_general` transpose rule, so `jax.grad` of a
+real-valued loss through complex emulated matmuls agrees with the native
+path.
+
+Weight-stationary callers (serving) may pass a `PreparedOperand` as the
+weight: its scaling + residue planes were cast once up front and the
+per-call work drops to the activation side only (see `prepare_weights`).
 """
 from __future__ import annotations
 
@@ -18,10 +32,22 @@ from typing import Literal
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .gemm import ozaki2_gemm
+from .executor import PreparedOperand, gemm_prepared, run_plan
+from .plan import default_n_moduli, make_plan
 
-Backend = Literal["native", "ozaki2_f32", "ozaki2_f64"]
+Backend = Literal[
+    "native", "ozaki2_f32", "ozaki2_f64", "ozaki2_c64", "ozaki2_c128"
+]
+
+_COMPUTE_DTYPES = {
+    "native": None,
+    "ozaki2_f32": jnp.float32,
+    "ozaki2_f64": jnp.float64,
+    "ozaki2_c64": jnp.complex64,
+    "ozaki2_c128": jnp.complex128,
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,15 +58,42 @@ class GemmPolicy:
     n_moduli: int | None = None
     mode: str = "fast"            # 'fast' | 'accu'
     method: str = "paper"         # CRT reconstruction path
+    formulation: str = "karatsuba"  # complex Fig. 1 strategy (or 'auto')
+    n_block: int | None = None    # output-column blocking (or 'auto')
 
     @property
     def compute_dtype(self):
-        return {"native": None, "ozaki2_f32": jnp.float32, "ozaki2_f64": jnp.float64}[
-            self.backend
-        ]
+        return _COMPUTE_DTYPES[self.backend]
+
+    @property
+    def is_complex(self) -> bool:
+        return self.backend in ("ozaki2_c64", "ozaki2_c128")
+
+    def plan_for(self, m: int, k: int, n: int):
+        """The `EmulationPlan` this policy runs for an (m,k)x(k,n) product."""
+        if self.backend == "native":
+            raise ValueError("native policy has no emulation plan")
+        return make_plan(
+            self.compute_dtype,
+            n_moduli=self.n_moduli,
+            mode=self.mode,
+            method=self.method,
+            formulation=self.formulation if self.is_complex else None,
+            n_block=self.n_block,
+            shape=(m, k, n),
+        )
 
 
 NATIVE = GemmPolicy()
+
+
+def _real_cast(y: jnp.ndarray, dtype) -> jnp.ndarray:
+    """astype that is explicit about dropping an imaginary part."""
+    if jnp.issubdtype(y.dtype, jnp.complexfloating) and not jnp.issubdtype(
+        jnp.dtype(dtype), jnp.complexfloating
+    ):
+        y = jnp.real(y)
+    return y.astype(dtype)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
@@ -50,14 +103,9 @@ def emulated_matmul(x: jnp.ndarray, w: jnp.ndarray, policy: GemmPolicy):
 
 def _emulated_fwd_raw(x, w, policy):
     ct = policy.compute_dtype
-    y = ozaki2_gemm(
-        x.astype(ct),
-        w.astype(ct),
-        n_moduli=policy.n_moduli,
-        mode=policy.mode,
-        method=policy.method,
-    )
-    return y.astype(x.dtype)
+    plan = policy.plan_for(x.shape[-2], x.shape[-1], w.shape[-1])
+    y = run_plan(plan, x.astype(ct), w.astype(ct))
+    return _real_cast(y, x.dtype)
 
 
 def _emulated_fwd(x, w, policy):
@@ -67,19 +115,135 @@ def _emulated_fwd(x, w, policy):
 def _emulated_bwd(policy, res, g):
     x, w = res
     # dX = G @ W^T, dW = X^T @ G — also emulated (int8-engine dominated).
+    # Plain transposes (no conjugation) match JAX's dot_general transpose
+    # rule, so complex operands differentiate identically to jnp.matmul.
     dx = _emulated_fwd_raw(g, w.swapaxes(-1, -2), policy)
     dw = _emulated_fwd_raw(x.swapaxes(-1, -2), g, policy)
-    return dx.astype(x.dtype), dw.astype(w.dtype)
+    return _real_cast(dx, x.dtype), _real_cast(dw, w.dtype)
 
 
 emulated_matmul.defvjp(_emulated_fwd, _emulated_bwd)
 
 
-def policy_matmul(x: jnp.ndarray, w: jnp.ndarray, policy: GemmPolicy) -> jnp.ndarray:
-    """x: (..., k) @ w: (k, n) under the policy's backend."""
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _prepared_matmul(x: jnp.ndarray, w: PreparedOperand, policy: GemmPolicy):
+    """x @ w with the weight pre-residue-cast (fast mode, inference only)."""
+    ct = policy.compute_dtype
+    y = gemm_prepared(
+        w,
+        x.astype(ct),
+        method=policy.method,
+        formulation=policy.formulation,
+        n_block=policy.n_block,
+    )
+    return _real_cast(y, x.dtype)
+
+
+def _prepared_fwd(x, w, policy):
+    return _prepared_matmul(x, w, policy), None
+
+
+def _prepared_bwd(policy, res, g):
+    # The prepared residues carry only the weight-side scaling, which is the
+    # wrong axis for the cotangent products — grads would silently vanish
+    # through trunc().  Training must use raw weights.
+    raise ValueError(
+        "prepared-weight matmuls are inference-only; differentiate through "
+        "raw weights (emulated_matmul) instead"
+    )
+
+
+_prepared_matmul.defvjp(_prepared_fwd, _prepared_bwd)
+
+
+def policy_matmul(x: jnp.ndarray, w, policy: GemmPolicy) -> jnp.ndarray:
+    """x: (..., k) @ w: (k, n) under the policy's backend.
+
+    `w` may be a raw array or a right-side `PreparedOperand` (weights cast
+    once, amortized across calls — the serving fast path).
+    """
+    if isinstance(w, PreparedOperand):
+        if policy.backend == "native":
+            raise ValueError(
+                "prepared weights require an emulated (ozaki2_*) policy "
+                "backend; the native policy runs jnp.matmul on raw weights"
+            )
+        if w.side != "right":
+            raise ValueError("policy_matmul expects a side='right' prepared weight")
+        if policy.mode != "fast":
+            raise ValueError(
+                "prepared weights are fast-mode only (the accurate-mode "
+                f"bound couples both operands); policy.mode={policy.mode!r}"
+            )
+        expect = policy.n_moduli or default_n_moduli(
+            policy.compute_dtype, policy.mode
+        )
+        if w.n_moduli != expect:
+            raise ValueError(
+                f"prepared weight has n_moduli={w.n_moduli} but the policy "
+                f"resolves to {expect}; re-prepare with prepare_weights(policy)"
+            )
+        if jnp.dtype(w.dtype) != jnp.dtype(policy.compute_dtype):
+            raise ValueError(
+                f"prepared weight was cast for {w.dtype} but the policy "
+                f"computes in {jnp.dtype(policy.compute_dtype).name}; "
+                "re-prepare with prepare_weights(policy)"
+            )
+        n = w.operand_shape[1]
+        lead = x.shape[:-1]
+        y = _prepared_matmul(x.reshape((-1, x.shape[-1])), w, policy)
+        return y.reshape(lead + (n,))
     if policy.backend == "native":
         return jnp.matmul(x, w)
     lead = x.shape[:-1]
     x2 = x.reshape((-1, x.shape[-1]))
     y = emulated_matmul(x2, w, policy)
     return y.reshape(lead + (w.shape[-1],))
+
+
+def prepare_weights(params, policy: GemmPolicy):
+    """Pre-residue-cast every linear weight in a param tree (serving).
+
+    Walks the tree and replaces the ``"w"`` leaf of each linear bundle
+    (the dicts produced by `models.layers.linear_abstract`, possibly stacked
+    with a leading layers axis for scanned groups) by a right-side
+    `PreparedOperand`, so step 1 of the scheme runs once per weight instead
+    of once per request.  Only valid for fast-mode emulated policies: the
+    accurate-mode bound couples both operands, so asking to prepare an
+    'accu' policy is a misconfiguration and raises (a silent no-op would
+    quietly forfeit the requested amortization).  A native policy returns
+    the tree unchanged (there is nothing to prepare).
+    """
+    if policy.backend == "native":
+        return params
+    if policy.mode != "fast":
+        raise ValueError(
+            "prepare_weights requires a fast-mode policy (the accurate-mode "
+            f"scaling bound couples both operands); got mode={policy.mode!r}"
+        )
+    n_moduli = policy.n_moduli or default_n_moduli(policy.compute_dtype, policy.mode)
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for key, val in node.items():
+                if (
+                    key == "w"
+                    and isinstance(val, (jnp.ndarray, np.ndarray))
+                    and val.ndim >= 2
+                    and jnp.issubdtype(val.dtype, jnp.inexact)
+                ):
+                    # jnp.asarray: checkpoint restores may hand numpy leaves
+                    out[key] = PreparedOperand(
+                        jnp.asarray(val).astype(policy.compute_dtype),
+                        n_moduli,
+                        side="right",
+                    )
+                else:
+                    out[key] = walk(val)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(params)

@@ -5,10 +5,11 @@ from .crt_garner import crt_garner
 from .flash_attention import flash_attention
 from .int8_mod_gemm import int8_mod_gemm
 from .karatsuba_fused import karatsuba_mod_gemm
-from .ops import ozaki2_cgemm_kernels, ozaki2_gemm_kernels
+from .ops import KernelBackend, ozaki2_cgemm_kernels, ozaki2_gemm_kernels
 from .residue_cast import residue_cast
 
 __all__ = [
+    "KernelBackend",
     "crt_garner",
     "flash_attention",
     "int8_mod_gemm",

@@ -1,22 +1,28 @@
 """jit'd public wrappers around the Pallas kernels + a full kernel-path GEMM.
 
-`ozaki2_gemm_kernels` / `ozaki2_cgemm_kernels` chain the three kernels into
-the complete emulation pipeline exactly as it would run on a TPU chip:
-residue_cast -> N x int8_mod_gemm (or fused Karatsuba) -> crt_garner.
+`ozaki2_gemm_kernels` / `ozaki2_cgemm_kernels` run the complete emulation
+pipeline exactly as it would run on a TPU chip: residue_cast -> N x
+int8_mod_gemm (or fused Karatsuba) -> crt_garner.  The pipeline structure is
+not duplicated here: both entry points build an `EmulationPlan` and run the
+shared executor (`repro.core.executor`) with :class:`KernelBackend`, which
+maps the executor's residue primitives onto the Pallas kernels.  The
+block-embedding formulations (paper eqs. 7/8) compose in the executor from
+`residue_matmul`, so the kernel path supports all three Fig. 1 strategies.
+
 On CPU the kernels execute in interpret mode; tests compare the pipeline
 against `repro.core` (which itself is validated against exact integers).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 
-from ..core import scaling
-from ..core.gemm import default_n_moduli
-from ..core.moduli import make_crt_context
-from ..core.residues import num_limbs_for_bits
+from ..core.executor import chunked_residue_matmul, execute_plan
+from ..core.moduli import CRTContext
+from ..core.plan import default_n_moduli, make_plan
 from .common import split_scale_exponent
 from .crt_garner import crt_garner
 from .int8_mod_gemm import int8_mod_gemm
@@ -24,47 +30,84 @@ from .karatsuba_fused import karatsuba_mod_gemm
 from .residue_cast import residue_cast
 
 
-def _prep(a, b, n_moduli, mode, complex_input):
-    ctx = make_crt_context(n_moduli)
-    if complex_input:
-        ar, ai = jnp.real(a), jnp.imag(a)
-        br, bi = jnp.real(b), jnp.imag(b)
-        if mode == "fast":
-            e_mu, e_nu = scaling.scale_fast_complex(ar, ai, br, bi, ctx)
-        else:
-            e_mu, e_nu = scaling.scale_accurate_complex(ar, ai, br, bi, ctx)
-        parts = (ar, ai, br, bi)
-    else:
-        if mode == "fast":
-            e_mu, e_nu = scaling.scale_fast_real(a, b, ctx)
-        else:
-            e_mu, e_nu = scaling.scale_accurate_real(a, b, ctx)
-        parts = (a, b)
-    n_limbs = num_limbs_for_bits(ctx.log2_P / 2.0 + 8.0)
-    return ctx, e_mu, e_nu, n_limbs, parts
+@dataclasses.dataclass(frozen=True)
+class KernelBackend:
+    """Residue backend running the Pallas TPU kernels (interpret mode on CPU).
 
+    CRT reconstruction is always the Garner mixed-radix kernel (the only
+    TPU-native path — no f64 on the VPU); f64-grade output uses its
+    double-single (~2^-48) mode.
+    """
 
-def _cast(x, e, axis, ctx, n_limbs, interpret):
-    s1, s2 = split_scale_exponent(e)
-    return residue_cast(
-        x.astype(jnp.float32),
-        s1,
-        s2,
-        moduli=ctx.moduli,
-        n_limbs=n_limbs,
-        scale_axis=axis,
-        interpret=interpret,
-    )
+    interpret: bool | None = None
+
+    def cast(self, x, e, axis, ctx: CRTContext, n_limbs: int):
+        s1, s2 = split_scale_exponent(e)
+        return residue_cast(
+            x.astype(jnp.float32),
+            s1,
+            s2,
+            moduli=ctx.moduli,
+            n_limbs=n_limbs,
+            scale_axis=axis,
+            interpret=self.interpret,
+        )
+
+    def _mod_gemm_stack(self, ares, bres, ctx: CRTContext):
+        """Un-chunked per-modulus kernel launches (k <= K_CHUNK_LIMIT)."""
+        planes = [
+            int8_mod_gemm(
+                ares[l], bres[l], p=int(ctx.moduli[l]), interpret=self.interpret
+            )
+            for l in range(ctx.n)
+        ]
+        return jnp.stack(planes, axis=0)
+
+    def residue_matmul(self, ares, bres, ctx: CRTContext):
+        return chunked_residue_matmul(
+            lambda a, b: self._mod_gemm_stack(a, b, ctx), ares, bres, ctx
+        )
+
+    def karatsuba(self, arr, ari, brr, bri, ctx: CRTContext):
+        """Fused-Karatsuba modular kernel: one launch per modulus."""
+        er_planes, ei_planes = [], []
+        for l in range(ctx.n):
+            cr, ci = karatsuba_mod_gemm(
+                arr[l],
+                ari[l],
+                brr[l],
+                bri[l],
+                p=int(ctx.moduli[l]),
+                interpret=self.interpret,
+            )
+            er_planes.append(cr)
+            ei_planes.append(ci)
+        return jnp.stack(er_planes, axis=0), jnp.stack(ei_planes, axis=0)
+
+    def reconstruct(self, e_res, e_mu, e_nu, ctx: CRTContext, method, out_dtype):
+        if method != "garner":
+            raise ValueError(
+                f"the kernel backend only reconstructs via 'garner' (no f64 "
+                f"on the TPU VPU); plan requested method={method!r}"
+            )
+        out_dd = jnp.dtype(out_dtype) == jnp.float64
+        out = crt_garner(
+            e_res, e_mu, e_nu, ctx, out_dd=out_dd, interpret=self.interpret
+        )
+        if out_dd:
+            return out[0].astype(jnp.float64) + out[1].astype(jnp.float64)
+        return out
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_moduli", "mode", "interpret")
+    jax.jit, static_argnames=("n_moduli", "mode", "n_block", "interpret")
 )
 def ozaki2_gemm_kernels(
     a: jnp.ndarray,
     b: jnp.ndarray,
     n_moduli: int | None = None,
     mode: str = "fast",
+    n_block: int | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Full kernel-path real GEMM emulation (f32 in / f32 out).
@@ -74,45 +117,48 @@ def ozaki2_gemm_kernels(
     """
     if n_moduli is None:
         n_moduli = default_n_moduli(jnp.float32, mode)
-    ctx, e_mu, e_nu, n_limbs, (ax, bx) = _prep(a, b, n_moduli, mode, False)
-    ares = _cast(ax, e_mu, 0, ctx, n_limbs, interpret)
-    bres = _cast(bx, e_nu, 1, ctx, n_limbs, interpret)
-    e_planes = [
-        int8_mod_gemm(ares[l], bres[l], p=int(ctx.moduli[l]), interpret=interpret)
-        for l in range(ctx.n)
-    ]
-    e_res = jnp.stack(e_planes, axis=0)
-    return crt_garner(e_res, e_mu, e_nu, ctx, interpret=interpret)
+    plan = make_plan(
+        jnp.float32,
+        n_moduli=n_moduli,
+        mode=mode,
+        method="garner",
+        n_block=n_block,
+        out_dtype=jnp.float32,
+        shape=(a.shape[-2], a.shape[-1], b.shape[-1]),
+    )
+    return execute_plan(plan, a, b, KernelBackend(interpret))
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_moduli", "mode", "interpret")
+    jax.jit,
+    static_argnames=("n_moduli", "mode", "formulation", "n_block", "interpret"),
 )
 def ozaki2_cgemm_kernels(
     a: jnp.ndarray,
     b: jnp.ndarray,
     n_moduli: int | None = None,
     mode: str = "fast",
+    formulation: str = "karatsuba",
+    n_block: int | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Full kernel-path complex GEMM emulation (complex64 in/out) using the
-    fused-Karatsuba modular kernel (one launch per modulus)."""
+    """Full kernel-path complex GEMM emulation (complex64 in/out).
+
+    formulation 'karatsuba' uses the fused-Karatsuba modular kernel (one
+    launch per modulus); 'block_a'/'block_b'/'auto' use the block embeddings
+    composed over `int8_mod_gemm`.
+    """
     if n_moduli is None:
         n_moduli = default_n_moduli(jnp.complex64, mode)
-    ctx, e_mu, e_nu, n_limbs, (ar, ai, br, bi) = _prep(a, b, n_moduli, mode, True)
-    arr = _cast(ar, e_mu, 0, ctx, n_limbs, interpret)
-    ari = _cast(ai, e_mu, 0, ctx, n_limbs, interpret)
-    brr = _cast(br, e_nu, 1, ctx, n_limbs, interpret)
-    bri = _cast(bi, e_nu, 1, ctx, n_limbs, interpret)
-    er_planes, ei_planes = [], []
-    for l in range(ctx.n):
-        cr, ci = karatsuba_mod_gemm(
-            arr[l], ari[l], brr[l], bri[l], p=int(ctx.moduli[l]), interpret=interpret
-        )
-        er_planes.append(cr)
-        ei_planes.append(ci)
-    er = jnp.stack(er_planes, axis=0)
-    ei = jnp.stack(ei_planes, axis=0)
-    cr = crt_garner(er, e_mu, e_nu, ctx, interpret=interpret)
-    ci = crt_garner(ei, e_mu, e_nu, ctx, interpret=interpret)
-    return jax.lax.complex(cr, ci)
+    plan = make_plan(
+        jnp.complex64,
+        n_moduli=n_moduli,
+        mode=mode,
+        method="garner",
+        formulation=formulation,
+        n_block=n_block,
+        out_dtype=jnp.complex64,
+        shape=(a.shape[-2], a.shape[-1], b.shape[-1]),
+        fused_karatsuba=True,
+    )
+    return execute_plan(plan, a, b, KernelBackend(interpret))

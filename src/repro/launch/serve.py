@@ -25,6 +25,11 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=64)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument(
+        "--prepare", action="store_true",
+        help="residue-cast weights once at startup (emulated backends: "
+             "amortizes the scheme's step 1 across all requests)",
+    )
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
@@ -35,6 +40,7 @@ def main():
         model, params,
         cache_len=args.prompt_len + npre + args.new_tokens,
         batch_size=args.batch,
+        prepare=args.prepare,
     )
     rng = np.random.default_rng(0)
     batch = {"tokens": jnp.asarray(

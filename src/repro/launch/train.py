@@ -37,7 +37,8 @@ def main():
     ap.add_argument("--mesh", default=None, help="DxM, e.g. 16x16")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--backend", default="native",
-                    choices=["native", "ozaki2_f32", "ozaki2_f64"])
+                    choices=["native", "ozaki2_f32", "ozaki2_f64",
+                             "ozaki2_c64", "ozaki2_c128"])
     ap.add_argument("--seq-shard", action="store_true")
     ap.add_argument("--vocab-chunk", type=int, default=None)
     args = ap.parse_args()

@@ -48,6 +48,9 @@ def linear_abstract(d_in, d_out, axes, dtype, bias=False, scale=None) -> dict:
 
 
 def apply_linear(p: dict, x: jnp.ndarray, policy: GemmPolicy) -> jnp.ndarray:
+    """p["w"] may be a raw (k, n) array or a right-side `PreparedOperand`
+    (weights residue-cast once by `core.policy.prepare_weights` — the
+    weight-stationary serving fast path); `policy_matmul` handles both."""
     y = policy_matmul(x, p["w"], policy)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)

@@ -2,6 +2,13 @@
 
 The decode step is the unit the `decode_*`/`long_*` dry-run shapes lower:
 one new token against a KV/state cache of the configured length.
+
+With an emulated (Ozaki-II) GEMM policy, `prepare=True` residue-casts
+every linear weight once at engine construction (`core.policy.prepare_weights`):
+step 1 of the scheme for the weight side — scaling, truncation and the N int8
+residue planes — is amortized across all subsequent requests, and each call
+pays only the activation-side cast.  Bit-identical to the unprepared fast-mode
+path.
 """
 from __future__ import annotations
 
@@ -10,12 +17,23 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..core.policy import prepare_weights
 from ..models.transformer import Model
 
 
 class ServeEngine:
-    def __init__(self, model: Model, params, cache_len: int, batch_size: int):
+    def __init__(
+        self,
+        model: Model,
+        params,
+        cache_len: int,
+        batch_size: int,
+        prepare: bool = False,
+    ):
         self.model = model
+        policy = model.cfg.gemm_policy
+        if prepare and policy.backend != "native":
+            params = prepare_weights(params, policy)
         self.params = params
         self.cache_len = cache_len
         self.batch_size = batch_size

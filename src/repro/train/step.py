@@ -65,8 +65,14 @@ def make_train_step(
             mbs = jax.tree.map(
                 lambda x: x.reshape((grad_accum, -1) + x.shape[1:]), batch
             )
+            # accumulate in at least f32, widening to the param's own dtype
+            # class (f64 / complex64 / complex128 grads must not be forced
+            # through a narrower carry: lax.scan requires equal carry types)
             zero = jax.tree.map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params
+                lambda p: jnp.zeros(
+                    p.shape, jnp.promote_types(jnp.float32, p.dtype)
+                ),
+                params,
             )
             (gsum, lsum), _ = jax.lax.scan(micro, (zero, 0.0), mbs)
             grads = jax.tree.map(lambda g: g / grad_accum, gsum)

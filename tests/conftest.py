@@ -7,6 +7,11 @@ import pytest
 
 import repro  # noqa: F401  (enables x64 for the numeric core)
 
+# Fast default profile (see pytest.ini): shared small GEMM shapes so tier-1
+# finishes in minutes on a CPU host.  Large-shape coverage lives in tests
+# marked `slow` (deselected by default, run in CI's slow job).
+FAST_M, FAST_K, FAST_N = 32, 96, 24
+
 
 @pytest.fixture
 def rng():

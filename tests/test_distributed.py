@@ -43,7 +43,7 @@ def test_optimizer_spec_zero1():
     # 2-way data mesh: only .shape is consulted)
     from jax.sharding import AbstractMesh
 
-    amesh = AbstractMesh((2, 1), ("data", "model"))
+    amesh = AbstractMesh((("data", 2), ("model", 1)))
     spec2 = optimizer_spec(P(None, None), (3, 64), amesh)
     assert spec2 == P(None, "data")
 
@@ -86,6 +86,14 @@ def _run_sub(body: str):
     return res.stdout
 
 
+import pytest
+
+# The 8-host-device subprocess tests compile full (reduced) models under
+# SPMD and need several minutes of CPU each — slow-profile only (pytest.ini
+# deselects `slow` by default; CI's slow job runs them).
+
+
+@pytest.mark.slow
 def test_compressed_psum_subprocess():
     out = _run_sub(
         """
@@ -118,6 +126,7 @@ def test_compressed_psum_subprocess():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_sharded_train_step_matches_single_device():
     out = _run_sub(
         """
@@ -159,6 +168,7 @@ def test_sharded_train_step_matches_single_device():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_elastic_reshard_subprocess(tmp_path):
     out = _run_sub(
         f"""

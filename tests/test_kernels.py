@@ -108,6 +108,23 @@ def test_full_kernel_cgemm_pipeline(rng):
     assert np.max(np.abs(y - expect)) / scale < 1e-5
 
 
+@pytest.mark.parametrize("formulation", ["block_a", "block_b"])
+def test_kernel_block_formulations_match_karatsuba(rng, formulation):
+    """The block embeddings (eqs. 7/8), composed in the shared executor over
+    `int8_mod_gemm`, produce residues identical to the fused-Karatsuba
+    kernel => bitwise-equal outputs on the kernel path too."""
+    m, k, n = 128, 128, 128
+    a = ((rng.random((m, k)) - 0.5) + 1j * (rng.random((m, k)) - 0.5)).astype(np.complex64)
+    b = ((rng.random((k, n)) - 0.5) + 1j * (rng.random((k, n)) - 0.5)).astype(np.complex64)
+    base = np.asarray(ozaki2_cgemm_kernels(jnp.asarray(a), jnp.asarray(b), n_moduli=4))
+    alt = np.asarray(
+        ozaki2_cgemm_kernels(
+            jnp.asarray(a), jnp.asarray(b), n_moduli=4, formulation=formulation
+        )
+    )
+    np.testing.assert_array_equal(base, alt)
+
+
 @pytest.mark.parametrize(
     "b,s,h,kv,d", [(2, 256, 4, 2, 64), (1, 512, 8, 1, 32), (2, 128, 4, 4, 64)]
 )

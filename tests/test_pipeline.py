@@ -3,7 +3,10 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
 
+
+@pytest.mark.slow  # 4-host-device SPMD subprocess: minutes of compile on CPU
 def test_pipeline_matches_sequential():
     code = textwrap.dedent(
         """

@@ -1,0 +1,279 @@
+"""The plan/executor layer: one pipeline behind every public entry point.
+
+Equivalence guarantees checked here:
+  * `run_plan` on a reference-backend plan is bit-for-bit what the public
+    wrappers (`ozaki2_gemm` / `ozaki2_cgemm`) return, across
+    {f32, f64, c64, c128} x {fast, accu} x all three complex formulations —
+    i.e. the wrappers really are thin and there is only one pipeline.
+  * each combination stays inside the paper's accuracy band vs a
+    long-double reference (guards the executor itself, not just wiring),
+  * `PreparedOperand` (both sides, real and complex, batched) is
+    bit-identical to the direct fast-mode pipeline,
+  * the policy stack runs complex emulation forward+backward under jit with
+    cotangents matching native `jnp.matmul`,
+  * the serve engine's prepared weights reproduce unprepared generation
+    exactly,
+  * the perfmodel-driven 'auto' selections return valid, sensible choices.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import FAST_K, FAST_M, FAST_N, phi_matrix
+from repro.core import (
+    GemmPolicy,
+    PreparedOperand,
+    gemm_prepared,
+    make_plan,
+    ozaki2_cgemm,
+    ozaki2_gemm,
+    policy_matmul,
+    prepare_weights,
+    run_plan,
+)
+from repro.core.executor import REFERENCE
+from repro.core.plan import DEFAULT_N_BLOCK
+from repro.core import perfmodel
+
+M, K, N = FAST_M, FAST_K, FAST_N
+
+REAL_DTYPES = [np.float32, np.float64]
+COMPLEX_DTYPES = [np.complex64, np.complex128]
+N_MODULI = {"float32": 8, "float64": 14, "complex64": 7, "complex128": 14}
+BAND = {"float32": 2e-4, "float64": 1e-12, "complex64": 2e-3, "complex128": 1e-11}
+
+
+def _ref(a, b):
+    hp = np.clongdouble if np.iscomplexobj(a) else np.longdouble
+    return a.astype(hp) @ b.astype(hp)
+
+
+def _maxrel(c, ref):
+    return float(np.max(np.abs(c - ref)) / np.max(np.abs(ref)))
+
+
+@pytest.mark.parametrize("mode", ["fast", "accu"])
+@pytest.mark.parametrize("dtype", REAL_DTYPES)
+def test_real_plan_matches_wrapper_bitwise(rng, dtype, mode):
+    a = phi_matrix(rng, (M, K), 0.5, dtype)
+    b = phi_matrix(rng, (K, N), 0.5, dtype)
+    nm = N_MODULI[np.dtype(dtype).name]
+    plan = make_plan(dtype, n_moduli=nm, mode=mode)
+    got = np.asarray(run_plan(plan, jnp.asarray(a), jnp.asarray(b), REFERENCE))
+    want = np.asarray(ozaki2_gemm(jnp.asarray(a), jnp.asarray(b), nm, mode))
+    np.testing.assert_array_equal(got, want)
+    assert _maxrel(got, _ref(a, b)) < BAND[np.dtype(dtype).name]
+
+
+@pytest.mark.parametrize("formulation", ["karatsuba", "block_a", "block_b"])
+@pytest.mark.parametrize("mode", ["fast", "accu"])
+@pytest.mark.parametrize("dtype", COMPLEX_DTYPES)
+def test_complex_plan_matches_wrapper_bitwise(rng, dtype, mode, formulation):
+    a = phi_matrix(rng, (M, K), 0.5, dtype)
+    b = phi_matrix(rng, (K, N), 0.5, dtype)
+    nm = N_MODULI[np.dtype(dtype).name]
+    plan = make_plan(dtype, n_moduli=nm, mode=mode, formulation=formulation)
+    got = np.asarray(run_plan(plan, jnp.asarray(a), jnp.asarray(b), REFERENCE))
+    want = np.asarray(
+        ozaki2_cgemm(jnp.asarray(a), jnp.asarray(b), nm, mode, formulation=formulation)
+    )
+    np.testing.assert_array_equal(got, want)
+    assert _maxrel(got, _ref(a, b)) < BAND[np.dtype(dtype).name]
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.complex128])
+def test_n_blocked_plan_is_bitwise_equal(rng, dtype):
+    a = phi_matrix(rng, (M, K), 0.5, dtype)
+    b = phi_matrix(rng, (K, N), 0.5, dtype)
+    nm = N_MODULI[np.dtype(dtype).name]
+    fn = ozaki2_cgemm if np.iscomplexobj(a) else ozaki2_gemm
+    full = np.asarray(fn(jnp.asarray(a), jnp.asarray(b), nm))
+    blocked = np.asarray(fn(jnp.asarray(a), jnp.asarray(b), nm, n_block=7))
+    np.testing.assert_array_equal(full, blocked)
+
+
+# ------------------------------------------------------- prepared operands
+
+
+def test_prepared_right_side_matches_direct(rng):
+    """Satellite regression: the formerly-NotImplemented side='right' path
+    is bit-compatible with the direct fast-mode `ozaki2_gemm`."""
+    b = phi_matrix(rng, (K, N), 1.0, np.float64)
+    prep = PreparedOperand(jnp.asarray(b), 14, side="right")
+    for seed in range(3):
+        a = phi_matrix(np.random.default_rng(seed), (M, K), 1.0, np.float64)
+        c1 = np.asarray(gemm_prepared(prep, jnp.asarray(a)))
+        c2 = np.asarray(ozaki2_gemm(jnp.asarray(a), jnp.asarray(b), 14, "fast"))
+        np.testing.assert_array_equal(c1, c2)
+
+
+@pytest.mark.parametrize("side", ["left", "right"])
+def test_prepared_complex_matches_direct(rng, side):
+    a = phi_matrix(rng, (M, K), 1.0, np.complex128)
+    b = phi_matrix(rng, (K, N), 1.0, np.complex128)
+    fixed, other = (a, b) if side == "left" else (b, a)
+    prep = PreparedOperand(jnp.asarray(fixed), 14, side=side)
+    c1 = np.asarray(gemm_prepared(prep, jnp.asarray(other)))
+    c2 = np.asarray(ozaki2_cgemm(jnp.asarray(a), jnp.asarray(b), 14, "fast"))
+    np.testing.assert_array_equal(c1, c2)
+    # the policy knobs apply to the prepared path too: output-column
+    # blocking slices the same residues, so the result is still bitwise equal
+    c3 = np.asarray(gemm_prepared(prep, jnp.asarray(other), n_block=7))
+    np.testing.assert_array_equal(c3, c2)
+
+
+def test_prepared_batched_weights_slice_like_scan(rng):
+    """Stacked (L, k, n) weights prepare to (L, N, k, n) residues that scan
+    slices per layer — the layout the serve engine relies on."""
+    w = np.stack(
+        [phi_matrix(rng, (K, N), 0.5, np.float64) for _ in range(3)]
+    )
+    prep = PreparedOperand(jnp.asarray(w), 14, side="right")
+    assert prep.residues[0].shape == (3, 14, K, N)
+    sliced = jax.tree.map(lambda x: x[1], prep)
+    a = phi_matrix(rng, (M, K), 0.5, np.float64)
+    c1 = np.asarray(gemm_prepared(sliced, jnp.asarray(a)))
+    c2 = np.asarray(ozaki2_gemm(jnp.asarray(a), jnp.asarray(w[1]), 14, "fast"))
+    np.testing.assert_array_equal(c1, c2)
+
+
+# ---------------------------------------------------------- policy stack
+
+
+@pytest.mark.parametrize("backend,dtype", [
+    ("ozaki2_c64", np.complex64),
+    ("ozaki2_c128", np.complex128),
+])
+def test_policy_complex_forward_backward_jit(rng, backend, dtype):
+    """Acceptance: complex emulated matmul runs fwd+bwd under jit and its
+    cotangents match native `jnp.matmul` (non-conjugating transpose)."""
+    pol = GemmPolicy(backend=backend, n_moduli=N_MODULI[np.dtype(dtype).name])
+    x = jnp.asarray(phi_matrix(rng, (M, K), 0.5, dtype))
+    w = jnp.asarray(phi_matrix(rng, (K, N), 0.5, dtype))
+    g = jnp.asarray(phi_matrix(rng, (M, N), 0.5, dtype))
+
+    @jax.jit
+    def fwd(x, w):
+        return policy_matmul(x, w, pol)
+
+    y, vjp = jax.vjp(fwd, x, w)
+    dx, dw = vjp(g)
+    yn, vjpn = jax.vjp(jnp.matmul, x, w)
+    dxn, dwn = vjpn(g)
+    tol = 1e-4 if dtype == np.complex64 else 1e-12
+    scale = float(jnp.max(jnp.abs(yn)))
+    assert float(jnp.max(jnp.abs(y - yn))) / scale < tol
+    assert float(jnp.max(jnp.abs(dx - dxn))) / float(jnp.max(jnp.abs(dxn))) < tol
+    assert float(jnp.max(jnp.abs(dw - dwn))) / float(jnp.max(jnp.abs(dwn))) < tol
+
+
+def test_model_with_complex_policy_trains(rng):
+    """Acceptance: a model configured with a complex GemmPolicy backend runs
+    forward+backward through the emulated complex path under jit."""
+    from repro.configs import get_reduced
+    from repro.models import Model
+
+    cfg = dataclasses.replace(
+        get_reduced("starcoder2-3b"),
+        gemm_policy=GemmPolicy(backend="ozaki2_c64", n_moduli=6),
+        dtype="float32",
+        n_layers=1,
+    )
+    cfg_native = dataclasses.replace(cfg, gemm_policy=GemmPolicy())
+    m_em, m_nat = Model(cfg), Model(cfg_native)
+    params = m_em.init(jax.random.PRNGKey(0))
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)
+    batch = {"tokens": tokens}
+
+    @jax.jit
+    def loss_and_grad(p):
+        return jax.value_and_grad(lambda q: m_em.loss(q, batch)[0])(p)
+
+    l_em, g = loss_and_grad(params)
+    l_nat, _ = m_nat.loss(params, batch)
+    np.testing.assert_allclose(float(l_em), float(l_nat), rtol=1e-3)
+    assert all(
+        np.isfinite(np.asarray(x, np.float32)).all() for x in jax.tree.leaves(g)
+    )
+
+
+def test_serve_engine_prepared_weights_match(rng):
+    """Engine-level weight preparation is bit-transparent: generated tokens
+    match the unprepared emulated engine."""
+    from repro.configs import get_reduced
+    from repro.models import Model
+    from repro.serve.engine import ServeEngine
+
+    cfg = dataclasses.replace(
+        get_reduced("starcoder2-3b"),
+        gemm_policy=GemmPolicy(backend="ozaki2_f32", n_moduli=6),
+        dtype="float32",
+        n_layers=1,
+    )
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (1, 8)), jnp.int32)
+    batch = {"tokens": tokens}
+    plain = ServeEngine(model, params, cache_len=16, batch_size=1)
+    prepped = ServeEngine(model, params, cache_len=16, batch_size=1, prepare=True)
+    t1 = np.asarray(plain.generate(batch, max_new_tokens=2))
+    t2 = np.asarray(prepped.generate(batch, max_new_tokens=2))
+    np.testing.assert_array_equal(t1, t2)
+
+
+def test_chunked_residue_matmul_exact_beyond_limit(rng):
+    """The single shared K-chunk loop (executor.chunked_residue_matmul)
+    reduces mod p between int32-exact chunks: bit-exact vs int64 for
+    k > K_CHUNK_LIMIT."""
+    from repro.core.executor import REFERENCE
+    from repro.core.moduli import K_CHUNK_LIMIT, make_crt_context
+
+    ctx = make_crt_context(2)
+    k = K_CHUNK_LIMIT + 513
+    ares = rng.integers(-127, 128, size=(2, 4, k)).astype(np.int8)
+    bres = rng.integers(-127, 128, size=(2, k, 3)).astype(np.int8)
+    got = np.asarray(
+        REFERENCE.residue_matmul(jnp.asarray(ares), jnp.asarray(bres), ctx)
+    )
+    exact = np.einsum("nmk,nkj->nmj", ares.astype(np.int64), bres.astype(np.int64))
+    for l, p in enumerate(ctx.moduli):
+        r = exact[l] % p
+        r = np.where(r > (p - 1) // 2, r - p, r)
+        np.testing.assert_array_equal(got[l], r)
+
+
+# ------------------------------------------------------- auto selection
+
+
+def test_auto_formulation_and_n_block():
+    # tiny product: launch overhead dominates -> a block embedding wins
+    tiny = make_plan(np.complex128, n_moduli=14, formulation="auto",
+                     shape=(64, 64, 64))
+    assert tiny.formulation in ("block_a", "block_b")
+    # large product: Karatsuba's 6N vs 8N op count dominates
+    big = make_plan(np.complex128, n_moduli=14, formulation="auto",
+                    shape=(8192, 8192, 8192))
+    assert big.formulation == "karatsuba"
+    # block_a favoured when m < n, block_b when m > n (embedding traffic)
+    assert perfmodel.select_formulation(64, 4096, 64, 14) == "block_a"
+    assert perfmodel.select_formulation(4096, 64, 64, 14) == "block_b"
+    # auto n_block: off below the paper's 8192, balanced blocks above
+    assert make_plan(np.complex64, n_moduli=7, n_block="auto",
+                     shape=(256, 256, 4096)).n_block is None
+    nb = make_plan(np.complex64, n_moduli=7, n_block="auto",
+                   shape=(256, 256, 20000)).n_block
+    assert nb is not None and nb <= DEFAULT_N_BLOCK
+
+
+def test_plan_is_static_and_hashable():
+    p1 = make_plan(np.complex64, n_moduli=7)
+    p2 = make_plan(np.complex64, n_moduli=7)
+    assert p1 == p2 and hash(p1) == hash(p2)
+    assert p1.is_complex and p1.real_out_dtype == jnp.float32
+    with pytest.raises(ValueError):
+        make_plan(np.complex64, formulation="nope")
+    with pytest.raises(ValueError):
+        make_plan(np.float32, mode="nope")

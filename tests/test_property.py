@@ -1,6 +1,11 @@
 """Hypothesis property tests on the system's numeric invariants."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="optional dependency: property tests need hypothesis"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.moduli import make_crt_context
