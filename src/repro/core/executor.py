@@ -13,6 +13,13 @@ parameterized by an :class:`EmulationPlan` (static decisions) and a
   karatsuba(arr, ari, brr, bri)  fused complex residue product (3 GEMMs)
   reconstruct(e_res, e_mu, e_nu, method, out_dtype)  CRT + inverse scaling
 
+plus two OPTIONAL stacked variants — `cast_stack` / `reconstruct_stack`
+operating on an (S, ...) leading stack that shares scale exponents — which
+the complex pipeline uses (via `_cast_pair` / `_reconstruct_pair`) to cast
+and reconstruct real/imag parts together; backends without them (the
+reference and per-modulus kernel backends) transparently fall back to two
+calls with bitwise-identical results.
+
 `ReferenceBackend` is the jnp path (exact f64 host arithmetic, all three CRT
 methods); `repro.kernels.ops.KernelBackend` is the Pallas TPU path.  The two
 block-embedding formulations (paper eqs. 7/8) are composed here from
@@ -41,15 +48,43 @@ def _sym_mod_stack(d: jnp.ndarray, ctx: CRTContext) -> jnp.ndarray:
     return jnp.stack(outs, axis=0)
 
 
-def chunked_residue_matmul(mod_gemm_stack, ares, bres, ctx: CRTContext):
+def chunked_residue_matmul(
+    mod_gemm_stack, ares, bres, ctx: CRTContext, carry_epilogue: bool = False
+):
     """K-chunk an (N,m,k)x(N,k,n) residue product so every int8 GEMM
     accumulates exactly in int32 (k <= K_CHUNK_LIMIT per call), reducing
     mod p between chunks (residue arithmetic is closed).
 
-    `mod_gemm_stack(ares, bres) -> (N,m,n) int8` is the backend's un-chunked
-    per-modulus primitive; this is the single implementation of the chunking
-    invariant shared by every backend.
+    Two chunk-combine strategies share this single implementation of the
+    chunking invariant:
+
+      * ``carry_epilogue=False`` — `mod_gemm_stack(ares, bres) -> (N,m,n)
+        int8`: chunk residues are summed as int32 host-side and reduced once
+        (the jnp reference path).
+      * ``carry_epilogue=True`` — `mod_gemm_stack(ares, bres, carry) ->
+        (N,m,n) int8`: the previous chunk's residues are threaded through the
+        backend's carry input and folded into its *kernel epilogue* mod, so
+        on the kernel path chunked-K stays one batched launch per chunk with
+        no host-side per-modulus loop.  On this path `ares`/`bres` (and the
+        carry) may be pytrees of same-K stacks — the fused-Karatsuba product
+        passes its (R, I) plane pairs and carries (CR, CI) — keeping this
+        loop the ONLY implementation of the chunk limit.
+
+    Both produce the exact canonical symmetric residues of the full-k
+    product, hence bitwise-identical outputs; the stacked planes pass
+    through unchanged either way.
     """
+    if carry_epilogue:
+        k = jax.tree.leaves(ares)[0].shape[-1]
+        carry = None
+        for k0 in range(0, k, K_CHUNK_LIMIT):
+            sl = slice(k0, k0 + K_CHUNK_LIMIT)
+            carry = mod_gemm_stack(
+                jax.tree.map(lambda x: x[..., sl], ares),
+                jax.tree.map(lambda x: x[:, sl, :], bres),
+                carry,
+            )
+        return carry
     k = ares.shape[-1]
     if k <= K_CHUNK_LIMIT:
         return mod_gemm_stack(ares, bres)
@@ -62,6 +97,36 @@ def chunked_residue_matmul(mod_gemm_stack, ares, bres, ctx: CRTContext):
         acc = e if acc is None else acc + e
     # |acc| <= n_chunks*127 << 2^31
     return _sym_mod_stack(acc, ctx).astype(jnp.int8)
+
+
+def _cast_pair(backend, xr, xi, e, axis, ctx, n_limbs):
+    """Residue-cast a real/imag pair sharing one scale vector.
+
+    Backends exposing `cast_stack` (the batched kernel path) cast both parts
+    in a single launch; others fall back to two `cast` calls.  Bitwise
+    identical either way (the stacked kernel runs the same per-part math).
+    """
+    cast_stack = getattr(backend, "cast_stack", None)
+    if cast_stack is None:
+        return (
+            backend.cast(xr, e, axis, ctx, n_limbs),
+            backend.cast(xi, e, axis, ctx, n_limbs),
+        )
+    res = cast_stack(jnp.stack([xr, xi]), e, axis, ctx, n_limbs)
+    return res[0], res[1]
+
+
+def _reconstruct_pair(backend, er, ei, e_mu, e_nu, ctx, method, out_dtype):
+    """Reconstruct a CR/CI residue pair (one stacked launch when the backend
+    provides `reconstruct_stack`, else two `reconstruct` calls)."""
+    rec_stack = getattr(backend, "reconstruct_stack", None)
+    if rec_stack is None:
+        return (
+            backend.reconstruct(er, e_mu, e_nu, ctx, method, out_dtype),
+            backend.reconstruct(ei, e_mu, e_nu, ctx, method, out_dtype),
+        )
+    out = rec_stack(jnp.stack([er, ei]), e_mu, e_nu, ctx, method, out_dtype)
+    return out[0], out[1]
 
 
 # ================================================================ backends
@@ -184,8 +249,9 @@ def _blocked_pipeline_complex(
     for sl in plan.n_block_slices(n):
         brr, bri = bres_slice(sl)
         er, ei = _complex_product(backend, plan, arr, ari, brr, bri, ctx)
-        cr = backend.reconstruct(er, e_mu, e_nu[sl], ctx, plan.method, rdt)
-        ci = backend.reconstruct(ei, e_mu, e_nu[sl], ctx, plan.method, rdt)
+        cr, ci = _reconstruct_pair(
+            backend, er, ei, e_mu, e_nu[sl], ctx, plan.method, rdt
+        )
         blocks.append(jax.lax.complex(cr, ci))
     return blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks, axis=1)
 
@@ -214,14 +280,10 @@ def _execute_complex(plan, a, b, backend):
     else:
         e_mu, e_nu = scaling.scale_accurate_complex(ar, ai, br, bi, ctx)
     nl = plan.n_limbs
-    arr = backend.cast(ar, e_mu, 0, ctx, nl)
-    ari = backend.cast(ai, e_mu, 0, ctx, nl)
+    arr, ari = _cast_pair(backend, ar, ai, e_mu, 0, ctx, nl)
     return _blocked_pipeline_complex(
         plan, backend, ctx, e_mu, arr, ari, e_nu,
-        lambda sl: (
-            backend.cast(br[:, sl], e_nu[sl], 1, ctx, nl),
-            backend.cast(bi[:, sl], e_nu[sl], 1, ctx, nl),
-        ),
+        lambda sl: _cast_pair(backend, br[:, sl], bi[:, sl], e_nu[sl], 1, ctx, nl),
         b.shape[1],
     )
 
@@ -427,14 +489,12 @@ def gemm_prepared(
         if prep.side == "left":
             e_mu, e_nu = prep.e_scale, e_other
             arr, ari = prep.residues
-            bres_slice = lambda sl: (  # noqa: E731
-                backend.cast(xr[:, sl], e_nu[sl], 1, ctx, nl),
-                backend.cast(xi[:, sl], e_nu[sl], 1, ctx, nl),
+            bres_slice = lambda sl: _cast_pair(  # noqa: E731
+                backend, xr[:, sl], xi[:, sl], e_nu[sl], 1, ctx, nl
             )
         else:
             e_mu, e_nu = e_other, prep.e_scale
-            arr = backend.cast(xr, e_mu, 0, ctx, nl)
-            ari = backend.cast(xi, e_mu, 0, ctx, nl)
+            arr, ari = _cast_pair(backend, xr, xi, e_mu, 0, ctx, nl)
             bres_slice = lambda sl: tuple(  # noqa: E731
                 r[..., sl] for r in prep.residues
             )

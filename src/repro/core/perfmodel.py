@@ -87,6 +87,8 @@ def real_tflops(m, n, k, n_moduli, hw: HW, mode="fast", prec="d", c=None):
 # formulation auto-selection: Karatsuba issues 3N small GEMMs per product,
 # the block embeddings one 4x-sized GEMM per modulus — at small m,n,k the
 # launch term dominates and the embeddings win (paper Fig. 1 crossover).
+# The modulus-batched Pallas kernels fold the N planes into one grid
+# dimension, collapsing the per-modulus factor to 1 (`modulus_batched`).
 GEMM_LAUNCH_S = 5e-6
 
 
@@ -100,6 +102,7 @@ def formulation_time_s(
     mode: str = "fast",
     prec: str = "z",
     karatsuba_launches: int = 3,
+    modulus_batched: bool = False,
 ) -> float:
     """SIII-C time model specialized per Fig. 1 complex-product strategy.
 
@@ -108,14 +111,17 @@ def formulation_time_s(
     additionally materialize the embedded operands in HBM, but need only one
     GEMM launch per modulus.  Accu mode prices one extra modulus plane
     (matching `complex_time_s`'s 6(N+1) op count) in every per-plane term.
-    `karatsuba_launches` is per modulus: 3 for the composed reference path,
-    1 when the backend fuses the triple into one kernel
-    (`kernels/karatsuba_fused.py`).
+    `karatsuba_launches` is per modulus-plane-group: 3 for the composed
+    reference path, 1 when the backend fuses the D/E/F triple into one
+    kernel (`kernels/karatsuba_fused.py`).  `modulus_batched` collapses the
+    per-modulus launch factor to 1 (the batched kernels run all N planes in
+    one grid), leaving only the op/byte terms to scale with N.
     """
     neff = n_moduli if mode == "fast" else n_moduli + 1
+    launch_planes = 1 if modulus_batched else neff
     base = complex_time_s(m, n, k, n_moduli, hw, mode, prec)
     if formulation == "karatsuba":
-        return base + karatsuba_launches * neff * GEMM_LAUNCH_S
+        return base + karatsuba_launches * launch_planes * GEMM_LAUNCH_S
     extra_ops = 2 * neff * m * n * k / hw.int8_ops  # 8N mnk vs the model's 6N
     if formulation == "block_a":
         embed_bytes = 2 * neff * (4 * m * k + 2 * k * n)  # write+read Ahat/Bhat
@@ -123,7 +129,10 @@ def formulation_time_s(
         embed_bytes = 2 * neff * (2 * m * k + 4 * k * n)
     else:
         raise ValueError(f"unknown formulation {formulation!r}")
-    return base + extra_ops + embed_bytes / hw.mem_bw + neff * GEMM_LAUNCH_S
+    return (
+        base + extra_ops + embed_bytes / hw.mem_bw
+        + launch_planes * GEMM_LAUNCH_S
+    )
 
 
 def select_formulation(
@@ -135,15 +144,49 @@ def select_formulation(
     mode: str = "fast",
     prec: str = "z",
     karatsuba_launches: int = 3,
+    modulus_batched: bool = False,
 ) -> str:
     """Pick the fastest Fig. 1 complex-product strategy under the SIII-C
     model (used by `core/plan.py` for ``formulation='auto'``)."""
     return min(
         ("karatsuba", "block_a", "block_b"),
         key=lambda f: formulation_time_s(
-            f, m, n, k, n_moduli, hw, mode, prec, karatsuba_launches
+            f, m, n, k, n_moduli, hw, mode, prec,
+            karatsuba_launches, modulus_batched,
         ),
     )
+
+
+def kernel_launch_count(
+    n_moduli: int,
+    formulation: str = "real",
+    *,
+    modulus_batched: bool = True,
+    fused_karatsuba: bool = True,
+    n_chunks: int = 1,
+    n_blocks: int = 1,
+) -> int:
+    """Pallas-launch count of one emulated GEMM on the kernel path.
+
+    The batched backend (`modulus_batched=True`) issues exactly one
+    `pallas_call` per cast (complex operands stack real+imag into one), one
+    per modular product per K-chunk, and one per reconstruction (CR/CI
+    stacked) — 2 + n_chunks + 1 per output-column block at any N.  The
+    per-modulus backend pays a factor N on products, 2x on complex casts /
+    reconstructions, and 3x on unfused Karatsuba.  Asserted against the
+    actually-traced jaxpr in tests and the CI smoke benchmark.
+    """
+    planes = 1 if modulus_batched else n_moduli
+    complex_ = formulation != "real"
+    per_part = 1 if modulus_batched else 2  # real+imag stacked vs separate
+    cast_a = per_part if complex_ else 1
+    cast_b = per_part if complex_ else 1
+    if formulation == "karatsuba":
+        products = (1 if fused_karatsuba else 3) * planes * n_chunks
+    else:  # 'real' or a block embedding: one real product per chunk
+        products = planes * n_chunks
+    reconstructs = per_part if complex_ else 1
+    return cast_a + n_blocks * (cast_b + products + reconstructs)
 
 
 def ozaki1_complex_time_s(m, n, k, slices: int, hw: HW) -> float:

@@ -117,6 +117,7 @@ def make_plan(
     shape: tuple[int, int, int] | None = None,
     hw=None,
     fused_karatsuba: bool = False,
+    modulus_batched: bool = False,
 ) -> EmulationPlan:
     """Build an :class:`EmulationPlan` from user-facing knobs.
 
@@ -129,6 +130,9 @@ def make_plan(
     fused_karatsuba: the executing backend fuses the Karatsuba triple into
       one launch per modulus (the Pallas kernel path) — changes the launch
       term the 'auto' selection charges Karatsuba.
+    modulus_batched: the executing backend folds all N residue planes into
+      one kernel grid (`kernels` batched path) — the 'auto' selection then
+      charges each product strategy a single launch instead of N.
     """
     dt = jnp.dtype(dtype)
     if mode not in ("fast", "accu"):
@@ -149,7 +153,8 @@ def make_plan(
         formulation = formulation or "karatsuba"
         if formulation == "auto":
             formulation = _auto_formulation(
-                shape, int(n_moduli), mode, dt, hw, fused_karatsuba
+                shape, int(n_moduli), mode, dt, hw, fused_karatsuba,
+                modulus_batched,
             )
         if formulation not in COMPLEX_FORMULATIONS:
             raise ValueError(f"unknown complex formulation {formulation!r}")
@@ -172,7 +177,9 @@ def make_plan(
     )
 
 
-def _auto_formulation(shape, n_moduli, mode, dt, hw, fused_karatsuba=False):
+def _auto_formulation(
+    shape, n_moduli, mode, dt, hw, fused_karatsuba=False, modulus_batched=False
+):
     from . import perfmodel
 
     if shape is None:
@@ -188,6 +195,7 @@ def _auto_formulation(shape, n_moduli, mode, dt, hw, fused_karatsuba=False):
         mode=mode,
         prec=prec,
         karatsuba_launches=1 if fused_karatsuba else 3,
+        modulus_batched=modulus_batched,
     )
 
 

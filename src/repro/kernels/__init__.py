@@ -1,19 +1,29 @@
 """Pallas TPU kernels for the Ozaki-II hot spots (validated in interpret
 mode on CPU; see tests/test_kernels.py for the per-kernel allclose sweeps).
 """
+from .common import count_pallas_launches
 from .crt_garner import crt_garner
 from .flash_attention import flash_attention
-from .int8_mod_gemm import int8_mod_gemm
-from .karatsuba_fused import karatsuba_mod_gemm
-from .ops import KernelBackend, ozaki2_cgemm_kernels, ozaki2_gemm_kernels
+from .int8_mod_gemm import int8_mod_gemm, int8_mod_gemm_batched
+from .karatsuba_fused import karatsuba_mod_gemm, karatsuba_mod_gemm_batched
+from .ops import (
+    KernelBackend,
+    PerModulusKernelBackend,
+    ozaki2_cgemm_kernels,
+    ozaki2_gemm_kernels,
+)
 from .residue_cast import residue_cast
 
 __all__ = [
     "KernelBackend",
+    "PerModulusKernelBackend",
+    "count_pallas_launches",
     "crt_garner",
     "flash_attention",
     "int8_mod_gemm",
+    "int8_mod_gemm_batched",
     "karatsuba_mod_gemm",
+    "karatsuba_mod_gemm_batched",
     "ozaki2_cgemm_kernels",
     "ozaki2_gemm_kernels",
     "residue_cast",

@@ -3,6 +3,19 @@
 Everything here is exact f32/int32 arithmetic: the kernels never touch f64
 (TPU has none).  Values stay below 2^24 after the limb peel, where f32
 arithmetic on integers is error-free.
+
+Two flavours of the symmetric modular reduction coexist:
+
+  * static-p (`sym_mod_f32` with Python floats) — used where the modulus is
+    a compile-time constant (residue_cast / crt_garner, whose host tables
+    are per-modulus anyway);
+  * dynamic-p (`dyn_mod_params` + the same `sym_mod_f32` on traced scalars)
+    — used by the modulus-batched GEMM kernels, where the modulus arrives as
+    a scalar-prefetched int32 array indexed by the leading grid dimension.
+
+Both produce the exact canonical symmetric residue (the +/-1 correction
+steps absorb the reciprocal rounding), so batched and per-modulus kernels
+are bitwise identical.
 """
 from __future__ import annotations
 
@@ -20,8 +33,14 @@ def interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def sym_mod_f32(v, p: float, half: float):
-    """Symmetric mod for f32 integer values |v| <~ 2^20 (exact, see core)."""
+def sym_mod_f32(v, p, half):
+    """Symmetric mod for f32 integer values |v| <~ 2^24 (exact, see core).
+
+    `p`/`half` may be Python floats (static modulus) or traced f32 scalars
+    (dynamic modulus from scalar prefetch): the initial guess n = round(v/p)
+    is within +/-1 of the true quotient either way, and the two correction
+    steps make the result the exact canonical symmetric residue.
+    """
     n = jnp.round(v * (1.0 / p))
     r = v - n * p
     r = jnp.where(r > half, r - p, r)
@@ -29,15 +48,27 @@ def sym_mod_f32(v, p: float, half: float):
     return r
 
 
-def sym_mod_int32_via_f32(d, p: int):
-    """Exact symmetric mod of int32 (|d| < 2^31) using an exact 16-bit split.
+def dyn_mod_params(moduli_ref, l):
+    """(pf, half, m16) for plane `l` from a scalar-prefetched int32 moduli ref.
+
+    pf = p as f32; half = (p-1)/2 (exact: p odd, so floor(p/2) == (p-1)/2);
+    m16 = symmetric residue of 2^16 mod p (|m16| <= half), used by the exact
+    16-bit-split int32 reduction.  All three are exact small f32 integers.
+    """
+    pf = moduli_ref[l].astype(jnp.float32)
+    half = jnp.floor(pf * 0.5)
+    m16 = sym_mod_f32(jnp.float32(float(1 << 16)), pf, half)
+    return pf, half, m16
+
+
+def sym_mod_int32_dyn(d, pf, half, m16):
+    """Exact symmetric mod of int32 (|d| < 2^31) with a dynamic modulus.
 
     d = dh*2^16 + dl with dh = d >> 16 (floor), dl = d & 0xffff in [0, 2^16);
-    both below 2^24 so the f32 modular arithmetic is exact.
+    both below 2^24 so the f32 modular arithmetic is exact.  `pf`/`half`/
+    `m16` come from :func:`dyn_mod_params` (traced) or host floats (static —
+    the two agree bit-for-bit because the result is the exact residue).
     """
-    half = float((p - 1) // 2)
-    pf = float(p)
-    m16 = float(pow(1 << 16, 1, p))  # 2^16 mod p (representative in [0,p))
     dh = jnp.right_shift(d, 16).astype(jnp.float32)  # arithmetic shift: floor
     dl = jnp.bitwise_and(d, (1 << 16) - 1).astype(jnp.float32)
     rh = sym_mod_f32(dh, pf, half)
@@ -71,3 +102,75 @@ def split_scale_exponent(e: np.ndarray | jnp.ndarray, bias: int = 0):
         jnp.ldexp(one, e1).astype(jnp.float32),
         jnp.ldexp(one, e2).astype(jnp.float32),
     )
+
+
+# ------------------------------------------------- ragged-shape pad/slice
+
+
+def round_up(x: int, mult: int) -> int:
+    """Smallest multiple of `mult` that is >= x."""
+    return -(-x // mult) * mult
+
+
+def pad_dims(x, targets: dict[int, int], value=0):
+    """Zero-pad (or `value`-pad) `x` at the end of each axis up to `targets`.
+
+    Zero padding is residue-exact: residues of 0 are 0 for every modulus,
+    padded K contributes nothing to dot products, and padded M/N rows and
+    columns are sliced off the output — so pad-and-slice keeps every kernel
+    bit-identical on the retained region.
+    """
+    pads = [(0, 0)] * x.ndim
+    needed = False
+    for ax, tgt in targets.items():
+        cur = x.shape[ax]
+        if cur != tgt:
+            pads[ax] = (0, tgt - cur)
+            needed = True
+    if not needed:
+        return x
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def block_and_padded(dim: int, block: int) -> tuple[int, int]:
+    """(block', padded_dim) for one axis: shrink the block to the axis when
+    the axis is smaller, otherwise round the axis up to a block multiple."""
+    b = min(block, dim)
+    return b, round_up(dim, b)
+
+
+# ------------------------------------------------- launch-count diagnostics
+
+
+def _iter_subjaxprs(v):
+    """Yield any jaxprs nested inside an eqn-param value (duck-typed so it
+    survives jax.core module reshuffles)."""
+    if hasattr(v, "jaxpr") and hasattr(v, "consts"):  # ClosedJaxpr
+        yield v.jaxpr
+    elif hasattr(v, "eqns") and hasattr(v, "invars"):  # Jaxpr
+        yield v
+    elif isinstance(v, (list, tuple)):
+        for item in v:
+            yield from _iter_subjaxprs(item)
+
+
+def _count_in_jaxpr(jaxpr) -> int:
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            total += 1
+        for v in eqn.params.values():
+            for sub in _iter_subjaxprs(v):
+                total += _count_in_jaxpr(sub)
+    return total
+
+
+def count_pallas_launches(fn, *args, **kwargs) -> int:
+    """Number of `pallas_call` equations in the jaxpr of fn(*args, **kwargs).
+
+    This is the kernel-launch count of one execution (the grid of a single
+    call is not a launch multiplier), used by the launch-count regression
+    tests and the CI smoke benchmark.
+    """
+    jaxpr = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    return _count_in_jaxpr(jaxpr.jaxpr)

@@ -10,8 +10,14 @@ scaling  C = C' / (mu_i nu_j).
 Output: 'f32' (CGEMM/SGEMM-grade) or a (2, m, n) double-single pair
 ('dd', ZGEMM-grade on TPU; ~2^-48 relative — see DESIGN.md S6).
 
-Grid: (m/bm, n/bn); the full N-deep residue stack for a tile sits in VMEM
-(N * bm * bn int8; 13 * 256 * 256 = 0.8 MiB).
+Grid: (S, m/bm, n/bn) with S an optional leading *stack* dimension: a
+(S, N, m, n) residue stack reconstructs S outputs sharing the same scale
+exponents in one launch — the complex pipeline stacks the CR/CI residue
+planes so reconstruction costs one `pallas_call` for the whole complex
+output.  (N, m, n) inputs are treated as S=1 and squeezed on return.  The
+full N-deep residue stack for a tile sits in VMEM (N * bm * bn int8;
+13 * 256 * 256 = 0.8 MiB).  Non-block-divisible m/n are zero-padded to the
+block grid and sliced back (zero residues reconstruct to zero).
 """
 from __future__ import annotations
 
@@ -24,7 +30,13 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from ..core.moduli import CRTContext
-from .common import interpret_default, split_scale_exponent, sym_mod_f32
+from .common import (
+    block_and_padded,
+    interpret_default,
+    pad_dims,
+    split_scale_exponent,
+    sym_mod_f32,
+)
 from ..core import expansion as ex
 
 
@@ -53,7 +65,7 @@ def _kernel(e_ref, r1_ref, r2_ref, c1_ref, c2_ref, out_ref, *, ctx, out_dd):
     digits = []
     for t in range(n):
         pf, half = float(moduli[t]), float((moduli[t] - 1) // 2)
-        r = e_ref[t, :, :].astype(jnp.float32)
+        r = e_ref[0, t, :, :].astype(jnp.float32)
         for s in range(t):
             r = sym_mod_f32((r - digits[s]) * float(ctx.garner_inv[s, t]), pf, half)
         digits.append(r)
@@ -69,10 +81,40 @@ def _kernel(e_ref, r1_ref, r2_ref, c1_ref, c2_ref, out_ref, *, ctx, out_dd):
     rr = (r1_ref[...] * r2_ref[...])[:, None]
     cc = (c1_ref[...] * c2_ref[...])[None, :]
     if out_dd:
-        out_ref[0, :, :] = (hi * rr) * cc
-        out_ref[1, :, :] = (lo * rr) * cc
+        out_ref[0, 0, :, :] = (hi * rr) * cc
+        out_ref[0, 1, :, :] = (lo * rr) * cc
     else:
-        out_ref[...] = ((hi + lo) * rr) * cc
+        out_ref[0] = ((hi + lo) * rr) * cc
+
+
+# not jitted: CRTContext holds numpy tables and is unhashable; the public
+# pipeline wrappers jit the whole plan execution anyway.
+def _stacked_call(e_res, r1, r2, c1, c2, *, ctx, out_dd, bm, bn, interpret):
+    s, n_mod, m, n = e_res.shape
+    out_shape = (
+        jax.ShapeDtypeStruct((s, 2, m, n), jnp.float32)
+        if out_dd
+        else jax.ShapeDtypeStruct((s, m, n), jnp.float32)
+    )
+    out_spec = (
+        pl.BlockSpec((1, 2, bm, bn), lambda si, i, j: (si, 0, i, j))
+        if out_dd
+        else pl.BlockSpec((1, bm, bn), lambda si, i, j: (si, i, j))
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, ctx=ctx, out_dd=out_dd),
+        grid=(s, m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((1, ctx.n, bm, bn), lambda si, i, j: (si, 0, i, j)),
+            pl.BlockSpec((bm,), lambda si, i, j: (i,)),
+            pl.BlockSpec((bm,), lambda si, i, j: (i,)),
+            pl.BlockSpec((bn,), lambda si, i, j: (j,)),
+            pl.BlockSpec((bn,), lambda si, i, j: (j,)),
+        ],
+        out_specs=out_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(e_res, r1, r2, c1, c2)
 
 
 def crt_garner(
@@ -86,41 +128,30 @@ def crt_garner(
     bn: int = 256,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """e_res: (N, m, n) int8 residues of C'; e_mu/e_nu: integer scale
-    exponents.  Returns C = C'/(mu nu) as (m,n) f32 or (2,m,n) double-single.
+    """e_res: (N, m, n) or stacked (S, N, m, n) int8 residues of C'; e_mu /
+    e_nu: integer scale exponents (shared across the stack).  Returns
+    C = C'/(mu nu) as (m,n) f32 or (2,m,n) double-single — with a leading
+    (S, ...) dim for stacked input — in one `pallas_call` either way.
     """
     if interpret is None:
         interpret = interpret_default()
-    n_mod, m, n = e_res.shape
+    stacked = e_res.ndim == 4
+    if not stacked:
+        e_res = e_res[None]
+    _, n_mod, m, n = e_res.shape
     assert n_mod == ctx.n
-    bm, bn = min(bm, m), min(bn, n)
-    if m % bm or n % bn:
-        raise ValueError(f"({m},{n}) not divisible by ({bm},{bn})")
+    bm, mp = block_and_padded(m, bm)
+    bn, np_ = block_and_padded(n, bn)
+    e_res = pad_dims(e_res, {2: mp, 3: np_})
+    e_mu = pad_dims(e_mu, {0: mp})
+    e_nu = pad_dims(e_nu, {0: np_})
     s = _prescale(ctx)
     s_r = s // 2
     r1, r2 = split_scale_exponent(-e_mu, bias=s_r)
     c1, c2 = split_scale_exponent(-e_nu, bias=s - s_r)
-    out_shape = (
-        jax.ShapeDtypeStruct((2, m, n), jnp.float32)
-        if out_dd
-        else jax.ShapeDtypeStruct((m, n), jnp.float32)
+    out = _stacked_call(
+        e_res, r1, r2, c1, c2, ctx=ctx, out_dd=out_dd, bm=bm, bn=bn,
+        interpret=bool(interpret),
     )
-    out_spec = (
-        pl.BlockSpec((2, bm, bn), lambda i, j: (0, i, j))
-        if out_dd
-        else pl.BlockSpec((bm, bn), lambda i, j: (i, j))
-    )
-    return pl.pallas_call(
-        functools.partial(_kernel, ctx=ctx, out_dd=out_dd),
-        grid=(m // bm, n // bn),
-        in_specs=[
-            pl.BlockSpec((ctx.n, bm, bn), lambda i, j: (0, i, j)),
-            pl.BlockSpec((bm,), lambda i, j: (i,)),
-            pl.BlockSpec((bm,), lambda i, j: (i,)),
-            pl.BlockSpec((bn,), lambda i, j: (j,)),
-            pl.BlockSpec((bn,), lambda i, j: (j,)),
-        ],
-        out_specs=out_spec,
-        out_shape=out_shape,
-        interpret=interpret,
-    )(e_res, r1, r2, c1, c2)
+    out = out[..., :m, :n]
+    return out if stacked else out[0]

@@ -1,14 +1,29 @@
-"""Pallas kernel: tiled int8 MXU GEMM with symmetric-mod epilogue.
+"""Pallas kernel: modulus-batched tiled int8 MXU GEMM with sym-mod epilogue.
 
-Alg. 1 steps V-iii/iv for one modulus: D = A_l B_l (int8 x int8 -> int32 on
-the MXU, exact for k <= 2^17) and E = sym_mod(D, p) (int8), fused so the
-int32 product tile never round-trips to HBM — the paper's step-2 memory term
-(14N + c) mn / b is dominated by exactly those int32 stores+loads; the fused
-epilogue removes 8 of the 14 bytes/elt (see EXPERIMENTS.md SPerf).
+Alg. 1 steps V-iii/iv for ALL moduli in one `pallas_call`: the N residue
+planes are folded into the leading grid dimension, so a full residue GEMM
+D_l = A_l B_l, E_l = sym_mod(D_l, p_l) costs one kernel launch regardless of
+N — the paper's SIII-C step-2 launch term drops from N to 1 (on small
+shapes the launch-bound regime of Fig. 1).  The int8 x int8 -> int32 MXU
+product is exact for k <= 2^17 and the fused epilogue keeps the int32 tile
+in VMEM (never round-trips to HBM — 8 of the 14 bytes/elt of the paper's
+(14N + c) mn / b step-2 memory term; see EXPERIMENTS.md SPerf).
 
-Grid: (m/bm, n/bn, k/bk), k innermost ('arbitrary'), int32 accumulator in a
-VMEM scratch tile.  MXU alignment: bm/bn multiples of 128, bk multiple of 32
-(int8 lane packing).
+Grid: (N, m/bm, n/bn, k/bk) — modulus plane outermost, k innermost
+('arbitrary'), one int32 accumulator tile in VMEM scratch.  The per-plane
+modulus is delivered via scalar prefetch (`PrefetchScalarGridSpec`): the
+moduli are a small int32 array argument, not a static Python `p`, and the
+epilogue derives (p, (p-1)/2, 2^16 mod p) from it in exact f32 arithmetic
+(`common.dyn_mod_params`).  MXU alignment: bm/bn multiples of 128, bk a
+multiple of 32 (int8 lane packing); non-block-divisible shapes are
+zero-padded to the block grid and the output sliced back (zeros are
+residue-exact, see `common.pad_dims`).
+
+The optional `carry` input is an (N, m, n) int8 residue stack folded into
+the epilogue reduction: `out = sym_mod(acc + carry, p)`.  K-chunked
+products (k > 2^17) thread the previous chunk's residues through it, so the
+inter-chunk combine happens inside the kernel instead of a host-side
+per-modulus loop.
 """
 from __future__ import annotations
 
@@ -19,29 +34,113 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import interpret_default, sym_mod_int32_via_f32
+from .common import (
+    block_and_padded,
+    dyn_mod_params,
+    interpret_default,
+    pad_dims,
+    sym_mod_int32_dyn,
+)
 
 
-def _kernel(a_ref, b_ref, out_ref, acc_ref, *, p, k_steps):
-    @pl.when(pl.program_id(2) == 0)
+def _kernel(moduli_ref, a_ref, b_ref, *rest, k_steps, has_carry):
+    if has_carry:
+        carry_ref, out_ref, acc_ref = rest
+    else:
+        out_ref, acc_ref = rest
+    # program_id must be read outside pl.when bodies (the interpret-mode
+    # evaluator does not substitute it inside cond sub-jaxprs)
+    l = pl.program_id(0)
+
+    @pl.when(pl.program_id(3) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jax.lax.dot_general(
-        a_ref[...],
-        b_ref[...],
+        a_ref[0],
+        b_ref[0],
         dimension_numbers=(((1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32,
     )
 
-    @pl.when(pl.program_id(2) == k_steps - 1)
+    @pl.when(pl.program_id(3) == k_steps - 1)
     def _epilogue():
-        out_ref[...] = sym_mod_int32_via_f32(acc_ref[...], p).astype(jnp.int8)
+        pf, half, m16 = dyn_mod_params(moduli_ref, l)
+        acc = acc_ref[...]
+        if has_carry:
+            acc = acc + carry_ref[0].astype(jnp.int32)
+        out_ref[0] = sym_mod_int32_dyn(acc, pf, half, m16).astype(jnp.int8)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("p", "bm", "bn", "bk", "interpret")
+    jax.jit, static_argnames=("moduli", "bm", "bn", "bk", "interpret")
 )
+def _batched_call(a, b, carry, *, moduli, bm, bn, bk, interpret):
+    n_mod, m, k = a.shape
+    n = b.shape[-1]
+    k_steps = k // bk
+    mod_arr = jnp.asarray(moduli, jnp.int32)
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), lambda l, i, j, kk, mods: (l, i, kk)),
+        pl.BlockSpec((1, bk, bn), lambda l, i, j, kk, mods: (l, kk, j)),
+    ]
+    operands = [a, b]
+    if carry is not None:
+        in_specs.append(
+            pl.BlockSpec((1, bm, bn), lambda l, i, j, kk, mods: (l, i, j))
+        )
+        operands.append(carry)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_mod, m // bm, n // bn, k_steps),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), lambda l, i, j, kk, mods: (l, i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps, has_carry=carry is not None),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_mod, m, n), jnp.int8),
+        interpret=interpret,
+    )(mod_arr, *operands)
+
+
+def int8_mod_gemm_batched(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    moduli: tuple[int, ...],
+    carry: jnp.ndarray | None = None,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """E_l = sym_mod(A_l @ B_l [+ carry_l], p_l) for all l in ONE launch.
+
+    a: (N, m, k) int8, b: (N, k, n) int8, carry: optional (N, m, n) int8;
+    returns (N, m, n) int8 residues.  Any m/n/k is accepted (pad-and-slice).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    n_mod, m, k = a.shape
+    if b.shape[0] != n_mod or b.shape[1] != k or len(moduli) != n_mod:
+        raise ValueError(f"shape mismatch: a {a.shape}, b {b.shape}, N={len(moduli)}")
+    n = b.shape[-1]
+    bm, mp = block_and_padded(m, bm)
+    bn, np_ = block_and_padded(n, bn)
+    bk, kp = block_and_padded(k, bk)
+    a = pad_dims(a, {1: mp, 2: kp})
+    b = pad_dims(b, {1: kp, 2: np_})
+    if carry is not None:
+        carry = pad_dims(carry, {1: mp, 2: np_})
+    out = _batched_call(
+        a, b, carry, moduli=tuple(moduli), bm=bm, bn=bn, bk=bk,
+        interpret=bool(interpret),
+    )
+    return out[:, :m, :n]
+
+
 def int8_mod_gemm(
     a: jnp.ndarray,
     b: jnp.ndarray,
@@ -52,25 +151,13 @@ def int8_mod_gemm(
     bk: int = 512,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """E = sym_mod(A @ B, p): (m,k) x (k,n) int8 -> (m,n) int8 residues."""
-    if interpret is None:
-        interpret = interpret_default()
-    m, k = a.shape
-    k2, n = b.shape
-    assert k == k2
-    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
-    if m % bm or n % bn or k % bk:
-        raise ValueError(f"({m},{n},{k}) not divisible by ({bm},{bn},{bk})")
-    k_steps = k // bk
-    return pl.pallas_call(
-        functools.partial(_kernel, p=p, k_steps=k_steps),
-        grid=(m // bm, n // bn, k_steps),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int8),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+    """E = sym_mod(A @ B, p): (m,k) x (k,n) int8 -> (m,n) int8 residues.
+
+    Per-modulus entry point, retained as a thin vmap-free wrapper over the
+    batched kernel (an N=1 grid): launching it once per modulus is the
+    reference the batched path is verified bitwise-identical against.
+    """
+    return int8_mod_gemm_batched(
+        a[None], b[None], moduli=(int(p),), bm=bm, bn=bn, bk=bk,
         interpret=interpret,
-    )(a, b)
+    )[0]

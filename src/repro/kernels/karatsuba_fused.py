@@ -1,21 +1,30 @@
-"""Pallas kernel: fused Karatsuba modular complex GEMM for one modulus.
+"""Pallas kernel: modulus-batched fused-Karatsuba modular complex GEMM.
 
-Beyond-paper optimization (EXPERIMENTS.md SPerf): the paper runs the three
-Karatsuba products D = AR.BR, E = AI.BI, F = (AR+AI)(BR+BI) as separate
-int8 GEMM kernel launches with int32 intermediates in HBM.  On TPU we fuse
-all three into one kernel that
+Beyond-paper optimization (EXPERIMENTS.md SPerf), two fusions deep:
 
-  * reads only the 4 residue planes (AR, AI, BR, BI) — the (AR+AI) mod p and
-    (BR+BI) mod p operands are formed in VMEM per tile (exact f32 mod of
-    values <= 254), never materialized in HBM;
-  * keeps the three int32 accumulators in VMEM scratch;
-  * emits the final CR/CI int8 residues directly:
-        CR = D - E,  CI = F - D - E   (mod p).
+ 1. *Karatsuba fusion* — the paper runs the three Karatsuba products
+    D = AR.BR, E = AI.BI, F = (AR+AI)(BR+BI) as separate int8 GEMM kernel
+    launches with int32 intermediates in HBM.  We fuse all three into one
+    kernel that reads only the 4 residue planes (the (AR+AI) mod p and
+    (BR+BI) mod p operands are formed in VMEM per tile — exact f32 mod of
+    values <= 254 — never materialized in HBM), keeps the three int32
+    accumulators in VMEM scratch, and emits the final CR/CI int8 residues
+    directly: CR = D - E, CI = F - D - E (mod p).  HBM traffic per modulus
+    drops from 6 int8 plane reads + 3 int32 (m,n) writes + 3 int32 reads +
+    2 int8 writes to 4 int8 reads + 2 int8 writes.
+ 2. *Modulus batching* — all N planes run in one `pallas_call` with the
+    modulus plane as the leading grid dimension, so a full fast-mode
+    complex residue product is ONE launch (vs 3N for the paper's schedule).
 
-HBM traffic per modulus drops from 6 int8 plane reads + 3 int32 (m,n)
-writes + 3 int32 reads + 2 int8 writes to 4 int8 reads + 2 int8 writes.
-
-Grid: (m/bm, n/bn, k/bk), k innermost, 3 int32 VMEM accumulators.
+Grid: (N, m/bm, n/bn, k/bk) — modulus outermost, k innermost, 3 int32 VMEM
+accumulators.  The per-plane modulus arrives via scalar prefetch as an
+int32 array (`PrefetchScalarGridSpec`); (p, (p-1)/2, 2^16 mod p) are
+derived in-kernel in exact f32 (`common.dyn_mod_params`).  Alignment: bm/bn
+multiples of 128, bk a multiple of 32; non-block-divisible shapes are
+zero-padded to the block grid and sliced back (zero padding is
+residue-exact).  The optional `carry` pair (CR, CI residues of previous
+K-chunks) is folded into the epilogue mod, keeping chunked-K combines
+inside the kernel.
 """
 from __future__ import annotations
 
@@ -26,7 +35,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import interpret_default, sym_mod_f32, sym_mod_int32_via_f32
+from .common import (
+    block_and_padded,
+    dyn_mod_params,
+    interpret_default,
+    pad_dims,
+    sym_mod_f32,
+    sym_mod_int32_dyn,
+)
 
 
 def _dot_i8(a, b):
@@ -36,18 +52,24 @@ def _dot_i8(a, b):
     )
 
 
-def _kernel(ar_ref, ai_ref, br_ref, bi_ref, cr_ref, ci_ref,
-            d_acc, e_acc, f_acc, *, p, k_steps):
-    pf, half = float(p), float((p - 1) // 2)
+def _kernel(moduli_ref, ar_ref, ai_ref, br_ref, bi_ref, *rest,
+            k_steps, has_carry):
+    if has_carry:
+        cr_in_ref, ci_in_ref, cr_ref, ci_ref, d_acc, e_acc, f_acc = rest
+    else:
+        cr_ref, ci_ref, d_acc, e_acc, f_acc = rest
+    # program_id read once at kernel top level (outside pl.when bodies —
+    # the interpret-mode evaluator does not substitute it inside conds)
+    pf, half, m16 = dyn_mod_params(moduli_ref, pl.program_id(0))
 
-    @pl.when(pl.program_id(2) == 0)
+    @pl.when(pl.program_id(3) == 0)
     def _init():
         d_acc[...] = jnp.zeros_like(d_acc)
         e_acc[...] = jnp.zeros_like(e_acc)
         f_acc[...] = jnp.zeros_like(f_acc)
 
-    ar, ai = ar_ref[...], ai_ref[...]
-    br, bi = br_ref[...], bi_ref[...]
+    ar, ai = ar_ref[0], ai_ref[0]
+    br, bi = br_ref[0], bi_ref[0]
     # (AR + AI) mod p formed in VMEM: |sum| <= 254 -> exact f32 mod -> int8
     asum = sym_mod_f32(ar.astype(jnp.float32) + ai.astype(jnp.float32), pf, half
                        ).astype(jnp.int8)
@@ -57,18 +79,105 @@ def _kernel(ar_ref, ai_ref, br_ref, bi_ref, cr_ref, ci_ref,
     e_acc[...] += _dot_i8(ai, bi)
     f_acc[...] += _dot_i8(asum, bsum)
 
-    @pl.when(pl.program_id(2) == k_steps - 1)
+    @pl.when(pl.program_id(3) == k_steps - 1)
     def _epilogue():
-        dr = sym_mod_int32_via_f32(d_acc[...], p)
-        de = sym_mod_int32_via_f32(e_acc[...], p)
-        df = sym_mod_int32_via_f32(f_acc[...], p)
-        cr_ref[...] = sym_mod_f32(dr - de, pf, half).astype(jnp.int8)
-        ci_ref[...] = sym_mod_f32(df - dr - de, pf, half).astype(jnp.int8)
+        dr = sym_mod_int32_dyn(d_acc[...], pf, half, m16)
+        de = sym_mod_int32_dyn(e_acc[...], pf, half, m16)
+        df = sym_mod_int32_dyn(f_acc[...], pf, half, m16)
+        cr = dr - de
+        ci = df - dr - de
+        if has_carry:
+            cr = cr + cr_in_ref[0].astype(jnp.float32)
+            ci = ci + ci_in_ref[0].astype(jnp.float32)
+        cr_ref[0] = sym_mod_f32(cr, pf, half).astype(jnp.int8)
+        ci_ref[0] = sym_mod_f32(ci, pf, half).astype(jnp.int8)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("p", "bm", "bn", "bk", "interpret")
+    jax.jit, static_argnames=("moduli", "bm", "bn", "bk", "interpret")
 )
+def _batched_call(ar, ai, br, bi, carry, *, moduli, bm, bn, bk, interpret):
+    n_mod, m, k = ar.shape
+    n = br.shape[-1]
+    k_steps = k // bk
+    mod_arr = jnp.asarray(moduli, jnp.int32)
+    a_spec = pl.BlockSpec((1, bm, bk), lambda l, i, j, kk, mods: (l, i, kk))
+    b_spec = pl.BlockSpec((1, bk, bn), lambda l, i, j, kk, mods: (l, kk, j))
+    o_spec = pl.BlockSpec((1, bm, bn), lambda l, i, j, kk, mods: (l, i, j))
+    in_specs = [a_spec, a_spec, b_spec, b_spec]
+    operands = [ar, ai, br, bi]
+    if carry is not None:
+        in_specs += [o_spec, o_spec]
+        operands += list(carry)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_mod, m // bm, n // bn, k_steps),
+        in_specs=in_specs,
+        out_specs=(o_spec, o_spec),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.int32),
+            pltpu.VMEM((bm, bn), jnp.int32),
+            pltpu.VMEM((bm, bn), jnp.int32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps, has_carry=carry is not None),
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((n_mod, m, n), jnp.int8),
+            jax.ShapeDtypeStruct((n_mod, m, n), jnp.int8),
+        ),
+        interpret=interpret,
+    )(mod_arr, *operands)
+
+
+def karatsuba_mod_gemm_batched(
+    ar: jnp.ndarray,
+    ai: jnp.ndarray,
+    br: jnp.ndarray,
+    bi: jnp.ndarray,
+    *,
+    moduli: tuple[int, ...],
+    carry: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool | None = None,
+):
+    """Residues of (CR', CI') = (AR'+iAI')(BR'+iBI') mod p_l, all planes in
+    ONE launch.  Inputs (N, m, k) / (N, k, n) int8 stacks; `carry` is an
+    optional (CR, CI) pair of (N, m, n) int8 residues folded into the
+    epilogue (K-chunk combine).  Any m/n/k is accepted (pad-and-slice)."""
+    if interpret is None:
+        interpret = interpret_default()
+    n_mod, m, k = ar.shape
+    if (
+        ai.shape != ar.shape
+        or br.shape != bi.shape
+        or br.shape[:2] != (n_mod, k)
+        or len(moduli) != n_mod
+    ):
+        raise ValueError(
+            f"shape mismatch: ar {ar.shape}, ai {ai.shape}, br {br.shape}, "
+            f"bi {bi.shape}, N={len(moduli)}"
+        )
+    n = br.shape[-1]
+    bm, mp = block_and_padded(m, bm)
+    bn, np_ = block_and_padded(n, bn)
+    bk, kp = block_and_padded(k, bk)
+    ar = pad_dims(ar, {1: mp, 2: kp})
+    ai = pad_dims(ai, {1: mp, 2: kp})
+    br = pad_dims(br, {1: kp, 2: np_})
+    bi = pad_dims(bi, {1: kp, 2: np_})
+    if carry is not None:
+        carry = tuple(pad_dims(c, {1: mp, 2: np_}) for c in carry)
+    cr, ci = _batched_call(
+        ar, ai, br, bi, carry, moduli=tuple(moduli), bm=bm, bn=bn, bk=bk,
+        interpret=bool(interpret),
+    )
+    return cr[:, :m, :n], ci[:, :m, :n]
+
+
 def karatsuba_mod_gemm(
     ar: jnp.ndarray,
     ai: jnp.ndarray,
@@ -81,36 +190,12 @@ def karatsuba_mod_gemm(
     bk: int = 512,
     interpret: bool | None = None,
 ):
-    """Residues of (CR', CI') = (AR'+iAI')(BR'+iBI') mod p. All int8 (m,k)/(k,n)."""
-    if interpret is None:
-        interpret = interpret_default()
-    m, k = ar.shape
-    _, n = br.shape
-    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
-    if m % bm or n % bn or k % bk:
-        raise ValueError(f"({m},{n},{k}) not divisible by ({bm},{bn},{bk})")
-    k_steps = k // bk
-    return pl.pallas_call(
-        functools.partial(_kernel, p=p, k_steps=k_steps),
-        grid=(m // bm, n // bn, k_steps),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=(
-            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        ),
-        out_shape=(
-            jax.ShapeDtypeStruct((m, n), jnp.int8),
-            jax.ShapeDtypeStruct((m, n), jnp.int8),
-        ),
-        scratch_shapes=[
-            pltpu.VMEM((bm, bn), jnp.int32),
-            pltpu.VMEM((bm, bn), jnp.int32),
-            pltpu.VMEM((bm, bn), jnp.int32),
-        ],
-        interpret=interpret,
-    )(ar, ai, br, bi)
+    """Residues of (CR', CI') = (AR'+iAI')(BR'+iBI') mod p. All int8 (m,k)/(k,n).
+
+    Per-modulus entry point, retained as a thin vmap-free wrapper over the
+    batched kernel (an N=1 grid) for the reference/parity tests."""
+    cr, ci = karatsuba_mod_gemm_batched(
+        ar[None], ai[None], br[None], bi[None], moduli=(int(p),),
+        bm=bm, bn=bn, bk=bk, interpret=interpret,
+    )
+    return cr[0], ci[0]

@@ -1,13 +1,27 @@
-"""jit'd public wrappers around the Pallas kernels + a full kernel-path GEMM.
+"""Public wrappers around the Pallas kernels + a full kernel-path GEMM.
 
 `ozaki2_gemm_kernels` / `ozaki2_cgemm_kernels` run the complete emulation
-pipeline exactly as it would run on a TPU chip: residue_cast -> N x
-int8_mod_gemm (or fused Karatsuba) -> crt_garner.  The pipeline structure is
+pipeline exactly as it would run on a TPU chip: residue_cast -> batched
+modular GEMM (or fused Karatsuba) -> crt_garner.  The pipeline structure is
 not duplicated here: both entry points build an `EmulationPlan` and run the
 shared executor (`repro.core.executor`) with :class:`KernelBackend`, which
 maps the executor's residue primitives onto the Pallas kernels.  The
 block-embedding formulations (paper eqs. 7/8) compose in the executor from
 `residue_matmul`, so the kernel path supports all three Fig. 1 strategies.
+
+Launch economics (paper SIII-C, Fig. 1 small-shape regime): every residue
+primitive is ONE `pallas_call` regardless of the modulus count N — the
+batched GEMM kernels fold the N planes into their leading grid dimension,
+`residue_cast` writes all N planes per operand in one pass (stacking the
+real/imag parts of a complex operand), and `crt_garner` reconstructs the
+whole (stacked) output in one pass.  A fast-mode GEMM is therefore
+cast + cast + product-per-K-chunk + reconstruct = 4 launches at any N; the
+pre-batching behaviour (one launch per modulus) is retained in
+:class:`PerModulusKernelBackend` as the parity reference.
+
+`interpret` is resolved (`interpret_default()`) *before* the jitted inner
+functions, so passing `interpret=None` vs. an explicit bool can no longer
+cause an avoidable retrace.
 
 On CPU the kernels execute in interpret mode; tests compare the pipeline
 against `repro.core` (which itself is validated against exact integers).
@@ -23,20 +37,21 @@ import jax.numpy as jnp
 from ..core.executor import chunked_residue_matmul, execute_plan
 from ..core.moduli import CRTContext
 from ..core.plan import default_n_moduli, make_plan
-from .common import split_scale_exponent
+from .common import interpret_default, split_scale_exponent
 from .crt_garner import crt_garner
-from .int8_mod_gemm import int8_mod_gemm
-from .karatsuba_fused import karatsuba_mod_gemm
+from .int8_mod_gemm import int8_mod_gemm, int8_mod_gemm_batched
+from .karatsuba_fused import karatsuba_mod_gemm, karatsuba_mod_gemm_batched
 from .residue_cast import residue_cast
 
 
 @dataclasses.dataclass(frozen=True)
-class KernelBackend:
-    """Residue backend running the Pallas TPU kernels (interpret mode on CPU).
+class _KernelBackendBase:
+    """Shared cast/reconstruct for the Pallas residue backends.
 
     CRT reconstruction is always the Garner mixed-radix kernel (the only
     TPU-native path — no f64 on the VPU); f64-grade output uses its
-    double-single (~2^-48) mode.
+    double-single (~2^-48) mode.  All kernels pad-and-slice internally, so
+    non-block-divisible shapes (odd m/n/k, `n_block` tails) are accepted.
     """
 
     interpret: bool | None = None
@@ -52,6 +67,102 @@ class KernelBackend:
             scale_axis=axis,
             interpret=self.interpret,
         )
+
+    @staticmethod
+    def _check_method(method):
+        if method != "garner":
+            raise ValueError(
+                f"the kernel backend only reconstructs via 'garner' (no f64 "
+                f"on the TPU VPU); plan requested method={method!r}"
+            )
+
+    def reconstruct(self, e_res, e_mu, e_nu, ctx: CRTContext, method, out_dtype):
+        self._check_method(method)
+        out_dd = jnp.dtype(out_dtype) == jnp.float64
+        out = crt_garner(
+            e_res, e_mu, e_nu, ctx, out_dd=out_dd, interpret=self.interpret
+        )
+        if out_dd:
+            return out[0].astype(jnp.float64) + out[1].astype(jnp.float64)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelBackend(_KernelBackendBase):
+    """Residue backend running the modulus-batched Pallas kernels: every
+    primitive is a single `pallas_call` (interpret mode on CPU).
+
+    Beyond the base cast/reconstruct it stacks the real/imag parts of
+    complex operands (`cast_stack` / `reconstruct_stack`, used by the
+    executor's complex pipeline) so one complex operand or output also
+    costs one launch.
+    """
+
+    def cast_stack(self, xs, e, axis, ctx: CRTContext, n_limbs: int):
+        """(S, m, k) stack sharing one scale vector -> (S, N, m, k), 1 launch."""
+        s1, s2 = split_scale_exponent(e)
+        return residue_cast(
+            xs.astype(jnp.float32),
+            s1,
+            s2,
+            moduli=ctx.moduli,
+            n_limbs=n_limbs,
+            scale_axis=axis,
+            interpret=self.interpret,
+        )
+
+    def residue_matmul(self, ares, bres, ctx: CRTContext):
+        """One batched launch per K-chunk; the inter-chunk sym_mod runs in
+        the kernel epilogue via the carry input (no host per-modulus loop)."""
+        return chunked_residue_matmul(
+            lambda a, b, carry: int8_mod_gemm_batched(
+                a, b, moduli=ctx.moduli, carry=carry, interpret=self.interpret
+            ),
+            ares,
+            bres,
+            ctx,
+            carry_epilogue=True,
+        )
+
+    def karatsuba(self, arr, ari, brr, bri, ctx: CRTContext):
+        """Fused-Karatsuba modular kernel: ONE launch per K-chunk for all N
+        planes, CR/CI chunk-carries folded into the kernel epilogue.  The
+        chunk loop is the executor's shared `chunked_residue_matmul` (the
+        operand pytrees are the (R, I) plane pairs), so there is a single
+        K_CHUNK_LIMIT knob."""
+        return chunked_residue_matmul(
+            lambda a, b, carry: karatsuba_mod_gemm_batched(
+                a[0], a[1], b[0], b[1],
+                moduli=ctx.moduli, carry=carry, interpret=self.interpret,
+            ),
+            (arr, ari),
+            (brr, bri),
+            ctx,
+            carry_epilogue=True,
+        )
+
+    def reconstruct_stack(
+        self, e_res, e_mu, e_nu, ctx: CRTContext, method, out_dtype
+    ):
+        """(S, N, m, n) residue stacks sharing scale exponents -> (S, m, n)
+        outputs in one launch (the executor stacks CR/CI)."""
+        self._check_method(method)
+        out_dd = jnp.dtype(out_dtype) == jnp.float64
+        out = crt_garner(
+            e_res, e_mu, e_nu, ctx, out_dd=out_dd, interpret=self.interpret
+        )
+        if out_dd:
+            return out[:, 0].astype(jnp.float64) + out[:, 1].astype(jnp.float64)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class PerModulusKernelBackend(_KernelBackendBase):
+    """Pre-batching reference: one `pallas_call` per modulus (3N-launch
+    complex products via per-modulus fused Karatsuba), kept as the bitwise
+    parity target for :class:`KernelBackend` and as the launch-count
+    contrast in the perfmodel tests.
+    """
 
     def _mod_gemm_stack(self, ares, bres, ctx: CRTContext):
         """Un-chunked per-modulus kernel launches (k <= K_CHUNK_LIMIT)."""
@@ -69,7 +180,6 @@ class KernelBackend:
         )
 
     def karatsuba(self, arr, ari, brr, bri, ctx: CRTContext):
-        """Fused-Karatsuba modular kernel: one launch per modulus."""
         er_planes, ei_planes = [], []
         for l in range(ctx.n):
             cr, ci = karatsuba_mod_gemm(
@@ -84,39 +194,11 @@ class KernelBackend:
             ei_planes.append(ci)
         return jnp.stack(er_planes, axis=0), jnp.stack(ei_planes, axis=0)
 
-    def reconstruct(self, e_res, e_mu, e_nu, ctx: CRTContext, method, out_dtype):
-        if method != "garner":
-            raise ValueError(
-                f"the kernel backend only reconstructs via 'garner' (no f64 "
-                f"on the TPU VPU); plan requested method={method!r}"
-            )
-        out_dd = jnp.dtype(out_dtype) == jnp.float64
-        out = crt_garner(
-            e_res, e_mu, e_nu, ctx, out_dd=out_dd, interpret=self.interpret
-        )
-        if out_dd:
-            return out[0].astype(jnp.float64) + out[1].astype(jnp.float64)
-        return out
-
 
 @functools.partial(
     jax.jit, static_argnames=("n_moduli", "mode", "n_block", "interpret")
 )
-def ozaki2_gemm_kernels(
-    a: jnp.ndarray,
-    b: jnp.ndarray,
-    n_moduli: int | None = None,
-    mode: str = "fast",
-    n_block: int | None = None,
-    interpret: bool | None = None,
-) -> jnp.ndarray:
-    """Full kernel-path real GEMM emulation (f32 in / f32 out).
-
-    This is the TPU execution plan; numerically it provides f32-grade output
-    (the double-single 'dd' output path of crt_garner serves f64-grade).
-    """
-    if n_moduli is None:
-        n_moduli = default_n_moduli(jnp.float32, mode)
+def _gemm_kernels_jit(a, b, n_moduli, mode, n_block, interpret):
     plan = make_plan(
         jnp.float32,
         n_moduli=n_moduli,
@@ -129,10 +211,48 @@ def ozaki2_gemm_kernels(
     return execute_plan(plan, a, b, KernelBackend(interpret))
 
 
+def ozaki2_gemm_kernels(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    n_moduli: int | None = None,
+    mode: str = "fast",
+    n_block: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Full kernel-path real GEMM emulation (f32 in / f32 out).
+
+    This is the TPU execution plan; numerically it provides f32-grade output
+    (the double-single 'dd' output path of crt_garner serves f64-grade).
+    Defaults (`n_moduli`, `interpret`) are resolved here, outside the jitted
+    inner function, so `interpret=None` never causes an extra retrace.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    if n_moduli is None:
+        n_moduli = default_n_moduli(jnp.float32, mode)
+    return _gemm_kernels_jit(a, b, int(n_moduli), mode, n_block, bool(interpret))
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("n_moduli", "mode", "formulation", "n_block", "interpret"),
 )
+def _cgemm_kernels_jit(a, b, n_moduli, mode, formulation, n_block, interpret):
+    plan = make_plan(
+        jnp.complex64,
+        n_moduli=n_moduli,
+        mode=mode,
+        method="garner",
+        formulation=formulation,
+        n_block=n_block,
+        out_dtype=jnp.complex64,
+        shape=(a.shape[-2], a.shape[-1], b.shape[-1]),
+        fused_karatsuba=True,
+        modulus_batched=True,
+    )
+    return execute_plan(plan, a, b, KernelBackend(interpret))
+
+
 def ozaki2_cgemm_kernels(
     a: jnp.ndarray,
     b: jnp.ndarray,
@@ -145,20 +265,15 @@ def ozaki2_cgemm_kernels(
     """Full kernel-path complex GEMM emulation (complex64 in/out).
 
     formulation 'karatsuba' uses the fused-Karatsuba modular kernel (one
-    launch per modulus); 'block_a'/'block_b'/'auto' use the block embeddings
-    composed over `int8_mod_gemm`.
+    batched launch for all moduli); 'block_a'/'block_b'/'auto' use the block
+    embeddings composed over the batched `int8_mod_gemm_batched`.  Defaults
+    are resolved here, outside the jitted inner function (no `interpret=None`
+    retrace).
     """
+    if interpret is None:
+        interpret = interpret_default()
     if n_moduli is None:
         n_moduli = default_n_moduli(jnp.complex64, mode)
-    plan = make_plan(
-        jnp.complex64,
-        n_moduli=n_moduli,
-        mode=mode,
-        method="garner",
-        formulation=formulation,
-        n_block=n_block,
-        out_dtype=jnp.complex64,
-        shape=(a.shape[-2], a.shape[-1], b.shape[-1]),
-        fused_karatsuba=True,
+    return _cgemm_kernels_jit(
+        a, b, int(n_moduli), mode, formulation, n_block, bool(interpret)
     )
-    return execute_plan(plan, a, b, KernelBackend(interpret))

@@ -5,10 +5,18 @@ tile once from HBM and writes all N residue planes, instead of N separate
 elementwise passes (the paper's step-1 memory term `(3N + ...)k(m+n)/b` is
 dominated by exactly this traffic).
 
-Grid: (m/bm, k/bk).  Block shapes: input (bm, bk) f32; scale factors (bm,)
-broadcast along rows (axis=0 operand) or (bk,) along columns (axis=1).
-Output (N, bm, bk) int8 — N is small and static, the whole stack of output
+Grid: (S, m/bm, k/bk) with S an optional leading *stack* dimension: a
+(S, m, k) input casts S same-shaped matrices sharing one scale vector in a
+single launch — the complex pipeline stacks the real and imaginary parts of
+an operand so one operand costs one `pallas_call` regardless of dtype
+class.  2D inputs are treated as S=1 and squeezed on return.
+
+Block shapes: input (1, bm, bk) f32; scale factors (bm,) broadcast along
+rows (axis=0 operand) or (bk,) along columns (axis=1); output
+(1, N, bm, bk) int8 — N is small and static, the whole stack of output
 tiles lives in VMEM (N * bm * bk bytes; 13 * 256 * 512 = 1.7 MiB).
+Non-block-divisible m/k are zero-padded to the block grid and sliced back
+(zeros are residue-exact; the scale vectors pad with 1.0).
 """
 from __future__ import annotations
 
@@ -18,11 +26,18 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import LIMB, interpret_default, limb_radix_f32, sym_mod_f32
+from .common import (
+    LIMB,
+    block_and_padded,
+    interpret_default,
+    limb_radix_f32,
+    pad_dims,
+    sym_mod_f32,
+)
 
 
 def _kernel(a_ref, s1_ref, s2_ref, out_ref, *, moduli, n_limbs, scale_axis):
-    a = a_ref[...]
+    a = a_ref[0]
     if scale_axis == 0:
         scale = (s1_ref[...] * s2_ref[...])[:, None]
     else:
@@ -46,13 +61,38 @@ def _kernel(a_ref, s1_ref, s2_ref, out_ref, *, moduli, n_limbs, scale_axis):
         acc = jnp.zeros_like(x)
         for i in range(n_limbs):
             acc = acc + sym_mod_f32(limbs[i], pf, half) * float(radix[i, l])
-        out_ref[l, :, :] = sym_mod_f32(acc, pf, half).astype(jnp.int8)
+        out_ref[0, l, :, :] = sym_mod_f32(acc, pf, half).astype(jnp.int8)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("moduli", "n_limbs", "scale_axis", "bm", "bk", "interpret"),
 )
+def _stacked_call(a, scale1, scale2, *, moduli, n_limbs, scale_axis, bm, bk,
+                  interpret):
+    s, m, k = a.shape
+    n = len(moduli)
+
+    def smap(si, i, j):
+        return (i,) if scale_axis == 0 else (j,)
+
+    grid = (s, m // bm, k // bk)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, moduli=moduli, n_limbs=n_limbs, scale_axis=scale_axis
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda si, i, j: (si, i, j)),
+            pl.BlockSpec((bm if scale_axis == 0 else bk,), smap),
+            pl.BlockSpec((bm if scale_axis == 0 else bk,), smap),
+        ],
+        out_specs=pl.BlockSpec((1, n, bm, bk), lambda si, i, j: (si, 0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, n, m, k), jnp.int8),
+        interpret=interpret,
+    )(a, scale1, scale2)
+
+
 def residue_cast(
     a: jnp.ndarray,
     scale1: jnp.ndarray,
@@ -65,32 +105,24 @@ def residue_cast(
     bk: int = 512,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """a: (m, k) f32; scale1*scale2: power-of-two factors along `scale_axis`.
-    Returns (N, m, k) int8 symmetric residues of trunc(a * scale)."""
+    """a: (m, k) or stacked (S, m, k) f32; scale1*scale2: power-of-two
+    factors along `scale_axis` (shared by all S stack entries).  Returns
+    (N, m, k) — or (S, N, m, k) for stacked input — int8 symmetric residues
+    of trunc(a * scale), in one `pallas_call` either way."""
     if interpret is None:
         interpret = interpret_default()
-    m, k = a.shape
-    bm = min(bm, m)
-    bk = min(bk, k)
-    if m % bm or k % bk:
-        raise ValueError(f"shape ({m},{k}) not divisible by block ({bm},{bk})")
-    n = len(moduli)
-
-    def smap(i, j):
-        return (i,) if scale_axis == 0 else (j,)
-
-    grid = (m // bm, k // bk)
-    return pl.pallas_call(
-        functools.partial(
-            _kernel, moduli=moduli, n_limbs=n_limbs, scale_axis=scale_axis
-        ),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
-            pl.BlockSpec((bm if scale_axis == 0 else bk,), smap),
-            pl.BlockSpec((bm if scale_axis == 0 else bk,), smap),
-        ],
-        out_specs=pl.BlockSpec((n, bm, bk), lambda i, j: (0, i, j)),
-        out_shape=jax.ShapeDtypeStruct((n, m, k), jnp.int8),
-        interpret=interpret,
-    )(a, scale1, scale2)
+    stacked = a.ndim == 3
+    if not stacked:
+        a = a[None]
+    _, m, k = a.shape
+    bm, mp = block_and_padded(m, bm)
+    bk, kp = block_and_padded(k, bk)
+    a = pad_dims(a, {1: mp, 2: kp})
+    spad = mp if scale_axis == 0 else kp
+    scale1 = pad_dims(scale1, {0: spad}, value=1.0)
+    scale2 = pad_dims(scale2, {0: spad}, value=1.0)
+    out = _stacked_call(
+        a, scale1, scale2, moduli=tuple(moduli), n_limbs=n_limbs,
+        scale_axis=scale_axis, bm=bm, bk=bk, interpret=bool(interpret),
+    )[:, :, :m, :k]
+    return out if stacked else out[0]

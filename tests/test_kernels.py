@@ -1,17 +1,30 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracles.
 
 The three integer kernels must be BIT-EXACT against the oracles; the Garner
-reconstruction kernel is compared at its double-single precision.
+reconstruction kernel is compared at its double-single precision.  The
+modulus-batched kernels (one `pallas_call` for all N planes) must be
+BIT-IDENTICAL to the retained per-modulus launches, including ragged
+(non-block-divisible) shapes and chunked-K carries, and the pipeline's
+launch counts must match the perfmodel's `kernel_launch_count`.
 """
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from conftest import FAST_K, FAST_M, FAST_N, phi_matrix
+from repro.core import perfmodel
+from repro.core.executor import execute_plan
 from repro.core.moduli import make_crt_context
+from repro.core.plan import make_plan
 from repro.kernels import (
+    KernelBackend,
+    PerModulusKernelBackend,
+    count_pallas_launches,
     crt_garner,
     int8_mod_gemm,
+    int8_mod_gemm_batched,
     karatsuba_mod_gemm,
+    karatsuba_mod_gemm_batched,
     ozaki2_cgemm_kernels,
     ozaki2_gemm_kernels,
     residue_cast,
@@ -157,3 +170,211 @@ def test_kernel_pipeline_matches_core_residues(rng):
     aq = quantize(jnp.asarray(a, jnp.float64), scaling.exp2_vector(jnp.asarray(e)), 0)
     core = residues_from_quantized(aq, ctx, 2)
     np.testing.assert_array_equal(np.asarray(kern), np.asarray(core))
+
+
+# ================================================= modulus-batched kernels
+
+
+BATCHED = KernelBackend(interpret=True)
+PER_MODULUS = PerModulusKernelBackend(interpret=True)
+
+
+def _garner_plan(dtype, mode="fast", formulation=None, n_moduli=5, n_block=None):
+    return make_plan(
+        dtype, n_moduli=n_moduli, mode=mode, method="garner",
+        formulation=formulation, n_block=n_block,
+    )
+
+
+def _operands(rng, dtype, m=FAST_M, k=FAST_K, n=FAST_N):
+    a = jnp.asarray(phi_matrix(rng, (m, k), 0.5, dtype))
+    b = jnp.asarray(phi_matrix(rng, (k, n), 0.5, dtype))
+    return a, b
+
+
+@pytest.mark.parametrize("mode", ["fast", "accu"])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_batched_matches_per_modulus_real(rng, dtype, mode):
+    """Tentpole parity: the single-launch batched kernels are bitwise
+    identical to the retained per-modulus launches (real pipelines)."""
+    a, b = _operands(rng, dtype)
+    plan = _garner_plan(dtype, mode)
+    got = np.asarray(execute_plan(plan, a, b, BATCHED))
+    want = np.asarray(execute_plan(plan, a, b, PER_MODULUS))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("formulation", ["karatsuba", "block_a", "block_b"])
+@pytest.mark.parametrize("mode", ["fast", "accu"])
+@pytest.mark.parametrize("dtype", [np.complex64, np.complex128])
+def test_batched_matches_per_modulus_complex(rng, dtype, mode, formulation):
+    """Tentpole parity, complex: batched vs per-modulus across all three
+    Fig. 1 formulations (Karatsuba uses the fused kernel on both sides;
+    the block embeddings compose over the real residue product)."""
+    a, b = _operands(rng, dtype)
+    plan = _garner_plan(dtype, mode, formulation)
+    got = np.asarray(execute_plan(plan, a, b, BATCHED))
+    want = np.asarray(execute_plan(plan, a, b, PER_MODULUS))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("p", [3, 251])
+def test_int8_mod_gemm_ragged_regression(rng, p):
+    """Non-block-divisible shapes previously raised ValueError on the kernel
+    path; pad-and-slice must keep them bit-exact (m,n,k prime)."""
+    m, n, k = 37, 29, 53
+    h = (p - 1) // 2
+    a = rng.integers(-h, h + 1, size=(m, k)).astype(np.int8)
+    b = rng.integers(-h, h + 1, size=(k, n)).astype(np.int8)
+    out = int8_mod_gemm(jnp.asarray(a), jnp.asarray(b), p=p, bm=16, bn=16, bk=16)
+    expect = ref.int8_mod_gemm_ref(jnp.asarray(a), jnp.asarray(b), p=p)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_karatsuba_ragged_regression(rng):
+    m, n, k, p = 37, 29, 53, 251
+    h = (p - 1) // 2
+    mats = [
+        rng.integers(-h, h + 1, size=s).astype(np.int8)
+        for s in [(m, k), (m, k), (k, n), (k, n)]
+    ]
+    cr, ci = karatsuba_mod_gemm(*map(jnp.asarray, mats), p=p, bm=16, bn=16, bk=16)
+    er, ei = ref.karatsuba_mod_gemm_ref(*map(jnp.asarray, mats), p=p)
+    np.testing.assert_array_equal(np.asarray(cr), np.asarray(er))
+    np.testing.assert_array_equal(np.asarray(ci), np.asarray(ei))
+
+
+def test_full_pipeline_ragged_default_blocks(rng):
+    """m=257 exceeds the default 256-row block and is not divisible by it —
+    exactly the case that raised before pad-and-slice; the padded pipeline
+    must stay inside the f32 accuracy band and match per-modulus bitwise."""
+    m, k, n = 257, 131, 67
+    a = (rng.random((m, k)) - 0.5).astype(np.float32)
+    b = (rng.random((k, n)) - 0.5).astype(np.float32)
+    y = np.asarray(ozaki2_gemm_kernels(jnp.asarray(a), jnp.asarray(b), n_moduli=8))
+    expect = a.astype(np.float64) @ b.astype(np.float64)
+    assert np.max(np.abs(y - expect)) / np.max(np.abs(expect)) < 1e-5
+    plan = _garner_plan(np.float32, n_moduli=8)
+    want = np.asarray(
+        execute_plan(plan, jnp.asarray(a), jnp.asarray(b), PER_MODULUS)
+    )
+    np.testing.assert_array_equal(y, want)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.complex64])
+def test_ragged_n_block_split(rng, dtype):
+    """n_block=3 on n=FAST_N leaves a ragged tail block; the kernel path
+    must produce the same bits as the unblocked run (same residues sliced)."""
+    a, b = _operands(rng, dtype)
+    formulation = "karatsuba" if np.issubdtype(dtype, np.complexfloating) else None
+    full = np.asarray(
+        execute_plan(_garner_plan(dtype, formulation=formulation), a, b, BATCHED)
+    )
+    blocked = np.asarray(
+        execute_plan(
+            _garner_plan(dtype, formulation=formulation, n_block=3), a, b, BATCHED
+        )
+    )
+    np.testing.assert_array_equal(full, blocked)
+
+
+def test_chunked_k_carry_epilogue(rng, monkeypatch):
+    """Acceptance: chunked-K stays on the batched path — one launch per
+    K-chunk, inter-chunk sym_mod folded into the kernel carry epilogue, and
+    the result is bitwise identical to the single-chunk run.  Both the real
+    product and the Karatsuba (R, I) pairs chunk through the one shared
+    `chunked_residue_matmul` loop, so a single K_CHUNK_LIMIT patch governs
+    both; the un-chunked baselines are computed BEFORE patching."""
+    import repro.core.executor as executor
+
+    a, b = _operands(rng, np.float32, k=160)
+    plan = _garner_plan(np.float32)
+    ca, cb = _operands(rng, np.complex64, k=160)
+    cplan = _garner_plan(np.complex64, formulation="karatsuba")
+    whole = np.asarray(execute_plan(plan, a, b, BATCHED))
+    cwhole = np.asarray(execute_plan(cplan, ca, cb, BATCHED))
+
+    monkeypatch.setattr(executor, "K_CHUNK_LIMIT", 64)
+    chunked = np.asarray(execute_plan(plan, a, b, BATCHED))
+    np.testing.assert_array_equal(whole, chunked)
+    # 3 chunks of k=160 -> 2 casts + 3 products + 1 reconstruct = 6 launches
+    n_launches = count_pallas_launches(
+        lambda x, y: execute_plan(plan, x, y, BATCHED), a, b
+    )
+    assert n_launches == perfmodel.kernel_launch_count(5, "real", n_chunks=3) == 6
+
+    # complex Karatsuba: CR/CI chunk carries thread through the fused kernel
+    cchunked = np.asarray(execute_plan(cplan, ca, cb, BATCHED))
+    np.testing.assert_array_equal(cwhole, cchunked)
+
+
+@pytest.mark.parametrize("n_moduli", [3, 7])
+def test_launch_counts_independent_of_n(rng, n_moduli):
+    """Acceptance: exactly one `pallas_call` per cast, one for the modular
+    product, one for reconstruction — at ANY modulus count — while the
+    per-modulus reference scales with N.  Counts must agree with the
+    perfmodel's `kernel_launch_count` (which drives formulation='auto')."""
+    a, b = _operands(rng, np.float32)
+    plan = _garner_plan(np.float32, n_moduli=n_moduli)
+    got = count_pallas_launches(
+        lambda x, y: execute_plan(plan, x, y, BATCHED), a, b
+    )
+    assert got == perfmodel.kernel_launch_count(n_moduli, "real") == 4
+    got_pm = count_pallas_launches(
+        lambda x, y: execute_plan(plan, x, y, PER_MODULUS), a, b
+    )
+    assert got_pm == perfmodel.kernel_launch_count(
+        n_moduli, "real", modulus_batched=False
+    ) == 3 + n_moduli
+
+
+@pytest.mark.parametrize("formulation", ["karatsuba", "block_a"])
+def test_launch_counts_complex(rng, formulation):
+    ca, cb = _operands(rng, np.complex64)
+    plan = _garner_plan(np.complex64, formulation=formulation, n_moduli=4)
+    got = count_pallas_launches(
+        lambda x, y: execute_plan(plan, x, y, BATCHED), ca, cb
+    )
+    # stacked casts (re+im together), one batched product, stacked CR/CI
+    # reconstruction: 4 launches total regardless of N or formulation
+    assert got == perfmodel.kernel_launch_count(4, formulation) == 4
+    got_pm = count_pallas_launches(
+        lambda x, y: execute_plan(plan, x, y, PER_MODULUS), ca, cb
+    )
+    assert got_pm == perfmodel.kernel_launch_count(
+        4, formulation, modulus_batched=False
+    )
+
+
+def test_batched_kernels_direct_parity(rng):
+    """Kernel-level parity: one batched call == N per-modulus calls, with
+    and without a carry operand."""
+    ctx = make_crt_context(4)
+    m, n, k = 32, 24, 48
+    ares = rng.integers(-127, 128, size=(4, m, k)).astype(np.int8)
+    bres = rng.integers(-127, 128, size=(4, k, n)).astype(np.int8)
+    carry = rng.integers(-100, 101, size=(4, m, n)).astype(np.int8)
+    got = np.asarray(
+        int8_mod_gemm_batched(
+            jnp.asarray(ares), jnp.asarray(bres), moduli=ctx.moduli,
+            carry=jnp.asarray(carry),
+        )
+    )
+    for l, p in enumerate(ctx.moduli):
+        exact = ares[l].astype(np.int64) @ bres[l].astype(np.int64) + carry[l]
+        r = exact % p
+        r = np.where(r > (p - 1) // 2, r - p, r)
+        np.testing.assert_array_equal(got[l], r)
+    mats = [
+        rng.integers(-127, 128, size=s).astype(np.int8)
+        for s in [(4, m, k), (4, m, k), (4, k, n), (4, k, n)]
+    ]
+    crb, cib = karatsuba_mod_gemm_batched(
+        *map(jnp.asarray, mats), moduli=ctx.moduli
+    )
+    for l, p in enumerate(ctx.moduli):
+        er, ei = ref.karatsuba_mod_gemm_ref(
+            *(jnp.asarray(mm[l]) for mm in mats), p=int(p)
+        )
+        np.testing.assert_array_equal(np.asarray(crb)[l], np.asarray(er))
+        np.testing.assert_array_equal(np.asarray(cib)[l], np.asarray(ei))
