@@ -22,15 +22,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import perfmodel
+from repro.core import GemmPolicy, perfmodel
 from repro.core.moduli import make_crt_context
-from repro.kernels import (
-    count_pallas_launches,
-    karatsuba_mod_gemm,
-    ozaki2_cgemm_kernels,
-    ozaki2_gemm_kernels,
-)
+from repro.kernels import count_pallas_launches, karatsuba_mod_gemm
 from repro.kernels import ref as kref
+from repro import linalg
 
 from .common import emit
 
@@ -63,25 +59,29 @@ def check_launch_counts(m: int, n: int, k: int, n_moduli: int) -> int:
             np.complex64
         )
     )
+    def kpol(backend, **kw):
+        return GemmPolicy(
+            backend=backend, n_moduli=n_moduli, execution="kernel",
+            interpret=True, **kw,
+        )
+
     cases = [
         (
             "real",
-            lambda x, y: ozaki2_gemm_kernels(x, y, n_moduli=n_moduli, interpret=True),
+            lambda x, y: linalg.matmul(x, y, policy=kpol("ozaki2_f32")),
             (a, b),
             perfmodel.kernel_launch_count(n_moduli, "real"),
         ),
         (
             "karatsuba",
-            lambda x, y: ozaki2_cgemm_kernels(
-                x, y, n_moduli=n_moduli, interpret=True
-            ),
+            lambda x, y: linalg.matmul(x, y, policy=kpol("ozaki2_c64")),
             (ca, cb),
             perfmodel.kernel_launch_count(n_moduli, "karatsuba"),
         ),
         (
             "block_a",
-            lambda x, y: ozaki2_cgemm_kernels(
-                x, y, n_moduli=n_moduli, formulation="block_a", interpret=True
+            lambda x, y: linalg.matmul(
+                x, y, policy=kpol("ozaki2_c64", formulation="block_a")
             ),
             (ca, cb),
             perfmodel.kernel_launch_count(n_moduli, "block_a"),

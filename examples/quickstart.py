@@ -1,12 +1,13 @@
-"""Quickstart: Ozaki-II emulated GEMM as a drop-in high-precision matmul.
+"""Quickstart: `repro.linalg` — a drop-in high-precision matmul, scoped by
+`repro.use_policy` (the library analog of the paper's LD_PRELOAD deployment).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 import jax.numpy as jnp
 
-import repro  # noqa: F401
-from repro.core import ozaki2_cgemm, ozaki2_gemm
+import repro
+from repro.core import GemmPolicy
 from repro.core.perfmodel import TPU_V5E, complex_tflops
 
 
@@ -15,26 +16,46 @@ def main():
     m = k = n = 256
 
     # ---- real f64 GEMM emulated on int8 arithmetic -------------------------
-    a = rng.standard_normal((m, k))
-    b = rng.standard_normal((k, n))
-    c = np.asarray(ozaki2_gemm(jnp.asarray(a), jnp.asarray(b)))  # default N=16
-    ref = a.astype(np.longdouble) @ b.astype(np.longdouble)
+    # One policy object answers every static question: what to emulate
+    # (backend), how precisely (n_moduli/mode), and WHERE to run it
+    # (execution: jnp reference | modulus-batched Pallas kernels).
+    a = jnp.asarray(rng.standard_normal((m, k)))
+    b = jnp.asarray(rng.standard_normal((k, n)))
+    with repro.use_policy(GemmPolicy(backend="ozaki2_f64")):
+        c = np.asarray(repro.linalg.matmul(a, b))  # default N=16
+    ref = np.asarray(a, np.longdouble) @ np.asarray(b, np.longdouble)
     print("DGEMM emulation max rel err:",
           float(np.max(np.abs(c - ref) / np.abs(ref).max())))
 
     # ---- the paper's contribution: complex GEMM ---------------------------
-    az = (a + 1j * rng.standard_normal((m, k))).astype(np.complex128)
-    bz = (b + 1j * rng.standard_normal((k, n))).astype(np.complex128)
-    cz = np.asarray(ozaki2_cgemm(jnp.asarray(az), jnp.asarray(bz)))  # N=14
-    refz = az.astype(np.clongdouble) @ bz.astype(np.clongdouble)
+    az = jnp.asarray(a + 1j * rng.standard_normal((m, k)), jnp.complex128)
+    bz = jnp.asarray(b + 1j * rng.standard_normal((k, n)), jnp.complex128)
+    cz = np.asarray(repro.linalg.zgemm(az, bz))  # BLAS-shaped wrapper, N=14
+    refz = np.asarray(az, np.clongdouble) @ np.asarray(bz, np.clongdouble)
     print("ZGEMM emulation max rel err:",
           float(np.max(np.abs(cz - refz) / np.abs(refz).max())))
     print("native ZGEMM    max rel err:",
-          float(np.max(np.abs(az @ bz - refz) / np.abs(refz).max())))
+          float(np.max(np.abs(np.asarray(az @ bz) - refz) / np.abs(refz).max())))
+
+    # ---- same policy, Pallas kernel execution -----------------------------
+    # execution="kernel" runs the modulus-batched TPU pipeline (interpret
+    # mode on this CPU container): 4 pallas_calls per GEMM at any N, and for
+    # f32-grade dtypes bitwise-identical to the reference execution.
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+    kpol = GemmPolicy(backend="ozaki2_f32", execution="kernel")
+    with repro.use_policy(kpol):
+        ck = np.asarray(repro.linalg.matmul(a32, b32))
+    cr = np.asarray(
+        repro.linalg.matmul(
+            a32, b32, policy=GemmPolicy(backend="ozaki2_f32")
+        )
+    )
+    print("kernel path bitwise == reference (f32):", bool((ck == cr).all()))
 
     # fewer moduli = faster & less accurate; more = beyond-native accuracy
     for nm in (10, 13, 16):
-        czn = np.asarray(ozaki2_cgemm(jnp.asarray(az), jnp.asarray(bz), nm))
+        with repro.use_policy(GemmPolicy(backend="ozaki2_c128", n_moduli=nm)):
+            czn = np.asarray(repro.linalg.matmul(az, bz))
         err = float(np.max(np.abs(czn - refz) / np.abs(refz).max()))
         tf = complex_tflops(16384, 16384, 16384, nm, TPU_V5E)
         print(f"  N={nm:2d}: err={err:.2e}   projected v5e ZGEMM @16k^3: {tf:6.1f} TFLOPS"

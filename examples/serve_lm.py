@@ -1,7 +1,16 @@
 """Batched serving example: prefill + KV-cache decode with sampling.
 
-    PYTHONPATH=src python examples/serve_lm.py [--arch qwen2.5-32b]
+    PYTHONPATH=src python examples/serve_lm.py [--arch qwen2.5-32b] \
+        [--backend ozaki2_f32] [--execution kernel] \
+        [--prepare] [--prepared-dir DIR]
+
 (uses the reduced config of the chosen architecture on CPU)
+
+With an emulated --backend, the whole model is routed onto the selected
+GemmPolicy via a `repro.use_policy` scope around config construction — the
+context-scoped drop-in deployment path.  --prepare residue-casts the weights
+once at engine construction; --prepared-dir persists those planes so a
+restarted server restores them instead of re-preparing.
 """
 import argparse
 import time
@@ -10,8 +19,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-import repro  # noqa: F401
+import contextlib
+import dataclasses
+
+import repro
 from repro.configs import ARCHS, get_reduced
+from repro.core import GemmPolicy
 from repro.models import Model
 from repro.serve import ServeEngine
 
@@ -23,14 +36,34 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--backend", default="native",
+                    choices=["native", "ozaki2_f32", "ozaki2_f64",
+                             "ozaki2_c64", "ozaki2_c128"])
+    ap.add_argument("--execution", default="reference",
+                    choices=["reference", "kernel", "per_modulus_kernel"])
+    ap.add_argument("--prepare", action="store_true",
+                    help="residue-cast the weights once at construction")
+    ap.add_argument("--prepared-dir", default=None,
+                    help="persist/restore the prepared residue planes here")
     args = ap.parse_args()
 
-    cfg = get_reduced(args.arch)
+    scope = contextlib.nullcontext()
+    if args.backend != "native":
+        scope = repro.use_policy(
+            GemmPolicy(backend=args.backend, execution=args.execution)
+        )
+    with scope:
+        # the config pins the ambient policy at construction, so every
+        # matmul in the model runs on the selected backend/execution
+        cfg = get_reduced(args.arch)
+    if args.backend != "native":
+        cfg = dataclasses.replace(cfg, dtype="float32")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     npre = cfg.n_prefix_embeds if cfg.frontend else 0
     cache_len = args.prompt_len + npre + args.new_tokens
-    eng = ServeEngine(model, params, cache_len=cache_len, batch_size=args.batch)
+    eng = ServeEngine(model, params, cache_len=cache_len, batch_size=args.batch,
+                      prepare=args.prepare, prepared_dir=args.prepared_dir)
 
     rng = np.random.default_rng(0)
     batch = {

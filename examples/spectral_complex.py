@@ -11,8 +11,8 @@ every GPU in Table I.
 import numpy as np
 import jax.numpy as jnp
 
-import repro  # noqa: F401
-from repro.core import PreparedOperand, gemm_prepared, ozaki2_cgemm
+import repro
+from repro.core import GemmPolicy, PreparedOperand, gemm_prepared
 from repro.core.perfmodel import B200, TPU_V5E, complex_tflops, select_formulation
 
 
@@ -34,11 +34,13 @@ def main():
     form = select_formulation(n, batch, n, 14, mode="accu")
     print(f"perfmodel-selected formulation @ ({n},{n},{batch}): {form}")
 
+    # scope the drop-in API once; every matmul below routes through it
+    policy = GemmPolicy(backend="ozaki2_c128", n_moduli=14, mode="accu",
+                        formulation="auto")
+
     def emul(a, b):
-        return np.asarray(
-            ozaki2_cgemm(jnp.asarray(a), jnp.asarray(b), 14, "accu",
-                         formulation="auto")
-        )
+        with repro.use_policy(policy):
+            return np.asarray(repro.linalg.matmul(jnp.asarray(a), jnp.asarray(b)))
 
     spec = emul(f, x)                       # F X
     filt = h[:, None] * spec                # diag(h) F X

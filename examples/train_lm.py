@@ -41,12 +41,17 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
     ap.add_argument("--emulated", action="store_true",
                     help="run every matmul on the Ozaki-II int8 backend")
+    ap.add_argument("--execution", default="reference",
+                    choices=["reference", "kernel", "per_modulus_kernel"],
+                    help="residue backend for --emulated (GemmPolicy axis)")
     args = ap.parse_args()
 
     cfg = PRESETS[args.preset]
     if args.emulated:
         cfg = dataclasses.replace(
-            cfg, gemm_policy=GemmPolicy(backend="ozaki2_f32", n_moduli=8),
+            cfg,
+            gemm_policy=GemmPolicy(backend="ozaki2_f32", n_moduli=8,
+                                   execution=args.execution),
             dtype="float32",
         )
     model = Model(cfg)

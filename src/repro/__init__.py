@@ -13,4 +13,12 @@ if os.environ.get("REPRO_NO_X64", "0") != "1":
 
     jax.config.update("jax_enable_x64", True)
 
+# The context-scoped execution-policy API (the LD_PRELOAD analog): scope a
+# GemmPolicy with `repro.use_policy(...)` and every `repro.linalg.matmul` —
+# including the model/serve/train layers, whose configs resolve the ambient
+# policy at construction — routes through it.
+from . import linalg  # noqa: E402
+from .linalg import current_policy, use_policy  # noqa: E402
+
+__all__ = ["current_policy", "linalg", "use_policy"]
 __version__ = "1.0.0"

@@ -8,6 +8,14 @@ serialization on a background thread (compute/IO overlap); `wait()` joins.
 Restore takes an optional sharding tree: arrays are `device_put` straight to
 their shards, which is also the elastic-rescale path (same checkpoint, new
 mesh — see distributed/elastic.py).
+
+Param trees may contain `PreparedOperand` leaves (weights pre-residue-cast
+for Ozaki-II serving): their scale exponents and int8 residue planes are
+flattened into the same npz, and `restore` rebuilds the operands from the
+static metadata carried by the `like` tree (obtained for free via
+`jax.eval_shape(prepare_weights, ...)` — no residue cast runs).  This is
+what lets `ServeEngine(prepare=True, prepared_dir=...)` restore residue
+planes across restarts instead of re-preparing on construction.
 """
 from __future__ import annotations
 
@@ -19,9 +27,34 @@ import threading
 import jax
 import numpy as np
 
+from ..core.executor import (
+    PreparedOperand,
+    _prepared_flatten,
+    _prepared_unflatten,
+)
+
+
+def _prepared_encode(p: PreparedOperand) -> dict:
+    """Array children of a PreparedOperand as a plain dict, via the same
+    flatten the jax pytree registration uses (one source of truth for the
+    children/aux split; the aux rides in the `like` tree on restore)."""
+    (e_scale, residues), _ = _prepared_flatten(p)
+    enc = {"e_scale": e_scale}
+    for i, r in enumerate(residues):
+        enc[f"res{i}"] = r
+    return enc
+
+
+def _prepared_decode(like: PreparedOperand, enc: dict) -> PreparedOperand:
+    _, aux = _prepared_flatten(like)
+    residues = tuple(enc[f"res{i}"] for i in range(len(like.residues)))
+    return _prepared_unflatten(aux, (enc["e_scale"], residues))
+
 
 def _flatten(tree, prefix=""):
-    if isinstance(tree, dict):
+    if isinstance(tree, PreparedOperand):
+        yield from _flatten(_prepared_encode(tree), prefix)
+    elif isinstance(tree, dict):
         for k in sorted(tree):
             yield from _flatten(tree[k], f"{prefix}{k}/")
     elif isinstance(tree, (list, tuple)):
@@ -32,6 +65,10 @@ def _flatten(tree, prefix=""):
 
 
 def _unflatten_into(like, flat, prefix=""):
+    if isinstance(like, PreparedOperand):
+        return _prepared_decode(
+            like, _unflatten_into(_prepared_encode(like), flat, prefix)
+        )
     if isinstance(like, dict):
         return {k: _unflatten_into(like[k], flat, f"{prefix}{k}/") for k in like}
     if isinstance(like, (list, tuple)):

@@ -23,15 +23,33 @@ ARCHS = (
 
 
 def _module(arch: str):
+    from ..linalg import _no_ambient_policy
+
     name = arch.replace("-", "_").replace(".", "_")
-    return importlib.import_module(f"repro.configs.{name}")
+    with _no_ambient_policy():
+        # first import may run inside a use_policy scope; the module-level
+        # CONFIG/REDUCED must stay scope-independent (re-pinned by _resolve)
+        return importlib.import_module(f"repro.configs.{name}")
+
+
+def _resolve(cfg, overrides):
+    """Registry configs are built at import time (no ambient scope), so a
+    `repro.use_policy` scope active at *lookup* re-pins their matmul policy
+    — unless the arch module configured an emulated policy explicitly or the
+    caller overrides `gemm_policy` themselves."""
+    if "gemm_policy" not in overrides:
+        from ..core.policy import NATIVE
+        from ..linalg import current_policy
+
+        ambient = current_policy()
+        if ambient != NATIVE and cfg.gemm_policy == NATIVE:
+            overrides = dict(overrides, gemm_policy=ambient)
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
 
 
 def get_config(arch: str, **overrides):
-    cfg = _module(arch).CONFIG
-    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+    return _resolve(_module(arch).CONFIG, overrides)
 
 
 def get_reduced(arch: str, **overrides):
-    cfg = _module(arch).REDUCED
-    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+    return _resolve(_module(arch).REDUCED, overrides)

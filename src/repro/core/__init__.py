@@ -1,8 +1,13 @@
-"""Ozaki-II CRT GEMM emulation — public API (the paper's contribution).
+"""Ozaki-II CRT GEMM emulation — core API (the paper's contribution).
 
 The numeric pipeline lives once in `plan.py` (static decisions) +
-`executor.py` (data path, pluggable residue backends); `gemm.py`, `cgemm.py`
-and the policy stack are thin wrappers over it.
+`executor.py` (data path, pluggable residue backends).  `GemmPolicy`
+(`policy.py`) is the one public knob object — backend (compute dtype
+class), mode, formulation, blocking, and the *execution* axis selecting the
+residue backend ("reference" | "kernel" | "per_modulus_kernel"; future:
+"sharded"/"fp8").  The user-facing entry point is `repro.linalg.matmul`
+scoped by `repro.use_policy(policy)`; the `ozaki2_gemm` / `ozaki2_cgemm`
+wrappers retained here are deprecation shims over that route.
 """
 from .cgemm import ozaki2_cgemm
 from .executor import (

@@ -1,27 +1,23 @@
-"""Complex Ozaki-II GEMM emulation (the paper's core contribution, SIII).
+"""DEPRECATED complex-GEMM entry point — use `repro.linalg` + `GemmPolicy`.
 
-Three INT8 complex-multiplication formulations (paper SIII-A, Fig. 1):
+`ozaki2_cgemm` predates the policy redesign; the three INT8 complex
+formulations (paper SIII-A, Fig. 1 — 'karatsuba' | 'block_a' | 'block_b' |
+'auto') are selected by `GemmPolicy.formulation` now:
 
-* 'karatsuba' (default, the paper's choice): per modulus,
-      D = AR.BR, E = AI.BI, F = mod(AR+AI).mod(BR+BI)
-      CR = D - E,  CI = F - D - E          -> 3N int8 GEMMs of (m,k,n)
-  with optional n-blocking (paper: blocks of 8192 keep working sets resident).
-  Karatsuba is exact in the residue ring — no floating-point cancellation —
-  which is why ZGEMM-grade needs only 13 moduli vs 14 for real DGEMM.
-* 'block_a' (eq. 7): one (2m, 2k) x (2k, n) real GEMM per modulus.
-* 'block_b' (eq. 8): one (m, 2k) x (2k, 2n) real GEMM per modulus.
-  (both shrink the exact-k limit from 2^17 to 2^16 — handled by K chunking.)
-* 'auto': pick by the SIII-C performance model (`core/perfmodel.py`).
+    repro.linalg.cgemm(a, b)                      # ambient policy knobs
+    repro.linalg.matmul(a, b, policy=GemmPolicy(
+        backend="ozaki2_c128", formulation="block_a"))
 
-The pipeline itself lives once in `core/executor.py`; this module only
-builds the `EmulationPlan` and validates operands.
+The shim builds exactly the `EmulationPlan` the old wrapper built, so its
+results remain bitwise-identical; it emits a `DeprecationWarning` on every
+call and will be removed once external callers migrate.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .executor import run_plan
-from .plan import DEFAULT_N_BLOCK, make_plan
+from .gemm import _deprecated, _shim_policy
+from .plan import DEFAULT_N_BLOCK
 
 __all__ = ["DEFAULT_N_BLOCK", "ozaki2_cgemm"]
 
@@ -39,21 +35,28 @@ def ozaki2_cgemm(
     """Emulated complex GEMM: C ~= A @ B for complex64 (CGEMM) / complex128
     (ZGEMM) operands, per the paper's Ozaki-II complex extension.
 
-    formulation: 'karatsuba' | 'block_a' | 'block_b' | 'auto' (SIII-C model).
-    n_block: int | None | 'auto' (paper's 8192-column blocking when n is big).
+    .. deprecated:: use ``repro.linalg.cgemm``/``zgemm`` (or
+       ``repro.linalg.matmul`` with a ``GemmPolicy(backend="ozaki2_c64" /
+       "ozaki2_c128", formulation=...)``) instead.
     """
     if a.dtype != b.dtype:
         raise ValueError(f"dtype mismatch {a.dtype} vs {b.dtype}")
     if not jnp.issubdtype(a.dtype, jnp.complexfloating):
         raise ValueError("ozaki2_cgemm expects complex operands")
-    plan = make_plan(
+    policy = _shim_policy(
         a.dtype,
         n_moduli=n_moduli,
         mode=mode,
         method=method,
         formulation=formulation,
-        out_dtype=out_dtype,
+        out_dtype=None if out_dtype is None else jnp.dtype(out_dtype).name,
         n_block=n_block,
-        shape=(a.shape[-2], a.shape[-1], b.shape[-1]),
     )
-    return run_plan(plan, a, b)
+    _deprecated("ozaki2_cgemm", policy)
+    from .. import linalg
+
+    if a.ndim == 2 and b.ndim == 2:
+        return linalg.matmul(a, b, policy=policy)
+    from .policy import emulated_matmul
+
+    return emulated_matmul(a, b, policy)

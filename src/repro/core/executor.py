@@ -136,6 +136,12 @@ def _reconstruct_pair(backend, er, ei, e_mu, e_nu, ctx, method, out_dtype):
 class ReferenceBackend:
     """jnp reference data path (exact f64 host arithmetic; core/intmul.py)."""
 
+    # launch capabilities consulted by the perfmodel-driven 'auto'
+    # selections (make_plan): the reference path composes Karatsuba from 3
+    # separate products and runs one launch per modulus
+    fused_karatsuba = False
+    modulus_batched = False
+
     def cast(self, x, e, axis, ctx, n_limbs):
         """quantize by 2^e along `axis` and residue-decompose (steps IV/V-i/ii)."""
         xq = quantize(x.astype(jnp.float64), scaling.exp2_vector(e), axis)
@@ -322,11 +328,22 @@ class PreparedOperand:
     a (L, k, n) weight yields residues (L, N, k, n), sliced per layer by
     `lax.scan` like any other parameter leaf).  Instances are registered as
     jax pytrees so they can live inside jitted parameter trees.
+
+    `backend` selects who runs the residue cast (default: the jnp reference
+    backend).  Preparing with the execution backend that will consume the
+    residues keeps prepared and unprepared runs bit-identical on that
+    backend — e.g. the Pallas kernel cast quantizes through f32, so a
+    kernel-path server must prepare with the kernel backend (the policy
+    layer's `prepare_weights` does this automatically).
     """
 
-    def __init__(self, x, n_moduli: int | None = None, side: str = "left"):
+    def __init__(
+        self, x, n_moduli: int | None = None, side: str = "left", backend=None
+    ):
         if side not in ("left", "right"):
             raise ValueError(side)
+        if backend is None:
+            backend = REFERENCE
         dt = jnp.dtype(x.dtype)
         if n_moduli is None:
             from .plan import default_n_moduli
@@ -348,13 +365,7 @@ class PreparedOperand:
             def _prep(x2):
                 xr, xi = jnp.real(x2), jnp.imag(x2)
                 e = _solo_scale_complex(xr, xi, ctx, side)
-                sv = scaling.exp2_vector(e)
-                rr = residues_from_quantized(
-                    quantize(xr.astype(jnp.float64), sv, axis), ctx, nl
-                )
-                ri = residues_from_quantized(
-                    quantize(xi.astype(jnp.float64), sv, axis), ctx, nl
-                )
+                rr, ri = _cast_pair(backend, xr, xi, e, axis, ctx, nl)
                 return e, rr, ri
 
             e_scale, *res = _prep(x)
@@ -363,8 +374,7 @@ class PreparedOperand:
             @functools.partial(jnp.vectorize, signature=sig)
             def _prep(x2):
                 e = _solo_scale_real(x2, ctx, side)
-                xq = quantize(x2.astype(jnp.float64), scaling.exp2_vector(e), axis)
-                return e, residues_from_quantized(xq, ctx, nl)
+                return e, backend.cast(x2, e, axis, ctx, nl)
 
             e_scale, *res = _prep(x)
 
@@ -479,6 +489,11 @@ def gemm_prepared(
         out_dtype=out_dtype,
         n_block=n_block,
         shape=(m, k, n),
+        # the 'auto' selections must charge launches exactly as the
+        # executing backend issues them, or a prepared run could pick a
+        # different formulation than the unprepared run it must bit-match
+        fused_karatsuba=getattr(backend, "fused_karatsuba", False),
+        modulus_batched=getattr(backend, "modulus_batched", False),
     )
     nl = prep.n_limbs
     other_side = "left" if prep.side == "right" else "right"

@@ -1,20 +1,26 @@
-"""Real-valued Ozaki-II GEMM emulation (paper SII; SGEMM/DGEMM).
+"""DEPRECATED real-GEMM entry point — use `repro.linalg` + `GemmPolicy`.
 
-Pipeline (Alg. 1):  scale -> trunc -> residues -> N int8 GEMMs -> per-modulus
-reduction -> CRT reconstruction -> exact inverse scaling.
+`ozaki2_gemm` predates the policy redesign that made *execution* a
+first-class axis.  It survives as a thin shim over the one real pipeline:
 
-This module is a thin wrapper: the pipeline itself lives once in
-`core/executor.py`, driven by an `EmulationPlan` (`core/plan.py`).  The same
-executor also serves the complex path (`core/cgemm.py`) and the Pallas
-kernel path (`kernels/ops.py`).
+    repro.linalg.matmul(a, b, policy=GemmPolicy(backend=..., ...))
 
-Everything is jit-compatible with static (n_moduli, mode, method, n_block).
+or, context-scoped (the drop-in deployment style):
+
+    with repro.use_policy(GemmPolicy(backend="ozaki2_f64")):
+        c = repro.linalg.matmul(a, b)
+
+The shim builds exactly the `EmulationPlan` the old wrapper built, so its
+results remain bitwise-identical; it emits a `DeprecationWarning` on every
+call and will be removed once external callers migrate.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax.numpy as jnp
 
-from .executor import PreparedOperand, gemm_prepared, run_plan
+from .executor import PreparedOperand, gemm_prepared
 from .plan import DEFAULT_MODULI, default_n_moduli, make_plan, n_limbs_for_ctx
 
 __all__ = [
@@ -31,6 +37,26 @@ __all__ = [
 _n_limbs = n_limbs_for_ctx
 
 
+def _deprecated(name: str, policy, stacklevel: int = 3) -> None:
+    """Shared deprecation warning for every legacy ozaki2_* entry point
+    (core and kernels shims) — one message template, one category."""
+    warnings.warn(
+        f"{name} is deprecated; call repro.linalg.matmul under "
+        f"repro.use_policy({policy!r}) (or pass policy= explicitly)",
+        DeprecationWarning,
+        stacklevel=stacklevel,
+    )
+
+
+def _shim_policy(dtype, **kw):
+    from .policy import BACKEND_FOR_DTYPE, GemmPolicy
+
+    name = jnp.dtype(dtype).name
+    if name not in BACKEND_FOR_DTYPE:
+        raise ValueError(f"no emulation backend for operand dtype {name}")
+    return GemmPolicy(backend=BACKEND_FOR_DTYPE[name], **kw)
+
+
 def ozaki2_gemm(
     a: jnp.ndarray,
     b: jnp.ndarray,
@@ -42,6 +68,9 @@ def ozaki2_gemm(
 ) -> jnp.ndarray:
     """Emulated high-precision real GEMM: C ~= A @ B.
 
+    .. deprecated:: use ``repro.linalg.matmul`` with a
+       ``GemmPolicy(backend="ozaki2_f32"/"ozaki2_f64", ...)`` instead.
+
     a: (..., m, k), b: (..., k, n) float32/float64 (batched over leading dims).
     n_moduli: number of CRT moduli N (defaults per dtype/mode to the paper's
       accuracy-matching setting).  mode: 'fast' | 'accu'.
@@ -49,17 +78,26 @@ def ozaki2_gemm(
     n_block: output-column blocking (paper SIII-A blocking variant).
 
     Complex operands are routed to the complex plan (Karatsuba formulation);
-    use `ozaki2_cgemm` to control the formulation.
+    use the policy's `formulation` field to control the strategy.
     """
     if a.dtype != b.dtype:
         raise ValueError(f"dtype mismatch {a.dtype} vs {b.dtype}")
-    plan = make_plan(
+    policy = _shim_policy(
         a.dtype,
         n_moduli=n_moduli,
         mode=mode,
         method=method,
-        out_dtype=out_dtype,
+        out_dtype=None if out_dtype is None else jnp.dtype(out_dtype).name,
         n_block=n_block,
-        shape=(a.shape[-2], a.shape[-1], b.shape[-1]),
     )
-    return run_plan(plan, a, b)
+    _deprecated("ozaki2_gemm", policy)
+    from .. import linalg
+
+    if a.ndim == 2 and b.ndim == 2:
+        return linalg.matmul(a, b, policy=policy)
+    # batched operands keep the historical per-slice semantics (the accu
+    # bound and the auto selections see each (m,k,n) slice, not a flattened
+    # product) — emulated_matmul vectorizes exactly like run_plan did
+    from .policy import emulated_matmul
+
+    return emulated_matmul(a, b, policy)

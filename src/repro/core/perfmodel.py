@@ -165,6 +165,7 @@ def kernel_launch_count(
     fused_karatsuba: bool = True,
     n_chunks: int = 1,
     n_blocks: int = 1,
+    prepared: bool = False,
 ) -> int:
     """Pallas-launch count of one emulated GEMM on the kernel path.
 
@@ -173,14 +174,17 @@ def kernel_launch_count(
     per modular product per K-chunk, and one per reconstruction (CR/CI
     stacked) — 2 + n_chunks + 1 per output-column block at any N.  The
     per-modulus backend pays a factor N on products, 2x on complex casts /
-    reconstructions, and 3x on unfused Karatsuba.  Asserted against the
-    actually-traced jaxpr in tests and the CI smoke benchmark.
+    reconstructions, and 3x on unfused Karatsuba.  `prepared=True` drops the
+    weight-side cast entirely (its residue planes were cast once up front by
+    `prepare_weights` / `PreparedOperand` — the serving fast path), leaving
+    cast + product + reconstruct = 3 launches per GEMM.  Asserted against
+    the actually-traced jaxpr in tests and the CI smoke benchmark.
     """
     planes = 1 if modulus_batched else n_moduli
     complex_ = formulation != "real"
     per_part = 1 if modulus_batched else 2  # real+imag stacked vs separate
     cast_a = per_part if complex_ else 1
-    cast_b = per_part if complex_ else 1
+    cast_b = 0 if prepared else (per_part if complex_ else 1)
     if formulation == "karatsuba":
         products = (1 if fused_karatsuba else 3) * planes * n_chunks
     else:  # 'real' or a block embedding: one real product per chunk

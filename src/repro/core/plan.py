@@ -7,12 +7,14 @@ and the K-chunk limit — and nothing data-dependent.  It is frozen/hashable so
 it can sit inside jit static arguments, `jnp.vectorize(excluded=...)` slots
 and `GemmPolicy` configs.
 
-`make_plan` is the single front door used by every public entry point
-(`ozaki2_gemm`, `ozaki2_cgemm`, the Pallas-kernel wrappers and the policy
-stack): it applies the paper's per-dtype moduli defaults and — when the
-caller passes ``formulation="auto"`` / ``n_block="auto"`` with shape hints —
-consults the SIII-C performance model (`core/perfmodel.py`) to pick the
-complex formulation and output-column blocking.
+`make_plan` is the single front door used by every entry point — the policy
+stack behind `repro.linalg.matmul` (`GemmPolicy.plan_for`) and the legacy
+`ozaki2_*` shims: it applies the paper's per-dtype moduli defaults and —
+when the caller passes ``formulation="auto"`` / ``n_block="auto"`` with
+shape hints — consults the SIII-C performance model (`core/perfmodel.py`)
+to pick the complex formulation and output-column blocking (charging launch
+terms per the executing backend's `fused_karatsuba`/`modulus_batched`
+capabilities, which `plan_for` derives from the policy's execution axis).
 
 The data path that *executes* a plan lives in `core/executor.py`; the plan
 itself never touches arrays.

@@ -1,15 +1,35 @@
 """GEMM backend policy — the framework-facing integration of the technique.
 
-Any dense layer in `repro.models` routes its matmuls through `policy_matmul`,
-so the paper's emulation is a first-class, config-selectable feature
-(`gemm_backend` in the arch configs), analogous to the paper's LD_PRELOAD
-interposition of cuBLAS calls — but composable and differentiable.
+A :class:`GemmPolicy` is one hashable object answering every static question
+about a matmul: *what* to emulate (``backend`` — the compute dtype class),
+*how precisely* (``n_moduli``/``mode``/``method``/``out_dtype``), *which
+complex strategy* (``formulation``/``n_block``), and — since this layer
+became the seam for every execution target — *where* to run it:
+
+    execution="reference"           jnp reference data path (exact f64 host)
+    execution="kernel"              modulus-batched Pallas kernels (the TPU
+                                    path; 4 launches per GEMM at any N)
+    execution="per_modulus_kernel"  pre-batching Pallas path (one launch per
+                                    modulus; bitwise parity reference)
+
+Future backends (ROADMAP: "sharded", "fp8", megakernel) plug in as new
+``execution`` values resolved by :meth:`GemmPolicy.execution_backend`; the
+plan/executor layer (`core/plan.py` + `core/executor.py`) is already
+backend-agnostic.
+
+User code normally does not call this module directly: `repro.linalg.matmul`
+is the drop-in entry point, scoped by `repro.use_policy(policy)` — the
+analog of the paper's LD_PRELOAD interposition of cuBLAS calls, but
+composable, context-scoped and differentiable.  Any dense layer in
+`repro.models` routes its matmuls through the same function, so the paper's
+emulation is a first-class, config-selectable feature (`gemm_policy` in the
+arch configs).
 
 Backends cover both halves of the paper: `ozaki2_f32`/`ozaki2_f64` run the
 real SGEMM/DGEMM emulation, `ozaki2_c64`/`ozaki2_c128` the complex
 CGEMM/ZGEMM emulation (SIII) with a selectable Fig. 1 `formulation` and
 output-column `n_block`.  All four build an `EmulationPlan` and run the
-shared executor (`core/executor.py`).
+shared executor with the policy's resolved execution backend.
 
 The emulated forward is wrapped in a custom VJP: trunc() has zero gradient,
 but the emulation approximates an exact GEMM to (beyond-)float precision, so
@@ -21,8 +41,10 @@ real-valued loss through complex emulated matmuls agrees with the native
 path.
 
 Weight-stationary callers (serving) may pass a `PreparedOperand` as the
-weight: its scaling + residue planes were cast once up front and the
-per-call work drops to the activation side only (see `prepare_weights`).
+weight: its scaling + residue planes were cast once up front — by the
+*selected* execution backend, so prepared serving stays bit-identical to the
+unprepared run on the kernel path too — and the per-call work drops to the
+activation side only (see `prepare_weights`).
 """
 from __future__ import annotations
 
@@ -34,12 +56,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .executor import PreparedOperand, gemm_prepared, run_plan
+from .executor import PreparedOperand, REFERENCE, gemm_prepared, run_plan
 from .plan import default_n_moduli, make_plan
 
 Backend = Literal[
     "native", "ozaki2_f32", "ozaki2_f64", "ozaki2_c64", "ozaki2_c128"
 ]
+
+Execution = Literal["reference", "kernel", "per_modulus_kernel"]
+
+EXECUTIONS = ("reference", "kernel", "per_modulus_kernel")
 
 _COMPUTE_DTYPES = {
     "native": None,
@@ -49,17 +75,57 @@ _COMPUTE_DTYPES = {
     "ozaki2_c128": jnp.complex128,
 }
 
+# the ozaki2_* backend matching each compute dtype (used by the linalg
+# BLAS-shaped wrappers and the legacy entry-point shims)
+BACKEND_FOR_DTYPE = {
+    "float32": "ozaki2_f32",
+    "float64": "ozaki2_f64",
+    "complex64": "ozaki2_c64",
+    "complex128": "ozaki2_c128",
+}
+
 
 @dataclasses.dataclass(frozen=True)
 class GemmPolicy:
-    """Static (hashable) matmul policy threaded through the model configs."""
+    """Static (hashable) matmul policy threaded through the model configs.
+
+    ``execution`` selects the residue backend that runs the plan (see module
+    docstring); ``interpret`` forces/forbids Pallas interpret mode for the
+    kernel executions (None = auto: interpret off-TPU).  ``method="auto"``
+    resolves to the paper's eq. (5) reconstruction on the reference path and
+    to the TPU-native Garner kernel on the kernel paths (the only
+    reconstruction the kernels implement — no f64 on the VPU).
+    ``out_dtype`` (a dtype name, or None for the compute dtype) requests a
+    different result precision, e.g. f64-grade output from f32 operands.
+    """
 
     backend: Backend = "native"
     n_moduli: int | None = None
     mode: str = "fast"            # 'fast' | 'accu'
-    method: str = "paper"         # CRT reconstruction path
+    method: str = "auto"          # CRT reconstruction path (or 'auto')
     formulation: str = "karatsuba"  # complex Fig. 1 strategy (or 'auto')
-    n_block: int | None = None    # output-column blocking (or 'auto')
+    n_block: int | str | None = None  # output-column blocking (or 'auto')
+    execution: Execution = "reference"
+    interpret: bool | None = None  # Pallas interpret override (kernel paths)
+    out_dtype: str | None = None  # result dtype name (None: compute dtype)
+
+    def __post_init__(self):
+        if self.backend not in _COMPUTE_DTYPES:
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.execution not in EXECUTIONS:
+            raise ValueError(
+                f"unknown execution {self.execution!r}; expected one of "
+                f"{EXECUTIONS}"
+            )
+        if self.execution != "reference" and self.method not in ("auto", "garner"):
+            raise ValueError(
+                f"execution={self.execution!r} reconstructs via the Garner "
+                f"kernel only; method={self.method!r} is reference-path only"
+            )
+        if self.out_dtype is not None:
+            # normalize to the dtype's canonical name so the policy hash is
+            # stable across jnp.float32 / 'float32' / np.dtype spellings
+            object.__setattr__(self, "out_dtype", jnp.dtype(self.out_dtype).name)
 
     @property
     def compute_dtype(self):
@@ -69,18 +135,55 @@ class GemmPolicy:
     def is_complex(self) -> bool:
         return self.backend in ("ozaki2_c64", "ozaki2_c128")
 
+    @property
+    def resolved_method(self) -> str:
+        """The CRT reconstruction this policy actually runs."""
+        if self.method != "auto":
+            return self.method
+        return "paper" if self.execution == "reference" else "garner"
+
+    def execution_backend(self):
+        """Resolve the residue-backend instance for this policy's execution.
+
+        The returned object is hashable (frozen dataclass) so it can ride in
+        jit-static slots; `interpret` is resolved here — *outside* any jitted
+        function — so an unset value never causes an avoidable retrace.
+        """
+        if self.execution == "reference":
+            return REFERENCE
+        # lazy import: core stays importable without pulling the Pallas stack
+        from ..kernels.common import interpret_default
+        from ..kernels.ops import KernelBackend, PerModulusKernelBackend
+
+        interp = (
+            self.interpret if self.interpret is not None else interpret_default()
+        )
+        cls = (
+            KernelBackend
+            if self.execution == "kernel"
+            else PerModulusKernelBackend
+        )
+        return cls(bool(interp))
+
     def plan_for(self, m: int, k: int, n: int):
         """The `EmulationPlan` this policy runs for an (m,k)x(k,n) product."""
         if self.backend == "native":
             raise ValueError("native policy has no emulation plan")
+        # the perfmodel terms behind the 'auto' selections depend on how the
+        # executing backend launches — read its declared capabilities so
+        # plan_for and gemm_prepared can never disagree
+        be = self.execution_backend()
         return make_plan(
             self.compute_dtype,
             n_moduli=self.n_moduli,
             mode=self.mode,
-            method=self.method,
+            method=self.resolved_method,
             formulation=self.formulation if self.is_complex else None,
+            out_dtype=self.out_dtype,
             n_block=self.n_block,
             shape=(m, k, n),
+            fused_karatsuba=getattr(be, "fused_karatsuba", False),
+            modulus_batched=getattr(be, "modulus_batched", False),
         )
 
 
@@ -104,8 +207,10 @@ def emulated_matmul(x: jnp.ndarray, w: jnp.ndarray, policy: GemmPolicy):
 def _emulated_fwd_raw(x, w, policy):
     ct = policy.compute_dtype
     plan = policy.plan_for(x.shape[-2], x.shape[-1], w.shape[-1])
-    y = run_plan(plan, x.astype(ct), w.astype(ct))
-    return _real_cast(y, x.dtype)
+    y = run_plan(
+        plan, x.astype(ct), w.astype(ct), backend=policy.execution_backend()
+    )
+    return _real_cast(y, policy.out_dtype or x.dtype)
 
 
 def _emulated_fwd(x, w, policy):
@@ -132,11 +237,13 @@ def _prepared_matmul(x: jnp.ndarray, w: PreparedOperand, policy: GemmPolicy):
     y = gemm_prepared(
         w,
         x.astype(ct),
-        method=policy.method,
+        method=policy.resolved_method,
         formulation=policy.formulation,
+        out_dtype=policy.out_dtype,
         n_block=policy.n_block,
+        backend=policy.execution_backend(),
     )
-    return _real_cast(y, x.dtype)
+    return _real_cast(y, policy.out_dtype or x.dtype)
 
 
 def _prepared_fwd(x, w, policy):
@@ -157,10 +264,12 @@ _prepared_matmul.defvjp(_prepared_fwd, _prepared_bwd)
 
 
 def policy_matmul(x: jnp.ndarray, w, policy: GemmPolicy) -> jnp.ndarray:
-    """x: (..., k) @ w: (k, n) under the policy's backend.
+    """x: (..., k) @ w: (k, n) under the policy's backend and execution.
 
     `w` may be a raw array or a right-side `PreparedOperand` (weights cast
-    once, amortized across calls — the serving fast path).
+    once, amortized across calls — the serving fast path).  This is the
+    layer-shaped entry point; the general drop-in (batched `w`, ambient
+    policy) is `repro.linalg.matmul`, which routes here.
     """
     if isinstance(w, PreparedOperand):
         if policy.backend == "native":
@@ -194,7 +303,8 @@ def policy_matmul(x: jnp.ndarray, w, policy: GemmPolicy) -> jnp.ndarray:
         y = _prepared_matmul(x.reshape((-1, x.shape[-1])), w, policy)
         return y.reshape(lead + (n,))
     if policy.backend == "native":
-        return jnp.matmul(x, w)
+        y = jnp.matmul(x, w)
+        return y if policy.out_dtype is None else y.astype(policy.out_dtype)
     lead = x.shape[:-1]
     x2 = x.reshape((-1, x.shape[-1]))
     y = emulated_matmul(x2, w, policy)
@@ -206,13 +316,16 @@ def prepare_weights(params, policy: GemmPolicy):
 
     Walks the tree and replaces the ``"w"`` leaf of each linear bundle
     (the dicts produced by `models.layers.linear_abstract`, possibly stacked
-    with a leading layers axis for scanned groups) by a right-side
-    `PreparedOperand`, so step 1 of the scheme runs once per weight instead
-    of once per request.  Only valid for fast-mode emulated policies: the
-    accurate-mode bound couples both operands, so asking to prepare an
-    'accu' policy is a misconfiguration and raises (a silent no-op would
-    quietly forfeit the requested amortization).  A native policy returns
-    the tree unchanged (there is nothing to prepare).
+    with a leading layers axis for scanned groups, and possibly a list/tuple
+    of such stacks) by a right-side `PreparedOperand` cast with the policy's
+    *selected execution backend* — so prepared serving stays bit-identical
+    to the unprepared run on the kernel path as well as the reference path.
+    Step 1 of the scheme then runs once per weight instead of once per
+    request.  Only valid for fast-mode emulated policies: the accurate-mode
+    bound couples both operands, so asking to prepare an 'accu' policy is a
+    misconfiguration and raises (a silent no-op would quietly forfeit the
+    requested amortization).  A native policy returns the tree unchanged
+    (there is nothing to prepare).
     """
     if policy.backend == "native":
         return params
@@ -222,26 +335,37 @@ def prepare_weights(params, policy: GemmPolicy):
             f"scaling bound couples both operands); got mode={policy.mode!r}"
         )
     n_moduli = policy.n_moduli or default_n_moduli(policy.compute_dtype, policy.mode)
+    cast_backend = policy.execution_backend()
+
+    def _is_weight_leaf(val):
+        return (
+            isinstance(val, (jnp.ndarray, np.ndarray))
+            and val.ndim >= 2
+            and jnp.issubdtype(val.dtype, jnp.inexact)
+        )
+
+    def prep(val):
+        """Rewrite one "w" value: an array, or a list/tuple of stacked
+        weight arrays (scanned groups bundle their per-group stacks this
+        way) — the "w" context propagates through the sequence nesting."""
+        if _is_weight_leaf(val):
+            # jnp.asarray: checkpoint restores may hand numpy leaves
+            return PreparedOperand(
+                jnp.asarray(val).astype(policy.compute_dtype),
+                n_moduli,
+                side="right",
+                backend=cast_backend,
+            )
+        if isinstance(val, (list, tuple)):
+            return type(val)(prep(v) for v in val)
+        return walk(val)
 
     def walk(node):
         if isinstance(node, dict):
-            out = {}
-            for key, val in node.items():
-                if (
-                    key == "w"
-                    and isinstance(val, (jnp.ndarray, np.ndarray))
-                    and val.ndim >= 2
-                    and jnp.issubdtype(val.dtype, jnp.inexact)
-                ):
-                    # jnp.asarray: checkpoint restores may hand numpy leaves
-                    out[key] = PreparedOperand(
-                        jnp.asarray(val).astype(policy.compute_dtype),
-                        n_moduli,
-                        side="right",
-                    )
-                else:
-                    out[key] = walk(val)
-            return out
+            return {
+                key: (prep(val) if key == "w" else walk(val))
+                for key, val in node.items()
+            }
         if isinstance(node, (list, tuple)):
             return type(node)(walk(v) for v in node)
         return node

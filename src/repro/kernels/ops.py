@@ -1,13 +1,19 @@
-"""Public wrappers around the Pallas kernels + a full kernel-path GEMM.
+"""The Pallas residue backends behind `GemmPolicy(execution=...)`.
 
-`ozaki2_gemm_kernels` / `ozaki2_cgemm_kernels` run the complete emulation
-pipeline exactly as it would run on a TPU chip: residue_cast -> batched
-modular GEMM (or fused Karatsuba) -> crt_garner.  The pipeline structure is
-not duplicated here: both entry points build an `EmulationPlan` and run the
-shared executor (`repro.core.executor`) with :class:`KernelBackend`, which
-maps the executor's residue primitives onto the Pallas kernels.  The
-block-embedding formulations (paper eqs. 7/8) compose in the executor from
-`residue_matmul`, so the kernel path supports all three Fig. 1 strategies.
+:class:`KernelBackend` (execution="kernel") and
+:class:`PerModulusKernelBackend` (execution="per_modulus_kernel") map the
+executor's residue primitives onto the Pallas kernels; the pipeline
+structure itself lives once in `repro.core.executor`, so the kernel path
+supports all three Fig. 1 strategies (the block embeddings compose from
+`residue_matmul`).  Select them through the policy layer:
+
+    with repro.use_policy(GemmPolicy(backend="ozaki2_c64",
+                                     execution="kernel")):
+        y = repro.linalg.matmul(a, b)      # 4 pallas_calls at any N
+
+The legacy `ozaki2_gemm_kernels` / `ozaki2_cgemm_kernels` entry points are
+retained as deprecation shims over that policy route (bitwise-identical,
+still jitted per shape × policy).
 
 Launch economics (paper SIII-C, Fig. 1 small-shape regime): every residue
 primitive is ONE `pallas_call` regardless of the modulus count N — the
@@ -29,14 +35,11 @@ against `repro.core` (which itself is validated against exact integers).
 from __future__ import annotations
 
 import dataclasses
-import functools
 
-import jax
 import jax.numpy as jnp
 
-from ..core.executor import chunked_residue_matmul, execute_plan
+from ..core.executor import chunked_residue_matmul
 from ..core.moduli import CRTContext
-from ..core.plan import default_n_moduli, make_plan
 from .common import interpret_default, split_scale_exponent
 from .crt_garner import crt_garner
 from .int8_mod_gemm import int8_mod_gemm, int8_mod_gemm_batched
@@ -55,6 +58,12 @@ class _KernelBackendBase:
     """
 
     interpret: bool | None = None
+
+    # both kernel paths fuse the Karatsuba D/E/F triple into one kernel;
+    # only the batched subclass folds the N planes into one grid (consulted
+    # by the perfmodel-driven 'auto' plan selections)
+    fused_karatsuba = True
+    modulus_batched = False
 
     def cast(self, x, e, axis, ctx: CRTContext, n_limbs: int):
         s1, s2 = split_scale_exponent(e)
@@ -97,6 +106,8 @@ class KernelBackend(_KernelBackendBase):
     executor's complex pipeline) so one complex operand or output also
     costs one launch.
     """
+
+    modulus_batched = True
 
     def cast_stack(self, xs, e, axis, ctx: CRTContext, n_limbs: int):
         """(S, m, k) stack sharing one scale vector -> (S, N, m, k), 1 launch."""
@@ -195,20 +206,14 @@ class PerModulusKernelBackend(_KernelBackendBase):
         return jnp.stack(er_planes, axis=0), jnp.stack(ei_planes, axis=0)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("n_moduli", "mode", "n_block", "interpret")
-)
-def _gemm_kernels_jit(a, b, n_moduli, mode, n_block, interpret):
-    plan = make_plan(
-        jnp.float32,
-        n_moduli=n_moduli,
-        mode=mode,
-        method="garner",
-        n_block=n_block,
-        out_dtype=jnp.float32,
-        shape=(a.shape[-2], a.shape[-1], b.shape[-1]),
-    )
-    return execute_plan(plan, a, b, KernelBackend(interpret))
+def _kernels_shim_policy(name, backend, **kw):
+    from ..core.gemm import _deprecated
+    from ..core.policy import GemmPolicy
+
+    policy = GemmPolicy(backend=backend, execution="kernel", **kw)
+    # stacklevel 4: user -> ozaki2_*_kernels -> here -> _deprecated
+    _deprecated(name, policy, stacklevel=4)
+    return policy
 
 
 def ozaki2_gemm_kernels(
@@ -221,36 +226,26 @@ def ozaki2_gemm_kernels(
 ) -> jnp.ndarray:
     """Full kernel-path real GEMM emulation (f32 in / f32 out).
 
-    This is the TPU execution plan; numerically it provides f32-grade output
-    (the double-single 'dd' output path of crt_garner serves f64-grade).
-    Defaults (`n_moduli`, `interpret`) are resolved here, outside the jitted
-    inner function, so `interpret=None` never causes an extra retrace.
+    .. deprecated:: use ``repro.linalg.matmul`` with a
+       ``GemmPolicy(backend="ozaki2_f32", execution="kernel")`` instead.
+
+    Numerically this provides f32-grade output (the double-single 'dd'
+    output path of crt_garner serves f64-grade).  Defaults (`n_moduli`,
+    `interpret`) resolve inside the policy *before* the jitted inner
+    function, so `interpret=None` never causes an extra retrace.
     """
-    if interpret is None:
-        interpret = interpret_default()
-    if n_moduli is None:
-        n_moduli = default_n_moduli(jnp.float32, mode)
-    return _gemm_kernels_jit(a, b, int(n_moduli), mode, n_block, bool(interpret))
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("n_moduli", "mode", "formulation", "n_block", "interpret"),
-)
-def _cgemm_kernels_jit(a, b, n_moduli, mode, formulation, n_block, interpret):
-    plan = make_plan(
-        jnp.complex64,
-        n_moduli=n_moduli,
+    policy = _kernels_shim_policy(
+        "ozaki2_gemm_kernels",
+        "ozaki2_f32",
+        n_moduli=None if n_moduli is None else int(n_moduli),
         mode=mode,
-        method="garner",
-        formulation=formulation,
         n_block=n_block,
-        out_dtype=jnp.complex64,
-        shape=(a.shape[-2], a.shape[-1], b.shape[-1]),
-        fused_karatsuba=True,
-        modulus_batched=True,
+        interpret=bool(interpret_default() if interpret is None else interpret),
+        out_dtype="float32",
     )
-    return execute_plan(plan, a, b, KernelBackend(interpret))
+    from .. import linalg
+
+    return linalg.matmul_jit(a, b, policy=policy)
 
 
 def ozaki2_cgemm_kernels(
@@ -264,16 +259,24 @@ def ozaki2_cgemm_kernels(
 ) -> jnp.ndarray:
     """Full kernel-path complex GEMM emulation (complex64 in/out).
 
+    .. deprecated:: use ``repro.linalg.matmul`` with a
+       ``GemmPolicy(backend="ozaki2_c64", execution="kernel",
+       formulation=...)`` instead.
+
     formulation 'karatsuba' uses the fused-Karatsuba modular kernel (one
     batched launch for all moduli); 'block_a'/'block_b'/'auto' use the block
-    embeddings composed over the batched `int8_mod_gemm_batched`.  Defaults
-    are resolved here, outside the jitted inner function (no `interpret=None`
-    retrace).
+    embeddings composed over the batched `int8_mod_gemm_batched`.
     """
-    if interpret is None:
-        interpret = interpret_default()
-    if n_moduli is None:
-        n_moduli = default_n_moduli(jnp.complex64, mode)
-    return _cgemm_kernels_jit(
-        a, b, int(n_moduli), mode, formulation, n_block, bool(interpret)
+    policy = _kernels_shim_policy(
+        "ozaki2_cgemm_kernels",
+        "ozaki2_c64",
+        n_moduli=None if n_moduli is None else int(n_moduli),
+        mode=mode,
+        formulation=formulation,
+        n_block=n_block,
+        interpret=bool(interpret_default() if interpret is None else interpret),
+        out_dtype="complex64",
     )
+    from .. import linalg
+
+    return linalg.matmul_jit(a, b, policy=policy)

@@ -236,6 +236,10 @@ def run_cell(
     zero3: bool = False,
     kv_chunk: int | None = None,
     moe_group: int | None = None,
+    mode: str = "fast",
+    formulation: str = "karatsuba",
+    n_block=None,
+    execution: str = "reference",
     out_dir: str | None = None,
     verbose: bool = True,
 ):
@@ -245,6 +249,14 @@ def run_cell(
     cell_id = f"{arch}__{shape_name}__{mesh_name}"
     if backend != "native":
         cell_id += f"__{backend}"
+        if execution != "reference":
+            cell_id += f"__{execution}"
+        if mode != "fast":
+            cell_id += f"__{mode}"
+        if formulation != "karatsuba":
+            cell_id += f"__{formulation}"
+        if n_block:
+            cell_id += f"__nb{n_block}"
     if seq_shard:
         cell_id += "__sp"
     if grad_accum > 1:
@@ -267,7 +279,13 @@ def run_cell(
     overrides = {}
     batch_axes = ("pod", "data") if multi_pod else ("data",)
     if backend != "native":
-        overrides["gemm_policy"] = GemmPolicy(backend=backend)
+        overrides["gemm_policy"] = GemmPolicy(
+            backend=backend,
+            mode=mode,
+            formulation=formulation,
+            n_block=n_block,
+            execution=execution,
+        )
         overrides["embed_pspec"] = (batch_axes, None, None)
     if seq_shard:
         overrides["act_pspec"] = (batch_axes, "model", None)
@@ -382,7 +400,17 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--backend", default="native",
-                    choices=["native", "ozaki2_f32", "ozaki2_f64"])
+                    choices=["native", "ozaki2_f32", "ozaki2_f64",
+                             "ozaki2_c64", "ozaki2_c128"])
+    ap.add_argument("--execution", default="reference",
+                    choices=["reference", "kernel", "per_modulus_kernel"],
+                    help="residue backend running the emulation plan")
+    ap.add_argument("--mode", default="fast", choices=["fast", "accu"])
+    ap.add_argument("--formulation", default="karatsuba",
+                    choices=["karatsuba", "block_a", "block_b", "auto"])
+    ap.add_argument("--n-block", default=None,
+                    type=lambda s: "auto" if s == "auto" else int(s),
+                    help="output-column blocking: an int or 'auto'")
     ap.add_argument("--seq-shard", action="store_true")
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--all", action="store_true", help="sweep every cell")
@@ -416,6 +444,10 @@ def main():
             backend=args.backend,
             seq_shard=args.seq_shard,
             grad_accum=args.grad_accum,
+            mode=args.mode,
+            formulation=args.formulation,
+            n_block=args.n_block,
+            execution=args.execution,
             out_dir=args.out,
         )
 

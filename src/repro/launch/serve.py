@@ -1,7 +1,16 @@
 """Production serving launcher (batched prefill + decode).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-32b \
-        --batch 8 --prompt-len 64 --new-tokens 64 [--temperature 0.8]
+        --batch 8 --prompt-len 64 --new-tokens 64 [--temperature 0.8] \
+        [--backend ozaki2_f32] [--execution kernel] \
+        [--prepare] [--prepared-dir DIR]
+
+An emulated --backend scopes the whole model onto that GemmPolicy via
+`repro.use_policy` around config lookup (the context-scoped drop-in path);
+--execution picks the residue backend (jnp reference or the batched Pallas
+kernels).  --prepare residue-casts the weights once at startup with the
+selected execution backend; --prepared-dir persists those planes so a
+restarted server restores them instead of re-preparing.
 """
 from __future__ import annotations
 
@@ -12,8 +21,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-import repro  # noqa: F401
+import contextlib
+
+import repro
 from repro.configs import ARCHS, get_reduced
+from repro.core import GemmPolicy
 from repro.models import Model
 from repro.serve import ServeEngine
 
@@ -30,9 +42,25 @@ def main():
         help="residue-cast weights once at startup (emulated backends: "
              "amortizes the scheme's step 1 across all requests)",
     )
+    ap.add_argument("--prepared-dir", default=None,
+                    help="persist/restore prepared residue planes here")
+    ap.add_argument("--backend", default="native",
+                    choices=["native", "ozaki2_f32", "ozaki2_f64",
+                             "ozaki2_c64", "ozaki2_c128"])
+    ap.add_argument("--execution", default="reference",
+                    choices=["reference", "kernel", "per_modulus_kernel"],
+                    help="residue backend running the emulation plan")
     args = ap.parse_args()
 
-    cfg = get_reduced(args.arch)
+    scope = contextlib.nullcontext()
+    if args.backend != "native":
+        scope = repro.use_policy(
+            GemmPolicy(backend=args.backend, execution=args.execution)
+        )
+    with scope:
+        cfg = get_reduced(args.arch, **(
+            {} if args.backend == "native" else {"dtype": "float32"}
+        ))
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     npre = cfg.n_prefix_embeds if cfg.frontend else 0
@@ -41,6 +69,7 @@ def main():
         cache_len=args.prompt_len + npre + args.new_tokens,
         batch_size=args.batch,
         prepare=args.prepare,
+        prepared_dir=args.prepared_dir,
     )
     rng = np.random.default_rng(0)
     batch = {"tokens": jnp.asarray(

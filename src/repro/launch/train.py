@@ -2,7 +2,15 @@
 
     PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
         --steps 100 --batch 8 --seq 256 [--mesh dxm] [--ckpt-dir DIR] \
-        [--backend ozaki2_f32] [--seq-shard] [--vocab-chunk N] [--compress-dp]
+        [--backend ozaki2_f32] [--execution kernel] [--mode accu] \
+        [--formulation auto] [--n-block auto] \
+        [--seq-shard] [--vocab-chunk N] [--compress-dp]
+
+The emulation flags mirror the `GemmPolicy` axes: `--backend` picks the
+compute dtype class, `--execution` the residue backend (jnp reference,
+modulus-batched Pallas kernels, or the per-modulus parity path), `--mode` /
+`--formulation` / `--n-block` the paper's accuracy and Fig. 1 strategy knobs
+('auto' consults the SIII-C perfmodel per shape).
 
 On this CPU container the mesh defaults to 1x1; on a real pod pass
 --mesh 16x16 (the dry-run proves those configs compile for every arch).
@@ -23,6 +31,11 @@ from repro.optim import AdamWConfig
 from repro.train import TrainLoopConfig, train_loop
 
 
+def parse_n_block(s: str):
+    """CLI n_block: an integer or the literal 'auto' (perfmodel-driven)."""
+    return "auto" if s == "auto" else int(s)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCHS, required=True)
@@ -39,6 +52,16 @@ def main():
     ap.add_argument("--backend", default="native",
                     choices=["native", "ozaki2_f32", "ozaki2_f64",
                              "ozaki2_c64", "ozaki2_c128"])
+    ap.add_argument("--execution", default="reference",
+                    choices=["reference", "kernel", "per_modulus_kernel"],
+                    help="residue backend running the emulation plan")
+    ap.add_argument("--mode", default="fast", choices=["fast", "accu"],
+                    help="paper scaling mode (accuracy band)")
+    ap.add_argument("--formulation", default="karatsuba",
+                    choices=["karatsuba", "block_a", "block_b", "auto"],
+                    help="complex Fig. 1 strategy (complex backends only)")
+    ap.add_argument("--n-block", default=None, type=parse_n_block,
+                    help="output-column blocking: an int or 'auto'")
     ap.add_argument("--seq-shard", action="store_true")
     ap.add_argument("--vocab-chunk", type=int, default=None)
     args = ap.parse_args()
@@ -46,7 +69,13 @@ def main():
     cfg = (get_reduced if args.reduced else get_config)(args.arch)
     over = {}
     if args.backend != "native":
-        over["gemm_policy"] = GemmPolicy(backend=args.backend)
+        over["gemm_policy"] = GemmPolicy(
+            backend=args.backend,
+            mode=args.mode,
+            formulation=args.formulation,
+            n_block=args.n_block,
+            execution=args.execution,
+        )
         over["dtype"] = "float32"
     if args.seq_shard:
         over["act_pspec"] = (("data",), "model", None)

@@ -1,0 +1,198 @@
+"""`repro.linalg` — drop-in matmul routed by the ambient :class:`GemmPolicy`.
+
+This is the library analog of the paper's deployment story: the reference
+implementation LD_PRELOAD-interposes cuBLAS so unmodified applications run
+the CGEMM/ZGEMM emulation.  Here the interposition point is one function —
+
+    >>> import repro
+    >>> from repro.core import GemmPolicy
+    >>> with repro.use_policy(GemmPolicy(backend="ozaki2_c64",
+    ...                                  execution="kernel")):
+    ...     y = repro.linalg.matmul(a, b)          # batched Pallas path
+
+— and everything above it (`repro.models` layers, the serve engine, the
+training step) calls `linalg.matmul`, so one `use_policy` scope (or one
+`gemm_policy` config field) moves a whole model between the native path,
+the jnp reference emulation and the modulus-batched Pallas kernels.
+
+Policy scoping and jit
+----------------------
+
+`use_policy` pushes onto a thread-local stack; `current_policy()` reads the
+top (default: the native policy).  Policies are frozen/hashable, and
+`matmul` captures the ambient policy *at trace time* — inside `jax.jit` the
+captured policy is baked into the compiled computation like any other
+static.  Enter `use_policy` before tracing (or pass `policy=` explicitly /
+pin it in a `ModelConfig`, which resolves the ambient policy once at config
+construction); re-entering a different policy after a function was traced
+does not retrace it.  `matmul_jit` is provided for eager callers: it jits
+per (shapes, policy) with the policy as an explicit static argument.
+
+BLAS-shaped wrappers
+--------------------
+
+`sgemm`/`dgemm`/`cgemm`/`zgemm` coerce the operands to the routine's
+compute dtype and force the matching ``ozaki2_*`` backend while inheriting
+every other knob (mode, execution, formulation, n_block, ...) from the
+ambient or given policy — `cgemm(a, b)` is always the emulated complex64
+product, whatever the ambient backend field says.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import threading
+
+import jax
+import jax.numpy as jnp
+
+from .core.executor import PreparedOperand
+from .core.policy import (
+    BACKEND_FOR_DTYPE,
+    GemmPolicy,
+    NATIVE,
+    emulated_matmul,
+    policy_matmul,
+    prepare_weights,
+)
+
+__all__ = [
+    "GemmPolicy",
+    "PreparedOperand",
+    "cgemm",
+    "current_policy",
+    "dgemm",
+    "matmul",
+    "matmul_jit",
+    "prepare_weights",
+    "sgemm",
+    "use_policy",
+    "zgemm",
+]
+
+_STATE = threading.local()
+
+
+def current_policy() -> GemmPolicy:
+    """The innermost active `use_policy` policy (default: native)."""
+    stack = getattr(_STATE, "stack", None)
+    return stack[-1] if stack else NATIVE
+
+
+@contextlib.contextmanager
+def use_policy(policy: GemmPolicy):
+    """Scope every `linalg.matmul` (and model/serve/train matmul resolved at
+    config construction) in this thread to `policy`.
+
+    Accepts a backend name as shorthand: ``use_policy("ozaki2_c64")``.
+    Nestable; the innermost scope wins.  The policy must be hashable (it is
+    captured as a jit static).
+    """
+    if isinstance(policy, str):
+        policy = GemmPolicy(backend=policy)
+    if not isinstance(policy, GemmPolicy):
+        raise TypeError(
+            f"use_policy expects a GemmPolicy (or backend name); got "
+            f"{type(policy).__name__}"
+        )
+    hash(policy)  # fail fast: the policy rides in jit-static slots
+    stack = getattr(_STATE, "stack", None)
+    if stack is None:
+        stack = _STATE.stack = []
+    stack.append(policy)
+    try:
+        yield policy
+    finally:
+        stack.pop()
+
+
+@contextlib.contextmanager
+def _no_ambient_policy():
+    """Temporarily clear the ambient stack.
+
+    Import-time construction of registry configs must be scope-independent
+    (a module first imported inside a `use_policy` scope would otherwise pin
+    that scope's policy into its module-level CONFIG forever); the configs
+    registry re-pins the ambient policy at lookup instead.
+    """
+    stack = getattr(_STATE, "stack", None)
+    _STATE.stack = []
+    try:
+        yield
+    finally:
+        _STATE.stack = stack if stack is not None else []
+
+
+def matmul(x, w, *, policy: GemmPolicy | None = None):
+    """Drop-in `jnp.matmul(x, w)` under `policy` (default: the ambient
+    `use_policy` scope; native when none is active).
+
+    x: (..., m, k); w: (k, n), a batched (..., k, n) array, or a right-side
+    `PreparedOperand` (residues cast once — the serving fast path).
+    Differentiable through the emulated custom VJP; jit-compatible (the
+    policy is trace-time static).
+    """
+    policy = current_policy() if policy is None else policy
+    if isinstance(w, PreparedOperand):
+        return policy_matmul(x, w, policy)
+    if getattr(x, "ndim", 0) < 2 or getattr(w, "ndim", 0) < 2:
+        raise ValueError(
+            "linalg.matmul expects matrix operands (ndim >= 2); got shapes "
+            f"{getattr(x, 'shape', None)} @ {getattr(w, 'shape', None)}"
+        )
+    if w.ndim == 2:
+        return policy_matmul(x, w, policy)
+    # batched weight: the executor's run_plan vectorizes over leading dims
+    if policy.backend == "native":
+        y = jnp.matmul(x, w)
+        return y if policy.out_dtype is None else y.astype(policy.out_dtype)
+    return emulated_matmul(x, w, policy)
+
+
+@functools.partial(jax.jit, static_argnames=("policy",))
+def _matmul_jit(x, w, *, policy):
+    return matmul(x, w, policy=policy)
+
+
+def matmul_jit(x, w, *, policy: GemmPolicy | None = None):
+    """`matmul` behind a (shapes, policy)-cached `jax.jit` for eager callers.
+
+    The ambient policy is resolved *before* jit so the context scope can
+    never leak stale into the compilation cache.
+    """
+    return _matmul_jit(x, w, policy=current_policy() if policy is None else policy)
+
+
+def _blas(routine: str, dtype, x, w, policy: GemmPolicy | None):
+    base = current_policy() if policy is None else policy
+    dt = jnp.dtype(dtype)
+    pol = dataclasses.replace(base, backend=BACKEND_FOR_DTYPE[dt.name])
+    if isinstance(w, PreparedOperand):
+        if jnp.dtype(w.dtype) != dt:
+            raise ValueError(
+                f"{routine} computes in {dt.name} but the prepared operand "
+                f"was cast for {w.dtype}"
+            )
+        return matmul(x, w, policy=pol)
+    return matmul(x.astype(dt), w.astype(dt), policy=pol)
+
+
+def sgemm(x, w, *, policy: GemmPolicy | None = None):
+    """Emulated SGEMM: f32 compute, every other knob from the policy."""
+    return _blas("sgemm", jnp.float32, x, w, policy)
+
+
+def dgemm(x, w, *, policy: GemmPolicy | None = None):
+    """Emulated DGEMM: f64 compute, every other knob from the policy."""
+    return _blas("dgemm", jnp.float64, x, w, policy)
+
+
+def cgemm(x, w, *, policy: GemmPolicy | None = None):
+    """Emulated CGEMM (paper SIII): complex64 compute."""
+    return _blas("cgemm", jnp.complex64, x, w, policy)
+
+
+def zgemm(x, w, *, policy: GemmPolicy | None = None):
+    """Emulated ZGEMM (paper SIII): complex128 compute."""
+    return _blas("zgemm", jnp.complex128, x, w, policy)

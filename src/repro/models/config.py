@@ -56,7 +56,13 @@ class ModelConfig:
     # misc
     tie_embeddings: bool = False
     dtype: str = "bfloat16"
-    gemm_policy: GemmPolicy = GemmPolicy()
+    # Matmul policy for every linear in the model.  None (the default)
+    # resolves to the ambient `repro.use_policy` scope *at config
+    # construction* — so `with use_policy(p): cfg = get_config(...)` pins p
+    # into the (hashable, jit-static) config and the whole model runs on
+    # p's backend/execution; with no active scope it resolves to the native
+    # policy.  An explicit GemmPolicy always wins over the ambient scope.
+    gemm_policy: GemmPolicy | None = None
     # remat policy for scan-over-layers training
     remat: bool = True
     # sequence parallelism: PartitionSpec (as a static tuple) constraining the
@@ -83,6 +89,15 @@ class ModelConfig:
     # chunked-vocab cross entropy: compute logits/logsumexp over vocab slabs
     # of this size to avoid materializing (B, S, vocab) f32 (SPerf).
     loss_vocab_chunk: int | None = None
+
+    def __post_init__(self):
+        if self.gemm_policy is None:
+            from ..linalg import current_policy
+
+            # frozen dataclass: resolve the ambient policy in place (runs
+            # again on dataclasses.replace, so replace(cfg, gemm_policy=None)
+            # re-reads the scope while plain replace keeps the pinned value)
+            object.__setattr__(self, "gemm_policy", current_policy())
 
     @property
     def d_inner(self) -> int:          # mamba2 inner width

@@ -1,8 +1,9 @@
 """Shared neural-net building blocks (pure JAX, pytree params).
 
-All matmuls route through `repro.core.policy.policy_matmul`, so any layer can
-run on the Ozaki-II emulated GEMM backend (the paper's technique as a
-first-class framework feature).
+All matmuls route through the one drop-in entry point `repro.linalg.matmul`
+under the config's `GemmPolicy`, so any layer can run on the Ozaki-II
+emulated GEMM backends — reference or Pallas-kernel execution — exactly as
+user code does (the paper's technique as a first-class framework feature).
 """
 from __future__ import annotations
 
@@ -12,7 +13,8 @@ import math
 import jax
 import jax.numpy as jnp
 
-from ..core.policy import GemmPolicy, policy_matmul
+from .. import linalg
+from ..core.policy import GemmPolicy
 from .params import ParamMeta
 
 # ---------------------------------------------------------------- norms
@@ -50,8 +52,8 @@ def linear_abstract(d_in, d_out, axes, dtype, bias=False, scale=None) -> dict:
 def apply_linear(p: dict, x: jnp.ndarray, policy: GemmPolicy) -> jnp.ndarray:
     """p["w"] may be a raw (k, n) array or a right-side `PreparedOperand`
     (weights residue-cast once by `core.policy.prepare_weights` — the
-    weight-stationary serving fast path); `policy_matmul` handles both."""
-    y = policy_matmul(x, p["w"], policy)
+    weight-stationary serving fast path); `linalg.matmul` handles both."""
+    y = linalg.matmul(x, p["w"], policy=policy)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y

@@ -4,11 +4,18 @@ The decode step is the unit the `decode_*`/`long_*` dry-run shapes lower:
 one new token against a KV/state cache of the configured length.
 
 With an emulated (Ozaki-II) GEMM policy, `prepare=True` residue-casts
-every linear weight once at engine construction (`core.policy.prepare_weights`):
-step 1 of the scheme for the weight side — scaling, truncation and the N int8
-residue planes — is amortized across all subsequent requests, and each call
-pays only the activation-side cast.  Bit-identical to the unprepared fast-mode
+every linear weight once at engine construction (`core.policy.prepare_weights`,
+which casts with the policy's *selected execution backend*, so prepared
+serving stays bit-identical on the Pallas kernel path too): step 1 of the
+scheme for the weight side — scaling, truncation and the N int8 residue
+planes — is amortized across all subsequent requests, and each call pays
+only the activation-side cast.  Bit-identical to the unprepared fast-mode
 path.
+
+`prepared_dir` persists that one-time work across restarts: the first
+construction saves the prepared residue planes through the checkpointer and
+later constructions restore them (bitwise — the planes are int8/int32
+exact) instead of re-preparing.
 """
 from __future__ import annotations
 
@@ -16,6 +23,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.policy import prepare_weights
 from ..models.transformer import Model
@@ -29,16 +37,122 @@ class ServeEngine:
         cache_len: int,
         batch_size: int,
         prepare: bool = False,
+        prepared_dir: str | None = None,
     ):
         self.model = model
         policy = model.cfg.gemm_policy
         if prepare and policy.backend != "native":
-            params = prepare_weights(params, policy)
+            params = self._prepared_params(params, policy, prepared_dir)
         self.params = params
         self.cache_len = cache_len
         self.batch_size = batch_size
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+
+    @classmethod
+    def _collect_prepared(cls, like, tree, out=None, prefix=""):
+        """Flat {path: aligned node} at every PreparedOperand site of `like`.
+
+        `like` is the `jax.eval_shape` skeleton of `prepare_weights(params)`,
+        so its PreparedOperand sites mark exactly the weights preparation
+        consumes; walking an aligned tree next to it picks out those raw
+        weights (tree=params) or the prepared planes (tree=prepped) without
+        re-stating prepare_weights' selection rule.
+        """
+        from ..core.executor import PreparedOperand
+
+        if out is None:
+            out = {}
+        if isinstance(like, PreparedOperand):
+            out[prefix[:-1]] = tree
+        elif isinstance(like, dict):
+            for k in sorted(like):
+                cls._collect_prepared(like[k], tree[k], out, f"{prefix}{k}/")
+        elif isinstance(like, (list, tuple)):
+            for i, (lk, tr) in enumerate(zip(like, tree)):
+                cls._collect_prepared(lk, tr, out, f"{prefix}{i}/")
+        return out
+
+    @classmethod
+    def _graft_prepared(cls, like, params, restored, prefix=""):
+        """`params` with each to-prepare weight swapped for restored[path]."""
+        from ..core.executor import PreparedOperand
+
+        if isinstance(like, PreparedOperand):
+            return restored[prefix[:-1]]
+        if isinstance(like, dict):
+            return {
+                k: cls._graft_prepared(like[k], params[k], restored, f"{prefix}{k}/")
+                for k in like
+            }
+        if isinstance(like, (list, tuple)):
+            return type(like)(
+                cls._graft_prepared(lk, pr, restored, f"{prefix}{i}/")
+                for i, (lk, pr) in enumerate(zip(like, params))
+            )
+        return params
+
+    @staticmethod
+    def _weights_fingerprint(raw_weights: dict) -> str:
+        """Content hash of the to-prepare weights (path-keyed, order-stable).
+
+        Guards the prepared-plane cache: restored residues are only valid for
+        the exact weights and policy they were cast from.  Only the weights
+        preparation consumes participate, so editing e.g. a bias or norm does
+        not discard valid planes.
+        """
+        import hashlib
+
+        h = hashlib.sha256()
+        for path in sorted(raw_weights):
+            a = np.asarray(raw_weights[path])
+            h.update(path.encode())
+            h.update(f"{a.shape}{a.dtype}".encode())
+            h.update(np.ascontiguousarray(a).tobytes())
+        return h.hexdigest()
+
+    @classmethod
+    def _prepared_params(cls, params, policy, prepared_dir):
+        """Prepared weights, restored from `prepared_dir` when a persisted
+        copy matches this (policy, weights) — else prepared now and
+        persisted for the next restart.  Only the prepared residue planes
+        are stored (the rest of the tree lives in the regular checkpoint),
+        and a stale save (different policy, e.g. a reference-cast cache
+        reused on the kernel path, or updated weights) would silently break
+        the bit-identity guarantee, so it is detected via the saved metadata
+        and re-prepared instead.
+        """
+        if prepared_dir is None:
+            return prepare_weights(params, policy)
+        import warnings
+
+        from ..checkpoint import Checkpointer, latest_step
+
+        ck = Checkpointer(prepared_dir, keep=1)
+        step = latest_step(prepared_dir)
+        # eval_shape walks prepare_weights abstractly: the `like` tree has
+        # the right PreparedOperand structure/metadata but no residue cast
+        # ever runs — it locates the weight sites (and types the restore).
+        like = jax.eval_shape(lambda p: prepare_weights(p, policy), params)
+        raw = cls._collect_prepared(like, params)
+        meta = {
+            "gemm_policy": repr(policy),
+            "weights_fingerprint": cls._weights_fingerprint(raw),
+        }
+        if step is not None:
+            if all(ck.meta(step).get(k) == v for k, v in meta.items()):
+                restored = ck.restore(step, cls._collect_prepared(like, like))
+                return cls._graft_prepared(like, params, restored)
+            warnings.warn(
+                f"prepared-weight cache in {prepared_dir!r} was saved for a "
+                "different policy or weights; re-preparing (the stale planes "
+                "would not be bit-identical to this configuration)",
+                stacklevel=2,
+            )
+            step += 1  # keep=1 GC drops the stale save after the rewrite
+        prepped = prepare_weights(params, policy)
+        ck.save(step or 0, cls._collect_prepared(like, prepped), extra_meta=meta)
+        return prepped
 
     def generate(
         self,
