@@ -11,12 +11,28 @@ Key reproduced claims (checked in the derived column):
   - B200 fast-N speedups over native ZGEMM of ~4-5.6x at N in [13,18];
   - Ozaki-II with N moduli beats Ozaki-I with S~N slices by ~S(S+1)/2/N x;
   - on v5e there is NO native ZGEMM — emulation is the only route (DESIGN).
+
+CLI (the tracked-throughput harness; `benchmarks.run` still calls `run()`):
+
+    PYTHONPATH=src python -m benchmarks.bench_throughput \
+        [--smoke] [--execution reference|kernel|sharded] [--residue R] \
+        [--mesh DxM] [--json BENCH_throughput.json]
+
+`--execution` picks the residue backend the measured section times
+(`sharded` builds a host mesh — run under
+XLA_FLAGS=--xla_force_host_platform_device_count=N to span N devices) and
+every measured record reports BOTH aggregate and per-device GEMM
+throughput, written to the `--json` file so BENCH_throughput.json tracks
+the sharded path alongside the single-device ones.
 """
 from __future__ import annotations
 
+import argparse
 import functools
+import json
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import ozaki2_cgemm
@@ -109,11 +125,117 @@ def measured(sizes=(256, 512)):
         )
 
 
+def _bench_mesh(execution: str, residue: int, mesh_arg: str | None):
+    """The mesh a sharded measured section spans (None off the sharded path)."""
+    if execution != "sharded":
+        return None
+    from repro.launch.mesh import make_host_mesh
+
+    if mesh_arg:
+        d, m = map(int, mesh_arg.split("x"))
+        return jax.make_mesh(
+            (d, m, max(residue, 1)), ("data", "model", "residue")
+        )
+    return make_host_mesh(
+        1, 1, residue=residue if residue > 1 else len(jax.devices())
+    )
+
+
+def measured_policy(
+    sizes=(256, 512),
+    execution: str = "reference",
+    residue: int = 1,
+    mesh_arg: str | None = None,
+    records: list | None = None,
+):
+    """Measured wall-time of the policy-routed emulation on this host.
+
+    Reports aggregate TFLOPS (whole-GEMM flops / wall time) and per-device
+    TFLOPS (aggregate / devices the mesh spans) for every configuration —
+    the number that must stay flat as the mesh grows is per-device, and the
+    one that must grow is aggregate.
+    """
+    import repro
+    from repro import linalg
+    from repro.core import GemmPolicy
+
+    mesh = _bench_mesh(execution, residue, mesh_arg)
+    n_dev = int(np.prod(list(mesh.shape.values()))) if mesh is not None else 1
+    mesh_name = (
+        "x".join(str(s) for s in mesh.shape.values()) if mesh is not None else "1"
+    )
+    rng = np.random.default_rng(1)
+    for s in sizes:
+        a = jnp.asarray(phi_matrix(rng, (s, s), 0.5, np.complex64))
+        b = jnp.asarray(phi_matrix(rng, (s, s), 0.5, np.complex64))
+        for nm in (6, 8):
+            pol = GemmPolicy(
+                backend="ozaki2_c64", n_moduli=nm, execution=execution,
+                mesh=mesh,
+            )
+            us = time_fn(functools.partial(linalg.matmul_jit, policy=pol), a, b)
+            agg = 8 * s**3 / (us * 1e-6) * 1e-12
+            emit(
+                f"fig6_13/measured_cpu/cgemm/{execution}/mesh{mesh_name}/fast-{nm}/{s}",
+                us,
+                f"tflops_aggregate={agg:.4f};tflops_per_device={agg / n_dev:.4f}",
+            )
+            if records is not None:
+                records.append({
+                    "name": f"cgemm/fast-{nm}/{s}",
+                    "execution": execution,
+                    "mesh": mesh_name,
+                    "devices": n_dev,
+                    "us_per_call": us,
+                    "tflops_aggregate": agg,
+                    "tflops_per_device": agg / n_dev,
+                })
+
+
 def run():
     model_tables()
     measured()
     ozaki1_measured()
 
 
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes (CI: proves the path end-to-end)")
+    ap.add_argument("--execution", default="reference",
+                    choices=["reference", "kernel", "sharded"],
+                    help="residue backend the measured section times")
+    ap.add_argument("--residue", type=int, default=1,
+                    help="residue mesh-axis size (sharded execution)")
+    ap.add_argument("--mesh", default=None,
+                    help="DxM data/model layout for the sharded mesh")
+    ap.add_argument("--json", default="BENCH_throughput.json",
+                    help="write measured records here (tracked throughput)")
+    args = ap.parse_args()
+
+    sizes = (48, 96) if args.smoke else (256, 512)
+    records: list = []
+    if not args.smoke:
+        model_tables()
+    measured_policy(
+        sizes, args.execution, args.residue, args.mesh, records
+    )
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"records": records}, f, indent=1)
+    # CI contract: the run must produce finite nonzero throughput records
+    # (an explicit raise, not an assert — CI must fail under python -O too)
+    bad = [
+        r for r in records
+        if not (np.isfinite(r["tflops_aggregate"])
+                and np.isfinite(r["tflops_per_device"])
+                and r["tflops_per_device"] > 0)
+    ]
+    if not records or bad:
+        raise SystemExit(
+            f"bench_throughput produced no usable records: {bad or 'empty'}"
+        )
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -61,6 +61,27 @@ def main():
         print(f"  N={nm:2d}: err={err:.2e}   projected v5e ZGEMM @16k^3: {tf:6.1f} TFLOPS"
               f"  (v5e has NO native f64 at all)")
 
+    # ---- same policy, sharded over the mesh --------------------------------
+    # execution="sharded" runs the kernel pipeline under shard_map: the N
+    # residue planes shard over the mesh's 'residue' axis (falling back to
+    # 'model'), m/n shard like a normal GEMM, and the single communication
+    # is one psum of the reconstructed output in its exact partial form —
+    # so the result is bitwise identical to execution="kernel" on EVERY
+    # mesh shape.  Run with
+    #   XLA_FLAGS=--xla_force_host_platform_device_count=8
+    # to watch it span 8 host devices; on one device the mesh is trivial
+    # but the full sharded machinery still runs (and still bit-matches).
+    import jax
+
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(1, 1, residue=len(jax.devices()))
+    spol = GemmPolicy(backend="ozaki2_f32", execution="sharded")
+    with repro.use_policy(spol, mesh=mesh):   # or GemmPolicy(mesh=mesh)
+        cs = np.asarray(repro.linalg.matmul(a32, b32))
+    print(f"sharded over {len(jax.devices())} device(s) bitwise == kernel:",
+          bool((cs == ck).all()))
+
 
 if __name__ == "__main__":
     main()

@@ -18,7 +18,7 @@ if os.environ.get("REPRO_NO_X64", "0") != "1":
 # including the model/serve/train layers, whose configs resolve the ambient
 # policy at construction — routes through it.
 from . import linalg  # noqa: E402
-from .linalg import current_policy, use_policy  # noqa: E402
+from .linalg import current_mesh, current_policy, use_mesh, use_policy  # noqa: E402
 
-__all__ = ["current_policy", "linalg", "use_policy"]
+__all__ = ["current_mesh", "current_policy", "linalg", "use_mesh", "use_policy"]
 __version__ = "1.0.0"

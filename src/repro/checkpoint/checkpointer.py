@@ -37,18 +37,35 @@ from ..core.executor import (
 def _prepared_encode(p: PreparedOperand) -> dict:
     """Array children of a PreparedOperand as a plain dict, via the same
     flatten the jax pytree registration uses (one source of truth for the
-    children/aux split; the aux rides in the `like` tree on restore)."""
-    (e_scale, residues), _ = _prepared_flatten(p)
-    enc = {"e_scale": e_scale}
+    children/aux split; the aux rides in the `like` tree on restore).
+    The accu-only extras (bound matrices, raw operand) are keyed only when
+    present, so fast-mode checkpoints keep the pre-accu on-disk format —
+    older prepared_dir saves restore unchanged."""
+    (e_scale, residues, bound, e_bound, raw), _ = _prepared_flatten(p)
+    enc = {}
+    if e_scale is not None:
+        enc["e_scale"] = e_scale
     for i, r in enumerate(residues):
         enc[f"res{i}"] = r
+    for i, b in enumerate(bound):
+        enc[f"bound{i}"] = b
+    if e_bound is not None:
+        enc["e_bound"] = e_bound
+    if raw is not None:
+        enc["raw"] = raw
     return enc
 
 
 def _prepared_decode(like: PreparedOperand, enc: dict) -> PreparedOperand:
     _, aux = _prepared_flatten(like)
     residues = tuple(enc[f"res{i}"] for i in range(len(like.residues)))
-    return _prepared_unflatten(aux, (enc["e_scale"], residues))
+    bound = tuple(enc[f"bound{i}"] for i in range(len(like.bound)))
+    e_scale = enc["e_scale"] if like.e_scale is not None else None
+    e_bound = enc["e_bound"] if like.e_bound is not None else None
+    raw = enc["raw"] if like.raw is not None else None
+    return _prepared_unflatten(
+        aux, (e_scale, residues, bound, e_bound, raw)
+    )
 
 
 def _flatten(tree, prefix=""):

@@ -262,12 +262,23 @@ def _blocked_pipeline_complex(
     return blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks, axis=1)
 
 
+def _accu_combines(backend):
+    """Sharded backends expose `accu_row_combine` / `accu_col_combine`
+    (lax.pmax over the n-/m-sharded mesh axes) so the accurate-mode bound
+    maxima cover the whole output row/column, not just this shard's tile."""
+    return (
+        getattr(backend, "accu_row_combine", None),
+        getattr(backend, "accu_col_combine", None),
+    )
+
+
 def _execute_real(plan, a, b, backend):
     ctx = plan.ctx
     if plan.mode == "fast":
         e_mu, e_nu = scaling.scale_fast_real(a, b, ctx)
     else:
-        e_mu, e_nu = scaling.scale_accurate_real(a, b, ctx)
+        rc, cc = _accu_combines(backend)
+        e_mu, e_nu = scaling.scale_accurate_real(a, b, ctx, rc, cc)
     nl = plan.n_limbs
     ares = backend.cast(a, e_mu, 0, ctx, nl)
     return _blocked_pipeline_real(
@@ -284,7 +295,8 @@ def _execute_complex(plan, a, b, backend):
     if plan.mode == "fast":
         e_mu, e_nu = scaling.scale_fast_complex(ar, ai, br, bi, ctx)
     else:
-        e_mu, e_nu = scaling.scale_accurate_complex(ar, ai, br, bi, ctx)
+        rc, cc = _accu_combines(backend)
+        e_mu, e_nu = scaling.scale_accurate_complex(ar, ai, br, bi, ctx, rc, cc)
     nl = plan.n_limbs
     arr, ari = _cast_pair(backend, ar, ai, e_mu, 0, ctx, nl)
     return _blocked_pipeline_complex(
@@ -302,7 +314,15 @@ def _run_plan_2d(a, b, plan, backend):
 
 
 def run_plan(plan: EmulationPlan, a, b, backend=REFERENCE):
-    """Execute `plan` on (..., m, k) x (..., k, n), batched over leading dims."""
+    """Execute `plan` on (..., m, k) x (..., k, n), batched over leading dims.
+
+    A backend may take over the whole execution by providing `run_plan`
+    (the sharded backend does: it shard_maps `execute_plan` over the mesh
+    with a per-shard worker, so batching/vectorize does not apply there).
+    """
+    runner = getattr(backend, "run_plan", None)
+    if runner is not None:
+        return runner(plan, a, b)
     return _run_plan_2d(a, b, plan, backend)
 
 
@@ -322,6 +342,19 @@ class PreparedOperand:
     operand — so `gemm_prepared` is bit-identical to the direct fast-mode
     pipeline.
 
+    Accurate mode (``keep_raw=True``, done by `prepare_weights` for accu
+    policies): the operand additionally stores its per-row/column 7-bit
+    bound matrix (`bound`/`e_bound`, paper eqs. 13-14) — the only
+    accurate-mode quantity that depends on one operand alone — plus the raw
+    operand.  The residue planes themselves CANNOT be pre-cast for accu
+    calls: the accurate exponents couple both operands through the
+    auxiliary product `cbar = abar @ bbar`, so the truncation position of
+    the prepared side depends on the streaming operand.  An accu-mode
+    `gemm_prepared` therefore reuses the stored bound (bitwise what the
+    direct pipeline recomputes) and re-casts from the raw operand per
+    call.  Fast-mode operands skip both extras, staying exactly
+    residue-planes-sized (and checkpoint-compatible with older saves).
+
     Supports real and complex operands, either side of the product
     (`side='left'` prepares A row-wise; `side='right'` prepares B
     column-wise) and leading batch dims (e.g. scan-stacked layer weights:
@@ -338,7 +371,8 @@ class PreparedOperand:
     """
 
     def __init__(
-        self, x, n_moduli: int | None = None, side: str = "left", backend=None
+        self, x, n_moduli: int | None = None, side: str = "left", backend=None,
+        keep_raw: bool = False,
     ):
         if side not in ("left", "right"):
             raise ValueError(side)
@@ -354,29 +388,65 @@ class PreparedOperand:
         nl = n_limbs_for_ctx(ctx)
         is_complex = jnp.issubdtype(dt, jnp.complexfloating)
         axis = 0 if side == "left" else 1
+        evec = "(m)" if side == "left" else "(k)"
 
-        sig = "(m,k)->(m),(l,m,k)" if side == "left" else "(m,k)->(k),(l,m,k)"
-        if is_complex:
+        # the two preparation flavours store disjoint things, because the
+        # executions read disjoint things: fast-mode calls consume the
+        # pre-cast residue planes (the amortization), accu-mode calls
+        # consume the bound + raw operand and re-cast at the coupled
+        # exponents.  Skipping the unused half keeps fast-mode operands
+        # exactly residue-planes-sized (bit-compatible with older
+        # checkpoints) and accu preparation free of a dead residue cast.
+        e_scale = None
+        res: list = []
+        if not keep_raw:
+            sig = f"(m,k)->{evec},(l,m,k)"
+            if is_complex:
 
-            @functools.partial(
-                jnp.vectorize, signature="(m,k)->(m),(l,m,k),(l,m,k)"
-                if side == "left" else "(m,k)->(k),(l,m,k),(l,m,k)"
-            )
-            def _prep(x2):
-                xr, xi = jnp.real(x2), jnp.imag(x2)
-                e = _solo_scale_complex(xr, xi, ctx, side)
-                rr, ri = _cast_pair(backend, xr, xi, e, axis, ctx, nl)
-                return e, rr, ri
+                @functools.partial(
+                    jnp.vectorize, signature=f"(m,k)->{evec},(l,m,k),(l,m,k)"
+                )
+                def _prep(x2):
+                    xr, xi = jnp.real(x2), jnp.imag(x2)
+                    e = _solo_scale_complex(xr, xi, ctx, side)
+                    rr, ri = _cast_pair(backend, xr, xi, e, axis, ctx, nl)
+                    return e, rr, ri
 
-            e_scale, *res = _prep(x)
-        else:
+                e_scale, *res = _prep(x)
+            else:
 
-            @functools.partial(jnp.vectorize, signature=sig)
-            def _prep(x2):
-                e = _solo_scale_real(x2, ctx, side)
-                return e, backend.cast(x2, e, axis, ctx, nl)
+                @functools.partial(jnp.vectorize, signature=sig)
+                def _prep(x2):
+                    e = _solo_scale_real(x2, ctx, side)
+                    return e, backend.cast(x2, e, axis, ctx, nl)
 
-            e_scale, *res = _prep(x)
+                e_scale, *res = _prep(x)
+
+        bound: tuple = ()
+        e_bound = None
+        if keep_raw:
+            if is_complex:
+
+                @functools.partial(
+                    jnp.vectorize, signature=f"(m,k)->(m,k),(m,k),{evec}"
+                )
+                def _bound(x2):
+                    bars, e_bar, _ = scaling.accu_bound_complex(
+                        jnp.real(x2), jnp.imag(x2), side
+                    )
+                    return bars[0], bars[1], e_bar
+
+                *bound, e_bound = _bound(x)
+            else:
+
+                @functools.partial(
+                    jnp.vectorize, signature=f"(m,k)->(m,k),{evec}"
+                )
+                def _bound(x2):
+                    bar, e_bar, _ = scaling.accu_bound_real(x2, side)
+                    return bar, e_bar
+
+                *bound, e_bound = _bound(x)
 
         self.side = side
         self.n_moduli = n_moduli
@@ -384,6 +454,9 @@ class PreparedOperand:
         self.dtype = dt.name
         self.e_scale = e_scale
         self.residues = tuple(res)
+        self.bound = tuple(bound)
+        self.e_bound = e_bound
+        self.raw = jnp.asarray(x) if keep_raw else None
 
     # residues of the real part (kept under the historical name)
     @property
@@ -392,16 +465,24 @@ class PreparedOperand:
 
     @property
     def is_complex(self) -> bool:
-        return len(self.residues) == 2
+        return jnp.issubdtype(jnp.dtype(self.dtype), jnp.complexfloating)
 
     @property
     def ctx(self) -> CRTContext:
         return make_crt_context(self.n_moduli)
 
     @property
+    def batch_ndim(self) -> int:
+        """Leading batch dims of the prepared operand (0 = a plain matrix)."""
+        if self.residues:
+            return self.residues[0].ndim - 3  # (.., L, m, k) planes
+        return self.bound[0].ndim - 2  # (.., m, k) bound matrix
+
+    @property
     def operand_shape(self) -> tuple[int, int]:
         """Logical (rows, cols) of the prepared operand (per batch element)."""
-        return self.residues[0].shape[-2:]
+        arrs = self.residues if self.residues else self.bound
+        return arrs[0].shape[-2:]
 
     def __repr__(self):
         return (
@@ -411,13 +492,16 @@ class PreparedOperand:
 
 
 def _prepared_flatten(p: PreparedOperand):
-    return (p.e_scale, p.residues), (p.side, p.n_moduli, p.n_limbs, p.dtype)
+    children = (p.e_scale, p.residues, p.bound, p.e_bound, p.raw)
+    return children, (p.side, p.n_moduli, p.n_limbs, p.dtype)
 
 
 def _prepared_unflatten(aux, children):
     p = object.__new__(PreparedOperand)
     p.side, p.n_moduli, p.n_limbs, p.dtype = aux
-    p.e_scale, p.residues = children[0], tuple(children[1])
+    p.e_scale, res, bound, p.e_bound, p.raw = children
+    p.residues = tuple(res)
+    p.bound = tuple(bound)
     return p
 
 
@@ -445,6 +529,83 @@ def _solo_scale_complex(xr, xi, ctx, side):
     return e
 
 
+def _gemm_prepared_accu(prep, x, plan, backend):
+    """Accurate-mode prepared product: reuse the stored 7-bit bound, re-cast
+    from the raw operand at the call-time coupled exponents.
+
+    The accurate exponents couple both operands (`cbar = abar @ bbar`), so
+    the only amortizable step-1 work is the prepared side's bound matrix —
+    this path computes exactly the operations of `_execute_real` /
+    `_execute_complex` in the same order, sourcing (bar, e_bar) from the
+    preparation, and is therefore bitwise identical to the unprepared accu
+    run on every backend.
+    """
+    if prep.raw is None:
+        raise ValueError(
+            "accu-mode prepared matmuls re-cast from the raw operand (the "
+            "accurate exponents couple both operands); prepare with "
+            "keep_raw=True / prepare_weights(accu policy)"
+        )
+    ctx = prep.ctx
+    nl = prep.n_limbs
+    other = "left" if prep.side == "right" else "right"
+
+    if prep.is_complex:
+        xr, xi = jnp.real(x), jnp.imag(x)
+        xbar, e_xbar, x_nz = scaling.accu_bound_complex(xr, xi, other)
+        pbar, e_pbar = prep.bound, prep.e_bound
+        p_nz = jnp.max(
+            jnp.maximum(*[b.astype(jnp.int32) for b in pbar]),
+            axis=1 if prep.side == "left" else 0,
+        ) > 0
+        wr, wi = jnp.real(prep.raw), jnp.imag(prep.raw)
+        if prep.side == "left":
+            cmax = scaling.accu_cbar_complex(pbar, xbar)
+            e_mu, e_nu = scaling.accu_exponents(
+                cmax, e_pbar, e_xbar, p_nz, x_nz, ctx
+            )
+            arr, ari = _cast_pair(backend, wr, wi, e_mu, 0, ctx, nl)
+            br_, bi_ = xr, xi
+        else:
+            cmax = scaling.accu_cbar_complex(xbar, pbar)
+            e_mu, e_nu = scaling.accu_exponents(
+                cmax, e_xbar, e_pbar, x_nz, p_nz, ctx
+            )
+            arr, ari = _cast_pair(backend, xr, xi, e_mu, 0, ctx, nl)
+            br_, bi_ = wr, wi
+        return _blocked_pipeline_complex(
+            plan, backend, ctx, e_mu, arr, ari, e_nu,
+            lambda sl: _cast_pair(
+                backend, br_[:, sl], bi_[:, sl], e_nu[sl], 1, ctx, nl
+            ),
+            br_.shape[1],
+        )
+
+    xbar, e_xbar, x_nz = scaling.accu_bound_real(x, other)
+    pbar, e_pbar = prep.bound[0], prep.e_bound
+    p_nz = jnp.max(
+        pbar.astype(jnp.int32), axis=1 if prep.side == "left" else 0
+    ) > 0
+    if prep.side == "left":
+        cbar = int8_matmul(pbar, xbar)
+        e_mu, e_nu = scaling.accu_exponents(
+            cbar, e_pbar, e_xbar, p_nz, x_nz, ctx
+        )
+        a_, b_ = prep.raw, x
+    else:
+        cbar = int8_matmul(xbar, pbar)
+        e_mu, e_nu = scaling.accu_exponents(
+            cbar, e_xbar, e_pbar, x_nz, p_nz, ctx
+        )
+        a_, b_ = x, prep.raw
+    ares = backend.cast(a_, e_mu, 0, ctx, nl)
+    return _blocked_pipeline_real(
+        plan, backend, ctx, e_mu, ares, e_nu,
+        lambda sl: backend.cast(b_[:, sl], e_nu[sl], 1, ctx, nl),
+        b_.shape[1],
+    )
+
+
 def gemm_prepared(
     prep: PreparedOperand,
     x: jnp.ndarray,
@@ -453,8 +614,9 @@ def gemm_prepared(
     out_dtype=None,
     n_block=None,
     backend=REFERENCE,
+    mode: str = "fast",
 ) -> jnp.ndarray:
-    """Emulated product with one pre-residue-cast side (fast mode).
+    """Emulated product with one prepared side.
 
     side='left':  C ~= prep @ x   (x is B, cast per call)
     side='right': C ~= x @ prep   (x is A, cast per call)
@@ -462,16 +624,19 @@ def gemm_prepared(
     `formulation` (complex operands) accepts 'auto' and `n_block` accepts
     int | None | 'auto', resolved exactly as in the direct pipeline.
 
-    Bit-identical to the direct fast-mode pipeline: the fast scaling bound of
-    each operand is independent of the other, so the prepared exponents and
-    residues match what `ozaki2_gemm`/`ozaki2_cgemm` would compute, and
-    output-column blocking slices the same residues the unblocked path uses.
+    Bit-identical to the direct pipeline in both modes.  mode='fast': the
+    fast scaling bound of each operand is independent of the other, so the
+    prepared exponents and residues match what the direct run computes and
+    the prepared side's cast is skipped entirely.  mode='accu': the stored
+    per-row/column bound replaces its recomputation, and the residue casts
+    run per call at the coupled exponents (`_gemm_prepared_accu`).
     """
     ctx = prep.ctx
-    if prep.residues[0].ndim != 3:
+    if prep.batch_ndim != 0:
         raise ValueError(
             "gemm_prepared expects an unbatched (2D) prepared operand; "
-            f"got residues of shape {prep.residues[0].shape}"
+            f"got a {prep.batch_ndim}-batched preparation of "
+            f"shape {prep.operand_shape}"
         )
     out_dtype = jnp.dtype(out_dtype or x.dtype)
     if prep.side == "left":
@@ -483,7 +648,7 @@ def gemm_prepared(
     plan = make_plan(
         prep.dtype,
         n_moduli=prep.n_moduli,
-        mode="fast",
+        mode=mode,
         method=method,
         formulation=formulation if prep.is_complex else None,
         out_dtype=out_dtype,
@@ -497,6 +662,17 @@ def gemm_prepared(
     )
     nl = prep.n_limbs
     other_side = "left" if prep.side == "right" else "right"
+
+    if mode == "accu":
+        return _gemm_prepared_accu(prep, x, plan, backend)
+    if mode != "fast":
+        raise ValueError(f"unknown mode {mode!r}")
+    if not prep.residues:
+        raise ValueError(
+            "this operand was prepared for accu mode (bound + raw only); "
+            "fast-mode calls consume pre-cast residue planes — re-prepare "
+            "with prepare_weights(fast policy)"
+        )
 
     if prep.is_complex:
         xr, xi = jnp.real(x), jnp.imag(x)

@@ -7,6 +7,20 @@ with b = sustained memory bandwidth (B/s) and p = int8 engine throughput
 
 Hardware presets include the paper's GPUs and our TPU v5e target
 (819 GB/s HBM, 394 TOPS int8 = 2x the 197 TFLOP/s bf16 MXU rate).
+
+Two beyond-paper terms live here too, because the 'auto' plan selections
+(`formulation="auto"` / `n_block="auto"` in `core/plan.py`) must price them:
+
+* a *communication term* for `GemmPolicy(execution="sharded")` — the exact
+  partial-reconstruction combine psums `crt_partial_parts(N)` f64 planes of
+  the output over the residue mesh axis (`sharded_comm_time_s`), so plans
+  for sharded GEMMs are selected on per-shard shapes plus that cost;
+* the *kernel block-selection* rule (`select_block`) shared with
+  `kernels/common.block_and_padded`: when a dimension is just above a block
+  multiple (m=257 vs bm=256), the kernels shrink the block to the next
+  smaller aligned size instead of padding ~2x, and the model sees the same
+  padded shapes the kernels actually run (`padded_dim`).  `BLOCK_SHRINK`
+  is the knob (tests flip it to measure the padding saved).
 """
 from __future__ import annotations
 
@@ -20,13 +34,17 @@ class HW:
     int8_ops: float        # OPS
     native_c64: float      # native CGEMM flop/s (for speedup comparisons)
     native_c128: float     # native ZGEMM flop/s
+    # sustained per-device collective (all-reduce) bandwidth, B/s — the
+    # denominator of the sharded-execution psum term.  Order-of-magnitude
+    # presets (v5e: 4x ICI links); refine with the calibration microbench.
+    ici_bw: float = 9e10
 
 
 TPU_V5E = HW("tpu-v5e", 819e9, 394e12, 197e12, 0.0)  # no native f64 at all
-GH200 = HW("gh200", 4000e9, 1979e12, 67e12, 34e12)
-B200 = HW("b200", 8000e9, 4500e12, 75e12, 37e12)
-RTX5080 = HW("rtx5080", 960e9, 450e12, 56e12, 0.88e12)
-MI300X = HW("mi300x", 5300e9, 2615e12, 163e12, 163e12)
+GH200 = HW("gh200", 4000e9, 1979e12, 67e12, 34e12, ici_bw=45e10)
+B200 = HW("b200", 8000e9, 4500e12, 75e12, 37e12, ici_bw=90e10)
+RTX5080 = HW("rtx5080", 960e9, 450e12, 56e12, 0.88e12, ici_bw=3e10)
+MI300X = HW("mi300x", 5300e9, 2615e12, 163e12, 163e12, ici_bw=45e10)
 
 HARDWARE = {h.name: h for h in (TPU_V5E, GH200, B200, RTX5080, MI300X)}
 
@@ -92,6 +110,46 @@ def real_tflops(m, n, k, n_moduli, hw: HW, mode="fast", prec="d", c=None):
 GEMM_LAUNCH_S = 5e-6
 
 
+# Fixed per-collective dispatch overhead (psum/all-gather launch + barrier),
+# charged once per output-column block by the sharded execution (each block
+# reconstructs — and therefore combines — separately).
+COLLECTIVE_LAUNCH_S = 2e-5
+
+
+def crt_partial_parts(n_moduli: int) -> int:
+    """Number of exact f64 part-planes the sharded combine psums per output
+    element (the `core/crt.partial_split` width for the default moduli)."""
+    from .crt import partial_split
+    from .moduli import default_moduli
+
+    return partial_split(default_moduli(n_moduli))[0].shape[0]
+
+
+def sharded_comm_time_s(
+    m: int,
+    n: int,
+    n_moduli: int,
+    residue_shards: int,
+    hw: HW = TPU_V5E,
+    complex_: bool = False,
+    n_blocks: int = 1,
+) -> float:
+    """Communication term of one sharded emulated GEMM (per-shard m, n).
+
+    The residue-sharded pipeline communicates exactly one thing: the psum of
+    the `crt_partial_parts(N)` exact f64 partial-reconstruction planes over
+    the residue axis (complex outputs stack CR/CI, 2x).  No int8 residue
+    plane ever crosses the mesh — that invariant is CI-asserted against the
+    traced jaxpr.  Ring all-reduce moves ~(r-1)/r of the payload per device.
+    """
+    if residue_shards <= 1:
+        return 0.0
+    parts = crt_partial_parts(n_moduli)
+    stack = 2 if complex_ else 1
+    byts = parts * 8 * m * n * stack * (residue_shards - 1) / residue_shards
+    return n_blocks * COLLECTIVE_LAUNCH_S + byts / hw.ici_bw
+
+
 def formulation_time_s(
     formulation: str,
     m: int,
@@ -103,6 +161,7 @@ def formulation_time_s(
     prec: str = "z",
     karatsuba_launches: int = 3,
     modulus_batched: bool = False,
+    comm_s: float = 0.0,
 ) -> float:
     """SIII-C time model specialized per Fig. 1 complex-product strategy.
 
@@ -115,11 +174,15 @@ def formulation_time_s(
     reference path, 1 when the backend fuses the D/E/F triple into one
     kernel (`kernels/karatsuba_fused.py`).  `modulus_batched` collapses the
     per-modulus launch factor to 1 (the batched kernels run all N planes in
-    one grid), leaving only the op/byte terms to scale with N.
+    one grid), leaving only the op/byte terms to scale with N.  `comm_s` is
+    the sharded execution's collective cost (`sharded_comm_time_s`, charged
+    on the per-shard shape the caller passes) — the same for every strategy
+    today, but kept in the totals so sharded 'auto' selections model what
+    actually runs.
     """
     neff = n_moduli if mode == "fast" else n_moduli + 1
     launch_planes = 1 if modulus_batched else neff
-    base = complex_time_s(m, n, k, n_moduli, hw, mode, prec)
+    base = complex_time_s(m, n, k, n_moduli, hw, mode, prec) + comm_s
     if formulation == "karatsuba":
         return base + karatsuba_launches * launch_planes * GEMM_LAUNCH_S
     extra_ops = 2 * neff * m * n * k / hw.int8_ops  # 8N mnk vs the model's 6N
@@ -145,14 +208,18 @@ def select_formulation(
     prec: str = "z",
     karatsuba_launches: int = 3,
     modulus_batched: bool = False,
+    comm_s: float = 0.0,
 ) -> str:
     """Pick the fastest Fig. 1 complex-product strategy under the SIII-C
-    model (used by `core/plan.py` for ``formulation='auto'``)."""
+    model (used by `core/plan.py` for ``formulation='auto'``).  Sharded
+    callers pass per-shard (m, n) and their `sharded_comm_time_s` so the
+    launch-vs-compute crossover reflects the local problem each shard runs.
+    """
     return min(
         ("karatsuba", "block_a", "block_b"),
         key=lambda f: formulation_time_s(
             f, m, n, k, n_moduli, hw, mode, prec,
-            karatsuba_launches, modulus_batched,
+            karatsuba_launches, modulus_batched, comm_s,
         ),
     )
 
@@ -191,6 +258,50 @@ def kernel_launch_count(
         products = planes * n_chunks
     reconstructs = per_part if complex_ else 1
     return cast_a + n_blocks * (cast_b + products + reconstructs)
+
+
+# --------------------------------------------- kernel block selection (pads)
+
+# Knob for the just-over-a-multiple block shrink: when a GEMM dimension is
+# barely above a block multiple (m=257 with bm=256), padding to the next
+# block multiple wastes ~2x compute/memory; shrinking the block to the next
+# smaller aligned size pads far less (257 -> 384 at bm=128 instead of 512).
+# The kernels (`kernels/common.block_and_padded`) and this model share the
+# single `select_block` rule, so perfmodel-visible padded shapes are exactly
+# what the kernels launch.  Setting BLOCK_SHRINK = False restores the
+# legacy round-up-to-the-default-block behaviour.
+BLOCK_SHRINK = True
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def select_block(dim: int, block: int, align: int | None = None) -> int:
+    """Block size one kernel axis actually uses for `dim` (default `block`).
+
+    dim <= block: the block shrinks to the axis (single block, no padding —
+    the pre-existing rule).  dim > block: with BLOCK_SHRINK on and a
+    hardware alignment given, scan the aligned block sizes <= block and keep
+    the one whose padded dim (`_round_up(dim, b)`) is smallest, preferring
+    the largest such block (fewer grid steps).  `block` itself is always a
+    candidate, so the padded dim never regresses past the legacy choice.
+    """
+    if dim <= block:
+        return dim
+    if not BLOCK_SHRINK or align is None or block <= align:
+        return block
+    best, best_pad = block, _round_up(dim, block)
+    for b in range(block - align, align - 1, -align):
+        pad = _round_up(dim, b)
+        if pad < best_pad:
+            best, best_pad = b, pad
+    return best
+
+
+def padded_dim(dim: int, block: int, align: int | None = None) -> int:
+    """The padded extent a kernel axis runs at under `select_block`."""
+    return _round_up(dim, select_block(dim, block, align))
 
 
 def ozaki1_complex_time_s(m, n, k, slices: int, hw: HW) -> float:

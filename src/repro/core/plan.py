@@ -120,6 +120,7 @@ def make_plan(
     hw=None,
     fused_karatsuba: bool = False,
     modulus_batched: bool = False,
+    comm_s: float = 0.0,
 ) -> EmulationPlan:
     """Build an :class:`EmulationPlan` from user-facing knobs.
 
@@ -135,6 +136,9 @@ def make_plan(
     modulus_batched: the executing backend folds all N residue planes into
       one kernel grid (`kernels` batched path) — the 'auto' selection then
       charges each product strategy a single launch instead of N.
+    comm_s: collective cost of a sharded execution (perfmodel
+      `sharded_comm_time_s`, priced by `GemmPolicy.plan_for` on per-shard
+      shapes) — folded into the 'auto' formulation totals.
     """
     dt = jnp.dtype(dtype)
     if mode not in ("fast", "accu"):
@@ -156,7 +160,7 @@ def make_plan(
         if formulation == "auto":
             formulation = _auto_formulation(
                 shape, int(n_moduli), mode, dt, hw, fused_karatsuba,
-                modulus_batched,
+                modulus_batched, comm_s,
             )
         if formulation not in COMPLEX_FORMULATIONS:
             raise ValueError(f"unknown complex formulation {formulation!r}")
@@ -180,7 +184,8 @@ def make_plan(
 
 
 def _auto_formulation(
-    shape, n_moduli, mode, dt, hw, fused_karatsuba=False, modulus_batched=False
+    shape, n_moduli, mode, dt, hw, fused_karatsuba=False,
+    modulus_batched=False, comm_s=0.0,
 ):
     from . import perfmodel
 
@@ -198,6 +203,7 @@ def _auto_formulation(
         prec=prec,
         karatsuba_launches=1 if fused_karatsuba else 3,
         modulus_batched=modulus_batched,
+        comm_s=comm_s,
     )
 
 

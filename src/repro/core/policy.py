@@ -11,11 +11,22 @@ became the seam for every execution target — *where* to run it:
                                     path; 4 launches per GEMM at any N)
     execution="per_modulus_kernel"  pre-batching Pallas path (one launch per
                                     modulus; bitwise parity reference)
+    execution="sharded"             the kernel pipeline under `shard_map`
+                                    over a mesh: residue planes shard N over
+                                    the 'residue' axis (falling back to
+                                    'model'), m/n shard like a normal GEMM,
+                                    and one psum of the reconstructed output
+                                    is the only communication
+                                    (`distributed/sharded_gemm.py`)
 
-Future backends (ROADMAP: "sharded", "fp8", megakernel) plug in as new
-``execution`` values resolved by :meth:`GemmPolicy.execution_backend`; the
-plan/executor layer (`core/plan.py` + `core/executor.py`) is already
-backend-agnostic.
+The sharded execution needs a mesh: pin it on the policy (``mesh=``) or
+scope a thread-local default with :func:`use_mesh` (also reachable as
+``repro.use_mesh`` and via ``repro.use_policy(policy, mesh=...)``).
+``shard_axes`` optionally overrides the (residue, m, n) mesh-axis names.
+
+Future backends (ROADMAP: "fp8", megakernel) plug in as new ``execution``
+values resolved by :meth:`GemmPolicy.execution_backend`; the plan/executor
+layer (`core/plan.py` + `core/executor.py`) is already backend-agnostic.
 
 User code normally does not call this module directly: `repro.linalg.matmul`
 is the drop-in entry point, scoped by `repro.use_policy(policy)` — the
@@ -48,8 +59,10 @@ activation side only (see `prepare_weights`).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
+import threading
 from typing import Literal
 
 import jax
@@ -63,9 +76,43 @@ Backend = Literal[
     "native", "ozaki2_f32", "ozaki2_f64", "ozaki2_c64", "ozaki2_c128"
 ]
 
-Execution = Literal["reference", "kernel", "per_modulus_kernel"]
+Execution = Literal["reference", "kernel", "per_modulus_kernel", "sharded"]
 
-EXECUTIONS = ("reference", "kernel", "per_modulus_kernel")
+EXECUTIONS = ("reference", "kernel", "per_modulus_kernel", "sharded")
+
+
+# ------------------------------------------------- thread-local default mesh
+
+_MESH_STATE = threading.local()
+
+
+def current_mesh():
+    """The innermost `use_mesh` mesh (None outside any scope) — the default
+    a ``GemmPolicy(execution="sharded", mesh=None)`` resolves at trace time."""
+    stack = getattr(_MESH_STATE, "stack", None)
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Scope the thread-local default mesh for sharded-execution policies.
+
+    Nestable; the innermost scope wins.  `repro.use_policy(policy, mesh=...)`
+    enters this scope alongside the policy scope, so one context manager
+    distributes every matmul in a model.
+    """
+    from jax.sharding import Mesh
+
+    if not isinstance(mesh, Mesh):
+        raise TypeError(f"use_mesh expects a jax.sharding.Mesh; got {type(mesh).__name__}")
+    stack = getattr(_MESH_STATE, "stack", None)
+    if stack is None:
+        stack = _MESH_STATE.stack = []
+    stack.append(mesh)
+    try:
+        yield mesh
+    finally:
+        stack.pop()
 
 _COMPUTE_DTYPES = {
     "native": None,
@@ -97,6 +144,11 @@ class GemmPolicy:
     reconstruction the kernels implement — no f64 on the VPU).
     ``out_dtype`` (a dtype name, or None for the compute dtype) requests a
     different result precision, e.g. f64-grade output from f32 operands.
+    ``mesh`` pins the mesh a sharded execution distributes over (None: the
+    thread-local `use_mesh` default, resolved at trace time); ``shard_axes``
+    optionally overrides the resolved (residue, m, n) mesh-axis names.
+    Both are hashable (jax meshes hash), so sharded policies remain valid
+    jit statics and config fields.
     """
 
     backend: Backend = "native"
@@ -108,6 +160,8 @@ class GemmPolicy:
     execution: Execution = "reference"
     interpret: bool | None = None  # Pallas interpret override (kernel paths)
     out_dtype: str | None = None  # result dtype name (None: compute dtype)
+    mesh: object | None = None    # sharded execution: jax.sharding.Mesh
+    shard_axes: tuple | None = None  # sharded: (residue, m, n) name override
 
     def __post_init__(self):
         if self.backend not in _COMPUTE_DTYPES:
@@ -142,6 +196,18 @@ class GemmPolicy:
             return self.method
         return "paper" if self.execution == "reference" else "garner"
 
+    def resolved_mesh(self):
+        """The mesh a sharded execution runs on: the pinned field, else the
+        thread-local `use_mesh` default (resolved at trace time)."""
+        mesh = self.mesh if self.mesh is not None else current_mesh()
+        if mesh is None:
+            raise ValueError(
+                "execution='sharded' needs a mesh: pass GemmPolicy(mesh=...) "
+                "or enter repro.use_mesh(mesh) / repro.use_policy(policy, "
+                "mesh=mesh) around tracing"
+            )
+        return mesh
+
     def execution_backend(self):
         """Resolve the residue-backend instance for this policy's execution.
 
@@ -158,6 +224,13 @@ class GemmPolicy:
         interp = (
             self.interpret if self.interpret is not None else interpret_default()
         )
+        if self.execution == "sharded":
+            from ..distributed.sharded_gemm import ShardedBackend
+
+            return ShardedBackend(
+                KernelBackend(bool(interp)), self.resolved_mesh(),
+                self.shard_axes,
+            )
         cls = (
             KernelBackend
             if self.execution == "kernel"
@@ -173,6 +246,21 @@ class GemmPolicy:
         # executing backend launches — read its declared capabilities so
         # plan_for and gemm_prepared can never disagree
         be = self.execution_backend()
+        shape = (m, k, n)
+        comm_s = 0.0
+        factors = getattr(be, "shard_factors", None)
+        if factors is not None:
+            # sharded: price the per-shard problem plus the psum term, so
+            # the 'auto' selections reflect what each shard actually runs
+            from . import perfmodel
+
+            md, nd, r = factors(m, n)
+            shape = (m // md, k, n // nd)
+            comm_s = perfmodel.sharded_comm_time_s(
+                shape[0], shape[2],
+                self.n_moduli or default_n_moduli(self.compute_dtype, self.mode),
+                r, complex_=self.is_complex,
+            )
         return make_plan(
             self.compute_dtype,
             n_moduli=self.n_moduli,
@@ -181,9 +269,10 @@ class GemmPolicy:
             formulation=self.formulation if self.is_complex else None,
             out_dtype=self.out_dtype,
             n_block=self.n_block,
-            shape=(m, k, n),
+            shape=shape,
             fused_karatsuba=getattr(be, "fused_karatsuba", False),
             modulus_batched=getattr(be, "modulus_batched", False),
+            comm_s=comm_s,
         )
 
 
@@ -232,7 +321,7 @@ emulated_matmul.defvjp(_emulated_fwd, _emulated_bwd)
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
 def _prepared_matmul(x: jnp.ndarray, w: PreparedOperand, policy: GemmPolicy):
-    """x @ w with the weight pre-residue-cast (fast mode, inference only)."""
+    """x @ w with the weight prepared up front (inference only)."""
     ct = policy.compute_dtype
     y = gemm_prepared(
         w,
@@ -242,6 +331,7 @@ def _prepared_matmul(x: jnp.ndarray, w: PreparedOperand, policy: GemmPolicy):
         out_dtype=policy.out_dtype,
         n_block=policy.n_block,
         backend=policy.execution_backend(),
+        mode=policy.mode,
     )
     return _real_cast(y, policy.out_dtype or x.dtype)
 
@@ -279,10 +369,17 @@ def policy_matmul(x: jnp.ndarray, w, policy: GemmPolicy) -> jnp.ndarray:
             )
         if w.side != "right":
             raise ValueError("policy_matmul expects a side='right' prepared weight")
-        if policy.mode != "fast":
+        if policy.execution == "sharded":
             raise ValueError(
-                "prepared weights are fast-mode only (the accurate-mode "
-                f"bound couples both operands); policy.mode={policy.mode!r}"
+                "prepared weights are not supported under execution="
+                "'sharded' yet (the prepared planes live unsharded); run "
+                "prepared serving on execution='kernel' or pass raw weights"
+            )
+        if policy.mode == "accu" and w.raw is None:
+            raise ValueError(
+                "accu-mode prepared matmuls re-cast from the raw operand "
+                "(the accurate exponents couple both operands); re-prepare "
+                "with prepare_weights(accu policy) / keep_raw=True"
             )
         expect = policy.n_moduli or default_n_moduli(
             policy.compute_dtype, policy.mode
@@ -321,19 +418,24 @@ def prepare_weights(params, policy: GemmPolicy):
     *selected execution backend* — so prepared serving stays bit-identical
     to the unprepared run on the kernel path as well as the reference path.
     Step 1 of the scheme then runs once per weight instead of once per
-    request.  Only valid for fast-mode emulated policies: the accurate-mode
-    bound couples both operands, so asking to prepare an 'accu' policy is a
-    misconfiguration and raises (a silent no-op would quietly forfeit the
-    requested amortization).  A native policy returns the tree unchanged
-    (there is nothing to prepare).
+    request.  Fast mode amortizes the whole weight-side cast; accu mode
+    amortizes the per-column 7-bit bound matrix and retains the raw weight
+    (`keep_raw`) because the accurate exponents couple both operands — the
+    weight-side residues are re-cast per call at the coupled truncation
+    position (see `PreparedOperand`).  A native policy returns the tree
+    unchanged (there is nothing to prepare).
     """
     if policy.backend == "native":
         return params
-    if policy.mode != "fast":
+    if policy.execution == "sharded":
         raise ValueError(
-            "prepare_weights requires a fast-mode policy (the accurate-mode "
-            f"scaling bound couples both operands); got mode={policy.mode!r}"
+            "prepare_weights under execution='sharded' is not supported yet "
+            "(prepared planes live unsharded); prepare with "
+            "execution='kernel' or serve unprepared"
         )
+    if policy.mode not in ("fast", "accu"):
+        raise ValueError(f"unknown mode {policy.mode!r}")
+    keep_raw = policy.mode == "accu"
     n_moduli = policy.n_moduli or default_n_moduli(policy.compute_dtype, policy.mode)
     cast_backend = policy.execution_backend()
 
@@ -355,6 +457,7 @@ def prepare_weights(params, policy: GemmPolicy):
                 n_moduli,
                 side="right",
                 backend=cast_backend,
+                keep_raw=keep_raw,
             )
         if isinstance(val, (list, tuple)):
             return type(val)(prep(v) for v in val)

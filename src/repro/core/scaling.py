@@ -105,42 +105,92 @@ def _accu_exponent(cbar_max: jnp.ndarray, e_bar: jnp.ndarray, ctx: CRTContext):
     return e + e_bar
 
 
-def scale_accurate_real(a: jnp.ndarray, b: jnp.ndarray, ctx: CRTContext):
-    a = a.astype(_F64)
-    b = b.astype(_F64)
-    amax = jnp.max(jnp.abs(a), axis=1)
-    bmax = jnp.max(jnp.abs(b), axis=0)
+def accu_bound_real(x: jnp.ndarray, side: str):
+    """One operand's accurate-mode 7-bit bound: (bar, e_bar, nonzero).
+
+    side='left' bounds rows of A, side='right' columns of B.  This is the
+    only accurate-mode quantity that depends on one operand alone, which is
+    why `PreparedOperand` can store it (the exponents themselves couple both
+    operands through `cbar` and must be recomputed per call).
+    """
+    x = x.astype(_F64)
+    xmax = jnp.max(jnp.abs(x), axis=1 if side == "left" else 0)
     # scale so the max-abs integer part fits 6 bits: max*2^e in [32, 64)
-    e_abar = 5 - ilogb(jnp.where(amax > 0, amax, 1.0))
-    e_bbar = 5 - ilogb(jnp.where(bmax > 0, bmax, 1.0))
-    abar = _bar_int8(jnp.abs(a), e_abar, 0)
-    bbar = _bar_int8(jnp.abs(b), e_bbar, 1)
-    cbar = int8_matmul(abar, bbar)  # exact upper bound of sum mu|a| nu|b|
-    e_mu = _accu_exponent(jnp.max(cbar, axis=1), e_abar, ctx)
-    e_nu = _accu_exponent(jnp.max(cbar, axis=0), e_bbar, ctx)
-    return jnp.where(amax > 0, e_mu, 0), jnp.where(bmax > 0, e_nu, 0)
+    e_bar = 5 - ilogb(jnp.where(xmax > 0, xmax, 1.0))
+    bar = _bar_int8(jnp.abs(x), e_bar, 0 if side == "left" else 1)
+    return bar, e_bar, xmax > 0
 
 
-def scale_accurate_complex(ar, ai, br, bi, ctx: CRTContext):
+def accu_bound_complex(xr: jnp.ndarray, xi: jnp.ndarray, side: str):
+    """Complex twin of `accu_bound_real`: ((bar_r, bar_i), e_bar, nonzero)."""
+    xr, xi = xr.astype(_F64), xi.astype(_F64)
+    red = 1 if side == "left" else 0
+    xmax = jnp.maximum(
+        jnp.max(jnp.abs(xr), axis=red), jnp.max(jnp.abs(xi), axis=red)
+    )
+    e_bar = 5 - ilogb(jnp.where(xmax > 0, xmax, 1.0))
+    axis = 0 if side == "left" else 1
+    bar_r = _bar_int8(jnp.abs(xr), e_bar, axis)
+    bar_i = _bar_int8(jnp.abs(xi), e_bar, axis)
+    return (bar_r, bar_i), e_bar, xmax > 0
+
+
+def accu_cbar_complex(abar, bbar) -> jnp.ndarray:
     """Paper SIII-B accurate mode: Cbar_I = AbarI BbarR + AbarR BbarI,
-    Cbar_R = Cbar_I + (AbarR - AbarI)(BbarR - BbarI)."""
-    ar, ai = ar.astype(_F64), ai.astype(_F64)
-    br, bi = br.astype(_F64), bi.astype(_F64)
-    amax = jnp.maximum(jnp.max(jnp.abs(ar), axis=1), jnp.max(jnp.abs(ai), axis=1))
-    bmax = jnp.maximum(jnp.max(jnp.abs(br), axis=0), jnp.max(jnp.abs(bi), axis=0))
-    e_abar = 5 - ilogb(jnp.where(amax > 0, amax, 1.0))
-    e_bbar = 5 - ilogb(jnp.where(bmax > 0, bmax, 1.0))
-    abar_r = _bar_int8(jnp.abs(ar), e_abar, 0)
-    abar_i = _bar_int8(jnp.abs(ai), e_abar, 0)
-    bbar_r = _bar_int8(jnp.abs(br), e_bbar, 1)
-    bbar_i = _bar_int8(jnp.abs(bi), e_bbar, 1)
+    Cbar_R = Cbar_I + (AbarR - AbarI)(BbarR - BbarI); returns max(R, I)."""
+    abar_r, abar_i = abar
+    bbar_r, bbar_i = bbar
     cbar_i = int8_matmul(abar_i, bbar_r) + int8_matmul(abar_r, bbar_i)
     # (AbarR - AbarI) etc. are error-free in int8 (values in [-64, 64])
     cbar_r = cbar_i + int8_matmul(abar_r - abar_i, bbar_r - bbar_i)
-    cmax = jnp.maximum(cbar_r, cbar_i)
-    e_mu = _accu_exponent(jnp.max(cmax, axis=1), e_abar, ctx)
-    e_nu = _accu_exponent(jnp.max(cmax, axis=0), e_bbar, ctx)
-    return jnp.where(amax > 0, e_mu, 0), jnp.where(bmax > 0, e_nu, 0)
+    return jnp.maximum(cbar_r, cbar_i)
+
+
+def accu_exponents(
+    cbar, e_abar, e_bbar, a_nz, b_nz, ctx: CRTContext,
+    row_combine=None, col_combine=None,
+):
+    """cbar bound -> (e_mu, e_nu) integer exponents.
+
+    `row_combine` / `col_combine` are optional collectives for sharded
+    execution: cbar's row max only covers this shard's output columns (and
+    the col max this shard's rows), so a shard combines them (`lax.pmax`,
+    exact on int32) across the n- and m-sharded mesh axes before the
+    exponent formula.  With both None this is exactly the paper's
+    single-device computation.
+    """
+    rmax = jnp.max(cbar, axis=1)
+    cmax = jnp.max(cbar, axis=0)
+    if row_combine is not None:
+        rmax = row_combine(rmax)
+    if col_combine is not None:
+        cmax = col_combine(cmax)
+    e_mu = _accu_exponent(rmax, e_abar, ctx)
+    e_nu = _accu_exponent(cmax, e_bbar, ctx)
+    return jnp.where(a_nz, e_mu, 0), jnp.where(b_nz, e_nu, 0)
+
+
+def scale_accurate_real(
+    a: jnp.ndarray, b: jnp.ndarray, ctx: CRTContext,
+    row_combine=None, col_combine=None,
+):
+    abar, e_abar, a_nz = accu_bound_real(a, "left")
+    bbar, e_bbar, b_nz = accu_bound_real(b, "right")
+    cbar = int8_matmul(abar, bbar)  # exact upper bound of sum mu|a| nu|b|
+    return accu_exponents(
+        cbar, e_abar, e_bbar, a_nz, b_nz, ctx, row_combine, col_combine
+    )
+
+
+def scale_accurate_complex(
+    ar, ai, br, bi, ctx: CRTContext, row_combine=None, col_combine=None
+):
+    abar, e_abar, a_nz = accu_bound_complex(ar, ai, "left")
+    bbar, e_bbar, b_nz = accu_bound_complex(br, bi, "right")
+    cmax = accu_cbar_complex(abar, bbar)
+    return accu_exponents(
+        cmax, e_abar, e_bbar, a_nz, b_nz, ctx, row_combine, col_combine
+    )
 
 
 def exp2_vector(e: jnp.ndarray) -> jnp.ndarray:

@@ -4,8 +4,23 @@ Parameters/caches declare logical axis names in their ParamMeta ('vocab',
 'ff', 'qkv', 'experts', ...); these rules map them onto the physical mesh
 axes ('pod', 'data', 'model').  Changing the parallelism layout = changing
 this table, not the model code.
+
+Alongside the parameter rules live the *residue-plane* rules of the sharded
+emulated GEMM (`GemmPolicy(execution="sharded")`): the (N, m, k) / (N, k, n)
+int8 residue stacks shard their plane dimension N over the 'residue' mesh
+axis (falling back to 'model' when the mesh has no dedicated residue axis),
+and m/n shard like a normal GEMM — m over 'data', n over 'model' unless the
+residue fallback claimed it.  `resolve_gemm_axes` performs that resolution
+size-aware (indivisible m/n drop to replicated, exactly like the parameter
+rules), and `residue_plane_specs` spells the resulting PartitionSpecs for
+every array of the pipeline.  K is never sharded: each shard contracts the
+full k so the int8 planes it produces are complete, and only the exact f64
+partial-reconstruction planes are ever communicated (one psum per output
+block — see `distributed/sharded_gemm.py`).
 """
 from __future__ import annotations
+
+import dataclasses
 
 from typing import Any, Mapping, Sequence
 
@@ -13,6 +28,8 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..models.params import ParamMeta, _map_like
+
+RESIDUE_AXIS = "residue"
 
 # tensor-parallel over 'model'; DP/batch over ('pod','data'); ZeRO-1 for
 # optimizer state adds 'data' on the first free axis (see optimizer_spec).
@@ -132,6 +149,96 @@ def optimizer_spec(param_spec: P, shape, mesh: Mesh) -> P:
             parts[i] = "data"
             return P(*parts)
     return param_spec
+
+
+# ------------------------------------------- sharded residue GEMM resolution
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmShardAxes:
+    """Resolved mesh axes of one sharded emulated GEMM (names or None).
+
+    `residue` carries the N residue planes, `m` the output rows, `n` the
+    output columns.  Hashable (rides inside the jit-static ShardedBackend).
+    """
+
+    residue: str | None = None
+    m: str | None = None
+    n: str | None = None
+
+    def sizes(self, mesh: Mesh) -> tuple[int, int, int]:
+        """(residue_shards, m_shards, n_shards) on `mesh`."""
+        sz = lambda ax: mesh.shape[ax] if ax is not None else 1  # noqa: E731
+        return sz(self.residue), sz(self.m), sz(self.n)
+
+
+def resolve_gemm_axes(
+    mesh: Mesh,
+    m: int | None = None,
+    n: int | None = None,
+    overrides: tuple | None = None,
+) -> GemmShardAxes:
+    """Map the (residue, m, n) logical GEMM axes onto `mesh`.
+
+    residue -> 'residue' when the mesh has one, else 'model'; m -> 'data';
+    n -> 'model' unless the residue fallback already claimed it (one mesh
+    axis is used at most once, same precedence rule as `_resolve`).  With
+    shape hints, an m/n axis whose size does not divide the dimension drops
+    to replicated (shard_map requires exact divisibility; the residue axis
+    never drops — plane chunks zero-pad instead).  `overrides` is the
+    policy's explicit (residue, m, n) name triple, taken verbatim apart
+    from the divisibility check.
+    """
+    names = set(mesh.axis_names)
+    if overrides is not None:
+        residue, m_ax, n_ax = overrides
+        for ax in (residue, m_ax, n_ax):
+            if ax is not None and ax not in names:
+                raise ValueError(
+                    f"shard axis {ax!r} not on mesh axes {tuple(mesh.axis_names)}"
+                )
+        given = [ax for ax in (residue, m_ax, n_ax) if ax is not None]
+        if len(given) != len(set(given)):
+            # one mesh axis per role: e.g. residue and n both on 'model'
+            # would psum partial outputs computed from DIFFERENT column
+            # tiles — silently wrong, so reject it here
+            raise ValueError(
+                f"shard_axes must use each mesh axis at most once; got "
+                f"(residue={residue!r}, m={m_ax!r}, n={n_ax!r})"
+            )
+    else:
+        residue = (
+            RESIDUE_AXIS
+            if RESIDUE_AXIS in names
+            else ("model" if "model" in names else None)
+        )
+        m_ax = "data" if "data" in names else None
+        n_ax = "model" if "model" in names and residue != "model" else None
+    if m_ax is not None and m is not None and m % mesh.shape[m_ax]:
+        m_ax = None
+    if n_ax is not None and n is not None and n % mesh.shape[n_ax]:
+        n_ax = None
+    return GemmShardAxes(residue=residue, m=m_ax, n=n_ax)
+
+
+def residue_plane_specs(axes: GemmShardAxes) -> dict[str, P]:
+    """PartitionSpecs of every array in the sharded residue pipeline.
+
+    The spec table is the distributed design in one place: operands split
+    rows/columns only, residue stacks additionally split the plane
+    dimension, the exact f64 partial-reconstruction planes are the ONLY
+    psum payload, and the reconstructed output is sharded like a normal
+    GEMM result (no int8 array ever appears in a collective).
+    """
+    return {
+        "a": P(axes.m, None),                       # (m, k) operand
+        "b": P(None, axes.n),                       # (k, n) operand
+        "a_residues": P(axes.residue, axes.m, None),  # (N, m, k) int8
+        "b_residues": P(axes.residue, None, axes.n),  # (N, k, n) int8
+        "product_residues": P(axes.residue, axes.m, axes.n),  # (N, m, n)
+        "partial": P(None, axes.m, axes.n),         # (parts, m, n) f64, psum
+        "out": P(axes.m, axes.n),                   # (m, n) reconstructed
+    }
 
 
 def batch_pspec(mesh: Mesh, rules=None) -> P:

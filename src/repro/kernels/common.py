@@ -132,10 +132,20 @@ def pad_dims(x, targets: dict[int, int], value=0):
     return jnp.pad(x, pads, constant_values=value)
 
 
-def block_and_padded(dim: int, block: int) -> tuple[int, int]:
+def block_and_padded(
+    dim: int, block: int, align: int | None = None
+) -> tuple[int, int]:
     """(block', padded_dim) for one axis: shrink the block to the axis when
-    the axis is smaller, otherwise round the axis up to a block multiple."""
-    b = min(block, dim)
+    the axis is smaller, otherwise pick the padding-minimizing aligned block
+    (perfmodel.select_block — the shared, perfmodel-visible rule) and round
+    the axis up to a multiple of it.  With `align=None` (or the
+    `perfmodel.BLOCK_SHRINK` knob off) this is the legacy round-up to the
+    default block: just-over-a-multiple dims like m=257 then pad ~2x, which
+    the aligned shrink avoids (257 @ bm=256/align=128 -> block 128, pad 384).
+    """
+    from ..core.perfmodel import select_block
+
+    b = select_block(dim, block, align)
     return b, round_up(dim, b)
 
 

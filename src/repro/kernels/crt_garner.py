@@ -140,8 +140,8 @@ def crt_garner(
         e_res = e_res[None]
     _, n_mod, m, n = e_res.shape
     assert n_mod == ctx.n
-    bm, mp = block_and_padded(m, bm)
-    bn, np_ = block_and_padded(n, bn)
+    bm, mp = block_and_padded(m, bm, align=8)
+    bn, np_ = block_and_padded(n, bn, align=128)
     e_res = pad_dims(e_res, {2: mp, 3: np_})
     e_mu = pad_dims(e_mu, {0: mp})
     e_nu = pad_dims(e_nu, {0: np_})

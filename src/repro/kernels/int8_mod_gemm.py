@@ -73,13 +73,12 @@ def _kernel(moduli_ref, a_ref, b_ref, *rest, k_steps, has_carry):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("moduli", "bm", "bn", "bk", "interpret")
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
 )
-def _batched_call(a, b, carry, *, moduli, bm, bn, bk, interpret):
+def _batched_call(a, b, carry, mod_arr, *, bm, bn, bk, interpret):
     n_mod, m, k = a.shape
     n = b.shape[-1]
     k_steps = k // bk
-    mod_arr = jnp.asarray(moduli, jnp.int32)
     in_specs = [
         pl.BlockSpec((1, bm, bk), lambda l, i, j, kk, mods: (l, i, kk)),
         pl.BlockSpec((1, bk, bn), lambda l, i, j, kk, mods: (l, kk, j)),
@@ -109,7 +108,7 @@ def int8_mod_gemm_batched(
     a: jnp.ndarray,
     b: jnp.ndarray,
     *,
-    moduli: tuple[int, ...],
+    moduli: tuple[int, ...] | jnp.ndarray,
     carry: jnp.ndarray | None = None,
     bm: int = 256,
     bn: int = 256,
@@ -120,22 +119,30 @@ def int8_mod_gemm_batched(
 
     a: (N, m, k) int8, b: (N, k, n) int8, carry: optional (N, m, n) int8;
     returns (N, m, n) int8 residues.  Any m/n/k is accepted (pad-and-slice).
+
+    `moduli` may be a static tuple or a *traced* (N,) int32 array: the
+    kernel reads the modulus from the scalar-prefetched array either way
+    (`dyn_mod_params`), so the compiled kernel is modulus-agnostic — the
+    sharded execution passes each shard its dynamically-sliced plane chunk.
     """
     if interpret is None:
         interpret = interpret_default()
     n_mod, m, k = a.shape
-    if b.shape[0] != n_mod or b.shape[1] != k or len(moduli) != n_mod:
-        raise ValueError(f"shape mismatch: a {a.shape}, b {b.shape}, N={len(moduli)}")
+    n_given = (
+        moduli.shape[0] if isinstance(moduli, jnp.ndarray) else len(moduli)
+    )
+    if b.shape[0] != n_mod or b.shape[1] != k or n_given != n_mod:
+        raise ValueError(f"shape mismatch: a {a.shape}, b {b.shape}, N={n_given}")
     n = b.shape[-1]
-    bm, mp = block_and_padded(m, bm)
-    bn, np_ = block_and_padded(n, bn)
-    bk, kp = block_and_padded(k, bk)
+    bm, mp = block_and_padded(m, bm, align=128)
+    bn, np_ = block_and_padded(n, bn, align=128)
+    bk, kp = block_and_padded(k, bk, align=32)
     a = pad_dims(a, {1: mp, 2: kp})
     b = pad_dims(b, {1: kp, 2: np_})
     if carry is not None:
         carry = pad_dims(carry, {1: mp, 2: np_})
     out = _batched_call(
-        a, b, carry, moduli=tuple(moduli), bm=bm, bn=bn, bk=bk,
+        a, b, carry, jnp.asarray(moduli, jnp.int32), bm=bm, bn=bn, bk=bk,
         interpret=bool(interpret),
     )
     return out[:, :m, :n]

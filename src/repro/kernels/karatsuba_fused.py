@@ -94,13 +94,12 @@ def _kernel(moduli_ref, ar_ref, ai_ref, br_ref, bi_ref, *rest,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("moduli", "bm", "bn", "bk", "interpret")
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
 )
-def _batched_call(ar, ai, br, bi, carry, *, moduli, bm, bn, bk, interpret):
+def _batched_call(ar, ai, br, bi, carry, mod_arr, *, bm, bn, bk, interpret):
     n_mod, m, k = ar.shape
     n = br.shape[-1]
     k_steps = k // bk
-    mod_arr = jnp.asarray(moduli, jnp.int32)
     a_spec = pl.BlockSpec((1, bm, bk), lambda l, i, j, kk, mods: (l, i, kk))
     b_spec = pl.BlockSpec((1, bk, bn), lambda l, i, j, kk, mods: (l, kk, j))
     o_spec = pl.BlockSpec((1, bm, bn), lambda l, i, j, kk, mods: (l, i, j))
@@ -137,7 +136,7 @@ def karatsuba_mod_gemm_batched(
     br: jnp.ndarray,
     bi: jnp.ndarray,
     *,
-    moduli: tuple[int, ...],
+    moduli: tuple[int, ...] | jnp.ndarray,
     carry: tuple[jnp.ndarray, jnp.ndarray] | None = None,
     bm: int = 256,
     bn: int = 256,
@@ -147,24 +146,29 @@ def karatsuba_mod_gemm_batched(
     """Residues of (CR', CI') = (AR'+iAI')(BR'+iBI') mod p_l, all planes in
     ONE launch.  Inputs (N, m, k) / (N, k, n) int8 stacks; `carry` is an
     optional (CR, CI) pair of (N, m, n) int8 residues folded into the
-    epilogue (K-chunk combine).  Any m/n/k is accepted (pad-and-slice)."""
+    epilogue (K-chunk combine).  Any m/n/k is accepted (pad-and-slice).
+    `moduli` may be a static tuple or a traced (N,) int32 array (the sharded
+    execution's per-shard plane chunk) — the kernel is modulus-agnostic."""
     if interpret is None:
         interpret = interpret_default()
     n_mod, m, k = ar.shape
+    n_given = (
+        moduli.shape[0] if isinstance(moduli, jnp.ndarray) else len(moduli)
+    )
     if (
         ai.shape != ar.shape
         or br.shape != bi.shape
         or br.shape[:2] != (n_mod, k)
-        or len(moduli) != n_mod
+        or n_given != n_mod
     ):
         raise ValueError(
             f"shape mismatch: ar {ar.shape}, ai {ai.shape}, br {br.shape}, "
-            f"bi {bi.shape}, N={len(moduli)}"
+            f"bi {bi.shape}, N={n_given}"
         )
     n = br.shape[-1]
-    bm, mp = block_and_padded(m, bm)
-    bn, np_ = block_and_padded(n, bn)
-    bk, kp = block_and_padded(k, bk)
+    bm, mp = block_and_padded(m, bm, align=128)
+    bn, np_ = block_and_padded(n, bn, align=128)
+    bk, kp = block_and_padded(k, bk, align=32)
     ar = pad_dims(ar, {1: mp, 2: kp})
     ai = pad_dims(ai, {1: mp, 2: kp})
     br = pad_dims(br, {1: kp, 2: np_})
@@ -172,8 +176,8 @@ def karatsuba_mod_gemm_batched(
     if carry is not None:
         carry = tuple(pad_dims(c, {1: mp, 2: np_}) for c in carry)
     cr, ci = _batched_call(
-        ar, ai, br, bi, carry, moduli=tuple(moduli), bm=bm, bn=bn, bk=bk,
-        interpret=bool(interpret),
+        ar, ai, br, bi, carry, jnp.asarray(moduli, jnp.int32),
+        bm=bm, bn=bn, bk=bk, interpret=bool(interpret),
     )
     return cr[:, :m, :n], ci[:, :m, :n]
 

@@ -115,8 +115,8 @@ def residue_cast(
     if not stacked:
         a = a[None]
     _, m, k = a.shape
-    bm, mp = block_and_padded(m, bm)
-    bk, kp = block_and_padded(k, bk)
+    bm, mp = block_and_padded(m, bm, align=8)
+    bk, kp = block_and_padded(k, bk, align=128)
     a = pad_dims(a, {1: mp, 2: kp})
     spad = mp if scale_axis == 0 else kp
     scale1 = pad_dims(scale1, {0: spad}, value=1.0)

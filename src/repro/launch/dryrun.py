@@ -240,12 +240,15 @@ def run_cell(
     formulation: str = "karatsuba",
     n_block=None,
     execution: str = "reference",
+    residue: int = 1,
     out_dir: str | None = None,
     verbose: bool = True,
 ):
     cfg = get_config(arch)
     ok, why = applicable(cfg, shape_name)
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if residue > 1:
+        mesh_name += f"r{residue}"
     cell_id = f"{arch}__{shape_name}__{mesh_name}"
     if backend != "native":
         cell_id += f"__{backend}"
@@ -276,6 +279,7 @@ def run_cell(
         _emit(rec, out_dir, verbose)
         return rec
 
+    mesh = make_production_mesh(multi_pod=multi_pod, residue=residue)
     overrides = {}
     batch_axes = ("pod", "data") if multi_pod else ("data",)
     if backend != "native":
@@ -285,6 +289,9 @@ def run_cell(
             formulation=formulation,
             n_block=n_block,
             execution=execution,
+            # the sharded execution shard_maps over the same mesh the cell
+            # is partitioned on (pinned: the policy is a jit static)
+            mesh=mesh if execution == "sharded" else None,
         )
         overrides["embed_pspec"] = (batch_axes, None, None)
     if seq_shard:
@@ -308,7 +315,6 @@ def run_cell(
         # weight additionally shards over 'data'; XLA gathers layer weights
         # on the fly inside the scan (SPerf hillclimb 1, iteration 4).
         rules["embed"] = "data"
-    mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     with mesh:
         fn, args = build_cell(cfg, shape_name, mesh, grad_accum, rules=rules)
@@ -403,8 +409,12 @@ def main():
                     choices=["native", "ozaki2_f32", "ozaki2_f64",
                              "ozaki2_c64", "ozaki2_c128"])
     ap.add_argument("--execution", default="reference",
-                    choices=["reference", "kernel", "per_modulus_kernel"],
+                    choices=["reference", "kernel", "per_modulus_kernel",
+                             "sharded"],
                     help="residue backend running the emulation plan")
+    ap.add_argument("--residue", type=int, default=1,
+                    help="residue mesh-axis size (sharded execution): "
+                         "carved out of the 16-way model axis")
     ap.add_argument("--mode", default="fast", choices=["fast", "accu"])
     ap.add_argument("--formulation", default="karatsuba",
                     choices=["karatsuba", "block_a", "block_b", "auto"])
@@ -448,6 +458,7 @@ def main():
             formulation=args.formulation,
             n_block=args.n_block,
             execution=args.execution,
+            residue=args.residue,
             out_dir=args.out,
         )
 

@@ -48,14 +48,26 @@ def main():
                     choices=["native", "ozaki2_f32", "ozaki2_f64",
                              "ozaki2_c64", "ozaki2_c128"])
     ap.add_argument("--execution", default="reference",
-                    choices=["reference", "kernel", "per_modulus_kernel"],
+                    choices=["reference", "kernel", "per_modulus_kernel",
+                             "sharded"],
                     help="residue backend running the emulation plan")
+    ap.add_argument("--residue", type=int, default=1,
+                    help="residue mesh-axis size (sharded execution)")
     args = ap.parse_args()
 
     scope = contextlib.nullcontext()
     if args.backend != "native":
+        mesh = None
+        if args.execution == "sharded":
+            from repro.launch.mesh import make_host_mesh
+
+            mesh = make_host_mesh(
+                1, 1,
+                residue=args.residue if args.residue > 1 else len(jax.devices()),
+            )
         scope = repro.use_policy(
-            GemmPolicy(backend=args.backend, execution=args.execution)
+            GemmPolicy(backend=args.backend, execution=args.execution,
+                       mesh=mesh)
         )
     with scope:
         cfg = get_reduced(args.arch, **(

@@ -53,8 +53,12 @@ def main():
                     choices=["native", "ozaki2_f32", "ozaki2_f64",
                              "ozaki2_c64", "ozaki2_c128"])
     ap.add_argument("--execution", default="reference",
-                    choices=["reference", "kernel", "per_modulus_kernel"],
+                    choices=["reference", "kernel", "per_modulus_kernel",
+                             "sharded"],
                     help="residue backend running the emulation plan")
+    ap.add_argument("--residue", type=int, default=1,
+                    help="residue mesh-axis size (sharded execution); "
+                         "appended to the --mesh layout")
     ap.add_argument("--mode", default="fast", choices=["fast", "accu"],
                     help="paper scaling mode (accuracy band)")
     ap.add_argument("--formulation", default="karatsuba",
@@ -66,6 +70,25 @@ def main():
     ap.add_argument("--vocab-chunk", type=int, default=None)
     args = ap.parse_args()
 
+    mesh = None
+    if args.mesh:
+        d, m = map(int, args.mesh.split("x"))
+        if args.residue > 1:
+            mesh = jax.make_mesh(
+                (d, m, args.residue), ("data", "model", "residue")
+            )
+        else:
+            mesh = jax.make_mesh((d, m), ("data", "model"))
+    elif args.execution == "sharded":
+        # sharded execution needs a mesh even on a single host: default to
+        # every local device on the residue axis
+        from .mesh import make_host_mesh
+
+        mesh = make_host_mesh(
+            1, 1,
+            residue=args.residue if args.residue > 1 else len(jax.devices()),
+        )
+
     cfg = (get_reduced if args.reduced else get_config)(args.arch)
     over = {}
     if args.backend != "native":
@@ -75,6 +98,7 @@ def main():
             formulation=args.formulation,
             n_block=args.n_block,
             execution=args.execution,
+            mesh=mesh if args.execution == "sharded" else None,
         )
         over["dtype"] = "float32"
     if args.seq_shard:
@@ -83,11 +107,6 @@ def main():
         over["loss_vocab_chunk"] = args.vocab_chunk
     if over:
         cfg = dataclasses.replace(cfg, **over)
-
-    mesh = None
-    if args.mesh:
-        d, m = map(int, args.mesh.split("x"))
-        mesh = jax.make_mesh((d, m), ("data", "model"))
 
     model = Model(cfg)
     data = DataConfig(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch)

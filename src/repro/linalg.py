@@ -52,21 +52,25 @@ from .core.policy import (
     BACKEND_FOR_DTYPE,
     GemmPolicy,
     NATIVE,
+    current_mesh,
     emulated_matmul,
     policy_matmul,
     prepare_weights,
+    use_mesh,
 )
 
 __all__ = [
     "GemmPolicy",
     "PreparedOperand",
     "cgemm",
+    "current_mesh",
     "current_policy",
     "dgemm",
     "matmul",
     "matmul_jit",
     "prepare_weights",
     "sgemm",
+    "use_mesh",
     "use_policy",
     "zgemm",
 ]
@@ -81,13 +85,16 @@ def current_policy() -> GemmPolicy:
 
 
 @contextlib.contextmanager
-def use_policy(policy: GemmPolicy):
+def use_policy(policy: GemmPolicy, *, mesh=None):
     """Scope every `linalg.matmul` (and model/serve/train matmul resolved at
     config construction) in this thread to `policy`.
 
     Accepts a backend name as shorthand: ``use_policy("ozaki2_c64")``.
     Nestable; the innermost scope wins.  The policy must be hashable (it is
-    captured as a jit static).
+    captured as a jit static).  `mesh` additionally scopes the thread-local
+    default mesh (`use_mesh`) a ``GemmPolicy(execution="sharded",
+    mesh=None)`` resolves at trace time — one context manager distributes
+    every matmul in a model over the mesh.
     """
     if isinstance(policy, str):
         policy = GemmPolicy(backend=policy)
@@ -102,7 +109,11 @@ def use_policy(policy: GemmPolicy):
         stack = _STATE.stack = []
     stack.append(policy)
     try:
-        yield policy
+        if mesh is not None:
+            with use_mesh(mesh):
+                yield policy
+        else:
+            yield policy
     finally:
         stack.pop()
 
@@ -158,10 +169,16 @@ def _matmul_jit(x, w, *, policy):
 def matmul_jit(x, w, *, policy: GemmPolicy | None = None):
     """`matmul` behind a (shapes, policy)-cached `jax.jit` for eager callers.
 
-    The ambient policy is resolved *before* jit so the context scope can
-    never leak stale into the compilation cache.
+    The ambient policy — and, for a mesh-less sharded policy, the ambient
+    `use_mesh` mesh — is resolved *before* jit so the context scopes can
+    never leak stale into the compilation cache (a policy that resolved
+    mesh A at first trace must not silently serve mesh B's scope from the
+    cache).
     """
-    return _matmul_jit(x, w, policy=current_policy() if policy is None else policy)
+    policy = current_policy() if policy is None else policy
+    if policy.execution == "sharded" and policy.mesh is None:
+        policy = dataclasses.replace(policy, mesh=current_mesh())
+    return _matmul_jit(x, w, policy=policy)
 
 
 def _blas(routine: str, dtype, x, w, policy: GemmPolicy | None):

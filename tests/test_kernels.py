@@ -378,3 +378,44 @@ def test_batched_kernels_direct_parity(rng):
         )
         np.testing.assert_array_equal(np.asarray(crb)[l], np.asarray(er))
         np.testing.assert_array_equal(np.asarray(cib)[l], np.asarray(ei))
+
+
+# ---------------------------------------------- block shrink (pad economics)
+
+
+@pytest.mark.parametrize("m", [129, 257])
+def test_block_shrink_just_over_multiple(rng, m):
+    """ROADMAP follow-up from PR 2: a dim just above a block multiple picks
+    the next-smaller legal block instead of padding ~2x, behind the
+    perfmodel-visible BLOCK_SHRINK knob — and the padded pipeline stays
+    bitwise identical (zero padding is residue-exact either way)."""
+    from repro.kernels.common import block_and_padded
+
+    # m=129 < 256 shrinks the block to the dim (no padding at all);
+    # m=257 > 256 picks the aligned 128 block and pads to 384, not 512
+    expect = {129: (129, 129), 257: (128, 384)}[m]
+    assert block_and_padded(m, 256, align=128) == expect
+    assert perfmodel.select_block(m, 256, 128) == expect[0]
+    assert perfmodel.padded_dim(m, 256, 128) == expect[1]
+    assert perfmodel.padded_dim(m, 256, 128) < 2 * m  # never ~2x anymore
+
+    # the knob restores the legacy round-up (the economics are visible)
+    perfmodel.BLOCK_SHRINK = False
+    try:
+        legacy = block_and_padded(m, 256, align=128)
+        assert legacy == ((129, 129) if m == 129 else (256, 512))
+    finally:
+        perfmodel.BLOCK_SHRINK = True
+
+    # numerics: shrunken blocks are still the same bits as the reference
+    k, n = 40, 33
+    a = (rng.random((m, k)) - 0.5).astype(np.float32)
+    b = (rng.random((k, n)) - 0.5).astype(np.float32)
+    plan = _garner_plan(np.float32, n_moduli=6)
+    got = np.asarray(execute_plan(plan, jnp.asarray(a), jnp.asarray(b), BATCHED))
+    want = np.asarray(
+        execute_plan(plan, jnp.asarray(a), jnp.asarray(b), PER_MODULUS)
+    )
+    np.testing.assert_array_equal(got, want)
+    expect_f64 = a.astype(np.float64) @ b.astype(np.float64)
+    assert np.max(np.abs(got - expect_f64)) / np.max(np.abs(expect_f64)) < 1e-5

@@ -98,6 +98,36 @@ def test_policy_prepared_parity(rng, dtype, execution):
     np.testing.assert_array_equal(direct, prepped)
 
 
+@pytest.mark.parametrize("execution", ["reference", "kernel"])
+@pytest.mark.parametrize("dtype", [np.float32, np.complex64])
+def test_policy_prepared_accu_parity(rng, dtype, execution):
+    """ROADMAP follow-up from PR 3: accu-mode preparation stores the
+    per-column 7-bit bound alongside the residue planes (and the raw
+    operand — the coupled exponents force a per-call cast) and stays
+    bitwise identical to the unprepared accu run on both backends."""
+    x, w = _operands(rng, dtype)
+    pol = _policy(dtype, execution, mode="accu", n_moduli=6)
+    direct = np.asarray(policy_matmul(x, w, pol))
+    tree = prepare_weights({"w": w}, pol)
+    prep = tree["w"]
+    assert isinstance(prep, PreparedOperand)
+    assert prep.raw is not None and prep.bound[0].dtype == jnp.int8
+    prepped = np.asarray(policy_matmul(x, prep, pol))
+    np.testing.assert_array_equal(direct, prepped)
+
+
+def test_policy_prepared_accu_requires_raw(rng):
+    """A fast-prepared operand (no raw retained) used under an accu policy
+    fails loudly with re-preparation guidance, never silently degrades."""
+    x, w = _operands(rng, np.float32)
+    fast_pol = _policy(np.float32, "kernel", n_moduli=6)
+    prep = prepare_weights({"w": w}, fast_pol)["w"]
+    assert prep.raw is None  # fast preparation keeps the memory win
+    accu_pol = _policy(np.float32, "kernel", mode="accu", n_moduli=6)
+    with pytest.raises(ValueError, match="raw operand"):
+        policy_matmul(x, prep, accu_pol)
+
+
 def test_policy_prepared_auto_formulation_parity(rng):
     """Regression: gemm_prepared must charge the perfmodel the executing
     backend's real launch capabilities, or formulation='auto' can pick a
