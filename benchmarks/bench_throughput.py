@@ -15,15 +15,17 @@ Key reproduced claims (checked in the derived column):
 CLI (the tracked-throughput harness; `benchmarks.run` still calls `run()`):
 
     PYTHONPATH=src python -m benchmarks.bench_throughput \
-        [--smoke] [--execution reference|kernel|sharded] [--residue R] \
+        [--smoke] [--execution reference|kernel|sharded|fp8] [--residue R] \
         [--mesh DxM] [--json BENCH_throughput.json]
 
 `--execution` picks the residue backend the measured section times
 (`sharded` builds a host mesh — run under
-XLA_FLAGS=--xla_force_host_platform_device_count=N to span N devices) and
-every measured record reports BOTH aggregate and per-device GEMM
-throughput, written to the `--json` file so BENCH_throughput.json tracks
-the sharded path alongside the single-device ones.
+XLA_FLAGS=--xla_force_host_platform_device_count=N to span N devices;
+`fp8` runs the e4m3 digit-GEMM engine) and every measured record reports
+BOTH aggregate and per-device GEMM throughput, written to the `--json`
+file keyed by execution — re-running one execution replaces only its own
+records, so BENCH_throughput.json accumulates the int8-vs-fp8 (and
+sharded) trajectories side by side.
 """
 from __future__ import annotations
 
@@ -42,8 +44,10 @@ from repro.core.perfmodel import (
     HARDWARE,
     TPU_V5E,
     complex_tflops,
+    engine_time_s,
     ozaki1_complex_time_s,
     complex_time_s,
+    select_engine,
 )
 
 from .common import emit, phi_matrix, time_fn
@@ -63,6 +67,20 @@ def model_tables():
                     "tflops=" + "/".join(f"{t:.0f}" for t in tf)
                     + f";speedup_vs_native@16k={speed:.2f}",
                 )
+    # int8-vs-fp8 engine projections (arXiv:2603.10634 comparison): the fp8
+    # engine runs 4 digit-GEMM volumes at the e4m3 rate, so it wins only
+    # where the rate advantage or memory-boundedness beats the 4x volume
+    for hw in (TPU_V5E, B200, GH200):
+        for s in (2048, 16384):
+            t_i8 = engine_time_s("int8", s, s, s, 14, hw, "fast", "z")
+            t_f8 = engine_time_s("fp8", s, s, s, 14, hw, "fast", "z")
+            emit(
+                f"engine/model/{hw.name}/zgemm/fast-14/{s}",
+                0.0,
+                f"int8_s={t_i8:.2e};fp8_s={t_f8:.2e};"
+                f"fp8_over_int8={t_f8 / t_i8:.2f}x;"
+                f"selected={select_engine(s, s, s, 14, hw, 'fast', 'z')}",
+            )
     # Ozaki-I comparison (GH200, z, 16384): paper SIV-B
     for s in (7, 8, 9):
         t1 = ozaki1_complex_time_s(16384, 16384, 16384, s, GH200)
@@ -203,8 +221,9 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes (CI: proves the path end-to-end)")
     ap.add_argument("--execution", default="reference",
-                    choices=["reference", "kernel", "sharded"],
-                    help="residue backend the measured section times")
+                    choices=["reference", "kernel", "sharded", "fp8"],
+                    help="residue backend the measured section times "
+                         "(fp8: the e4m3 digit-GEMM engine)")
     ap.add_argument("--residue", type=int, default=1,
                     help="residue mesh-axis size (sharded execution)")
     ap.add_argument("--mesh", default=None,
@@ -221,8 +240,21 @@ def main():
         sizes, args.execution, args.residue, args.mesh, records
     )
     if args.json:
+        # Accumulate keyed by execution: a kernel run must not clobber the
+        # fp8 run's records (or vice versa) — BENCH_throughput.json tracks
+        # the int8-vs-fp8 (and sharded) trajectories side by side.  Only the
+        # re-measured execution's records are replaced.
+        kept: list = []
+        try:
+            with open(args.json) as f:
+                kept = [
+                    r for r in json.load(f).get("records", [])
+                    if r.get("execution") != args.execution
+                ]
+        except (OSError, ValueError):
+            pass
         with open(args.json, "w") as f:
-            json.dump({"records": records}, f, indent=1)
+            json.dump({"records": kept + records}, f, indent=1)
     # CI contract: the run must produce finite nonzero throughput records
     # (an explicit raise, not an assert — CI must fail under python -O too)
     bad = [

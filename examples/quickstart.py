@@ -52,6 +52,17 @@ def main():
     )
     print("kernel path bitwise == reference (f32):", bool((ck == cr).all()))
 
+    # ---- same policy, FP8 (e4m3) engine -----------------------------------
+    # execution="fp8" runs the residue products on the fp8 engine
+    # (arXiv:2603.10634 variant): residues split into balanced base-16
+    # digits — exact in e4m3 — so the pipeline stays bitwise identical to
+    # the int8 kernels; what changes is the engine the MACs run on (and the
+    # perfmodel pricing: 4 digit-GEMM volumes at the hardware's e4m3 rate).
+    fpol = GemmPolicy(backend="ozaki2_f32", execution="fp8")
+    with repro.use_policy(fpol):
+        cf = np.asarray(repro.linalg.matmul(a32, b32))
+    print("fp8 engine bitwise == int8 kernels:", bool((cf == ck).all()))
+
     # fewer moduli = faster & less accurate; more = beyond-native accuracy
     for nm in (10, 13, 16):
         with repro.use_policy(GemmPolicy(backend="ozaki2_c128", n_moduli=nm)):

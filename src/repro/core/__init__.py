@@ -4,13 +4,14 @@ The numeric pipeline lives once in `plan.py` (static decisions) +
 `executor.py` (data path, pluggable residue backends).  `GemmPolicy`
 (`policy.py`) is the one public knob object — backend (compute dtype
 class), mode, formulation, blocking, and the *execution* axis selecting the
-residue backend ("reference" | "kernel" | "per_modulus_kernel"; future:
-"sharded"/"fp8").  The user-facing entry point is `repro.linalg.matmul`
+residue backend ("reference" | "kernel" | "per_modulus_kernel" | "sharded"
+| "fp8").  The user-facing entry point is `repro.linalg.matmul`
 scoped by `repro.use_policy(policy)`; the `ozaki2_gemm` / `ozaki2_cgemm`
 wrappers retained here are deprecation shims over that route.
 """
 from .cgemm import ozaki2_cgemm
 from .executor import (
+    Fp8Backend,
     PreparedOperand,
     REFERENCE,
     ReferenceBackend,
@@ -34,6 +35,7 @@ __all__ = [
     "DEFAULT_MODULI",
     "DEFAULT_N_BLOCK",
     "EmulationPlan",
+    "Fp8Backend",
     "GemmPolicy",
     "NATIVE",
     "PreparedOperand",

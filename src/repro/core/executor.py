@@ -49,11 +49,16 @@ def _sym_mod_stack(d: jnp.ndarray, ctx: CRTContext) -> jnp.ndarray:
 
 
 def chunked_residue_matmul(
-    mod_gemm_stack, ares, bres, ctx: CRTContext, carry_epilogue: bool = False
+    mod_gemm_stack, ares, bres, ctx: CRTContext, carry_epilogue: bool = False,
+    chunk_limit: int | None = None,
 ):
-    """K-chunk an (N,m,k)x(N,k,n) residue product so every int8 GEMM
-    accumulates exactly in int32 (k <= K_CHUNK_LIMIT per call), reducing
-    mod p between chunks (residue arithmetic is closed).
+    """K-chunk an (N,m,k)x(N,k,n) residue product so every engine GEMM
+    accumulates exactly (k <= `chunk_limit` per call), reducing mod p
+    between chunks (residue arithmetic is closed).  `chunk_limit` defaults
+    to the int8 engine's int32 bound (`K_CHUNK_LIMIT`, 2^17 — resolved at
+    call time, so tests can patch the module constant); the fp8 engine
+    passes its tighter f32 digit-accumulator bound (`FP8_K_CHUNK_LIMIT`,
+    2^16).
 
     Two chunk-combine strategies share this single implementation of the
     chunking invariant:
@@ -74,11 +79,13 @@ def chunked_residue_matmul(
     product, hence bitwise-identical outputs; the stacked planes pass
     through unchanged either way.
     """
+    if chunk_limit is None:
+        chunk_limit = K_CHUNK_LIMIT
     if carry_epilogue:
         k = jax.tree.leaves(ares)[0].shape[-1]
         carry = None
-        for k0 in range(0, k, K_CHUNK_LIMIT):
-            sl = slice(k0, k0 + K_CHUNK_LIMIT)
+        for k0 in range(0, k, chunk_limit):
+            sl = slice(k0, k0 + chunk_limit)
             carry = mod_gemm_stack(
                 jax.tree.map(lambda x: x[..., sl], ares),
                 jax.tree.map(lambda x: x[:, sl, :], bres),
@@ -86,13 +93,13 @@ def chunked_residue_matmul(
             )
         return carry
     k = ares.shape[-1]
-    if k <= K_CHUNK_LIMIT:
+    if k <= chunk_limit:
         return mod_gemm_stack(ares, bres)
     acc = None
-    for k0 in range(0, k, K_CHUNK_LIMIT):
+    for k0 in range(0, k, chunk_limit):
         e = mod_gemm_stack(
-            ares[..., k0 : k0 + K_CHUNK_LIMIT],
-            bres[:, k0 : k0 + K_CHUNK_LIMIT, :],
+            ares[..., k0 : k0 + chunk_limit],
+            bres[:, k0 : k0 + chunk_limit, :],
         ).astype(jnp.int32)
         acc = e if acc is None else acc + e
     # |acc| <= n_chunks*127 << 2^31
@@ -132,6 +139,26 @@ def _reconstruct_pair(backend, er, ei, e_mu, e_nu, ctx, method, out_dtype):
 # ================================================================ backends
 
 
+def _composed_karatsuba(backend, arr, ari, brr, bri, ctx):
+    """Residues of (CR', CI') via 3 residue products (paper eq. 10), composed
+    from `backend.residue_matmul` — used by backends without a fused
+    Karatsuba kernel (the jnp reference and the fp8 engine).  Every product
+    returns canonical symmetric residues (|r| <= 127), so the host-side
+    int32 combines stay exact."""
+    asum = _sym_mod_stack(
+        arr.astype(jnp.int32) + ari.astype(jnp.int32), ctx
+    ).astype(jnp.int8)
+    bsum = _sym_mod_stack(
+        brr.astype(jnp.int32) + bri.astype(jnp.int32), ctx
+    ).astype(jnp.int8)
+    d = backend.residue_matmul(arr, brr, ctx).astype(jnp.int32)  # already mod p
+    e = backend.residue_matmul(ari, bri, ctx).astype(jnp.int32)
+    f = backend.residue_matmul(asum, bsum, ctx).astype(jnp.int32)
+    er = _sym_mod_stack(d - e, ctx).astype(jnp.int8)
+    ei = _sym_mod_stack(f - d - e, ctx).astype(jnp.int8)
+    return er, ei
+
+
 @dataclasses.dataclass(frozen=True)
 class ReferenceBackend:
     """jnp reference data path (exact f64 host arithmetic; core/intmul.py)."""
@@ -159,18 +186,7 @@ class ReferenceBackend:
 
     def karatsuba(self, arr, ari, brr, bri, ctx):
         """Residues of (CR', CI') via 3 int8 GEMMs per modulus (paper eq. 10)."""
-        asum = _sym_mod_stack(
-            arr.astype(jnp.int32) + ari.astype(jnp.int32), ctx
-        ).astype(jnp.int8)
-        bsum = _sym_mod_stack(
-            brr.astype(jnp.int32) + bri.astype(jnp.int32), ctx
-        ).astype(jnp.int8)
-        d = self.residue_matmul(arr, brr, ctx).astype(jnp.int32)  # already mod p
-        e = self.residue_matmul(ari, bri, ctx).astype(jnp.int32)
-        f = self.residue_matmul(asum, bsum, ctx).astype(jnp.int32)
-        er = _sym_mod_stack(d - e, ctx).astype(jnp.int8)
-        ei = _sym_mod_stack(f - d - e, ctx).astype(jnp.int8)
-        return er, ei
+        return _composed_karatsuba(self, arr, ari, brr, bri, ctx)
 
     def reconstruct(self, e_res, e_mu, e_nu, ctx, method, out_dtype):
         """CRT reconstruction (steps V-v/vi) + exact inverse scaling."""
@@ -179,6 +195,80 @@ class ReferenceBackend:
 
 
 REFERENCE = ReferenceBackend()
+
+
+@dataclasses.dataclass(frozen=True)
+class Fp8Backend:
+    """Residue backend running the modular products on the **FP8 (e4m3)
+    engine** (`kernels/fp8_mod_gemm.py`, the arXiv:2603.10634 variant):
+    residues split into balanced base-16 digits — exact in e4m3 — and each
+    plane's product runs as three fp8 GEMMs accumulated in f32, rescaled
+    into the residue ring per plane in the kernel epilogue.
+
+    The first non-int8 engine through the residue-backend protocol: casts
+    and Garner reconstruction are shared with the batched int8 kernel path
+    (delegated to `KernelBackend`, so the plane layout and f32 quantization
+    grade are identical), only `residue_matmul` runs on the fp8 engine and
+    `karatsuba` is composed from it (3 fp8 products — no fused variant yet,
+    declared via ``fused_karatsuba = False`` so the perfmodel-driven 'auto'
+    selections charge the right launch count).  The digit split is exact,
+    hence the whole pipeline is **bitwise identical** to
+    ``execution="kernel"`` — what changes is the engine the MACs run on and
+    therefore the `perfmodel` pricing (``engine = "fp8"``: 4 digit-MAC
+    volumes at the e4m3 rate).
+
+    Select via ``GemmPolicy(execution="fp8")``.  Off-TPU the kernels run in
+    interpreted Pallas (bit-identical: the digits are exactly
+    representable), so hosts without native fp8 matmul support fall back
+    transparently.
+    """
+
+    interpret: bool | None = None
+
+    # capability flags consulted by the perfmodel-driven 'auto' selections
+    fused_karatsuba = False
+    modulus_batched = True
+    engine = "fp8"
+
+    def _shared(self):
+        # lazy import: core stays importable without the Pallas stack
+        from ..kernels.ops import KernelBackend
+
+        return KernelBackend(self.interpret)
+
+    def cast(self, x, e, axis, ctx, n_limbs):
+        return self._shared().cast(x, e, axis, ctx, n_limbs)
+
+    def cast_stack(self, xs, e, axis, ctx, n_limbs):
+        return self._shared().cast_stack(xs, e, axis, ctx, n_limbs)
+
+    def reconstruct(self, e_res, e_mu, e_nu, ctx, method, out_dtype):
+        return self._shared().reconstruct(e_res, e_mu, e_nu, ctx, method, out_dtype)
+
+    def reconstruct_stack(self, e_res, e_mu, e_nu, ctx, method, out_dtype):
+        return self._shared().reconstruct_stack(
+            e_res, e_mu, e_nu, ctx, method, out_dtype
+        )
+
+    def residue_matmul(self, ares, bres, ctx):
+        """One batched fp8 launch per K-chunk (chunked at the f32 digit
+        accumulator's exactness bound, not the int8 engine's int32 bound)."""
+        from ..kernels.fp8_mod_gemm import FP8_K_CHUNK_LIMIT, fp8_mod_gemm_batched
+
+        return chunked_residue_matmul(
+            lambda a, b, carry: fp8_mod_gemm_batched(
+                a, b, moduli=ctx.moduli, carry=carry, interpret=self.interpret
+            ),
+            ares,
+            bres,
+            ctx,
+            carry_epilogue=True,
+            chunk_limit=FP8_K_CHUNK_LIMIT,
+        )
+
+    def karatsuba(self, arr, ari, brr, bri, ctx):
+        """Composed Karatsuba (3 fp8 residue products, paper eq. 10)."""
+        return _composed_karatsuba(self, arr, ari, brr, bri, ctx)
 
 
 # ------------------------------------------------- composed complex embeds
@@ -368,6 +458,19 @@ class PreparedOperand:
     backend — e.g. the Pallas kernel cast quantizes through f32, so a
     kernel-path server must prepare with the kernel backend (the policy
     layer's `prepare_weights` does this automatically).
+
+    Example — prepare a weight once, multiply many times::
+
+        >>> import jax.numpy as jnp
+        >>> from repro.core import PreparedOperand, gemm_prepared
+        >>> w = jnp.asarray([[1.0, 2.0], [4.0, 0.5], [8.0, 1.0]])  # (k, n)
+        >>> prep = PreparedOperand(w, n_moduli=6, side="right")
+        >>> prep.res.shape                    # N int8 residue planes of w
+        (6, 3, 2)
+        >>> x = jnp.eye(3, dtype=jnp.float64) * 2.0
+        >>> y = gemm_prepared(prep, x)        # C ~= x @ w, w-side amortized
+        >>> bool(jnp.all(y == 2.0 * w))       # exact: power-of-two operands
+        True
     """
 
     def __init__(
@@ -654,11 +757,12 @@ def gemm_prepared(
         out_dtype=out_dtype,
         n_block=n_block,
         shape=(m, k, n),
-        # the 'auto' selections must charge launches exactly as the
-        # executing backend issues them, or a prepared run could pick a
-        # different formulation than the unprepared run it must bit-match
+        # the 'auto' selections must charge launches and engine ops exactly
+        # as the executing backend issues them, or a prepared run could pick
+        # a different formulation than the unprepared run it must bit-match
         fused_karatsuba=getattr(backend, "fused_karatsuba", False),
         modulus_batched=getattr(backend, "modulus_batched", False),
+        engine=getattr(backend, "engine", "int8"),
     )
     nl = prep.n_limbs
     other_side = "left" if prep.side == "right" else "right"

@@ -8,8 +8,15 @@ with b = sustained memory bandwidth (B/s) and p = int8 engine throughput
 Hardware presets include the paper's GPUs and our TPU v5e target
 (819 GB/s HBM, 394 TOPS int8 = 2x the 197 TFLOP/s bf16 MXU rate).
 
-Two beyond-paper terms live here too, because the 'auto' plan selections
+Beyond-paper terms live here too, because the 'auto' plan selections
 (`formulation="auto"` / `n_block="auto"` in `core/plan.py`) must price them:
+
+* an *engine axis* for the residue products: the int8 MXU path is the
+  paper's model verbatim; the FP8 (e4m3) engine of `execution="fp8"`
+  (arXiv:2603.10634) charges `ENGINE_OP_FACTOR["fp8"]` = 4 digit-GEMM
+  volumes at the hardware's e4m3 rate (`HW.fp8_ops`, `engine_rate`), with
+  unchanged memory terms (both engines move the same int8 residue planes).
+  `select_engine` compares the two per shape;
 
 * a *communication term* for `GemmPolicy(execution="sharded")` — the exact
   partial-reconstruction combine psums `crt_partial_parts(N)` f64 planes of
@@ -38,15 +45,47 @@ class HW:
     # denominator of the sharded-execution psum term.  Order-of-magnitude
     # presets (v5e: 4x ICI links); refine with the calibration microbench.
     ici_bw: float = 9e10
+    # e4m3 MAC throughput (OPS) of the fp8 engine (`execution="fp8"`); 0.0
+    # means "no native fp8 matmul" — the engine then runs at the upconvert
+    # (bf16-grade) rate, approximated as int8_ops / 2.  NVIDIA/AMD parts
+    # run e4m3 at the int8 rate; B200's fp8 tensor cores match its int8
+    # dense rate; v5e has no fp8 MXU (v5p/v6 do).
+    fp8_ops: float = 0.0
 
 
 TPU_V5E = HW("tpu-v5e", 819e9, 394e12, 197e12, 0.0)  # no native f64 at all
-GH200 = HW("gh200", 4000e9, 1979e12, 67e12, 34e12, ici_bw=45e10)
-B200 = HW("b200", 8000e9, 4500e12, 75e12, 37e12, ici_bw=90e10)
-RTX5080 = HW("rtx5080", 960e9, 450e12, 56e12, 0.88e12, ici_bw=3e10)
-MI300X = HW("mi300x", 5300e9, 2615e12, 163e12, 163e12, ici_bw=45e10)
+GH200 = HW("gh200", 4000e9, 1979e12, 67e12, 34e12, ici_bw=45e10,
+           fp8_ops=1979e12)
+B200 = HW("b200", 8000e9, 4500e12, 75e12, 37e12, ici_bw=90e10,
+          fp8_ops=4500e12)
+RTX5080 = HW("rtx5080", 960e9, 450e12, 56e12, 0.88e12, ici_bw=3e10,
+             fp8_ops=450e12)
+MI300X = HW("mi300x", 5300e9, 2615e12, 163e12, 163e12, ici_bw=45e10,
+            fp8_ops=2615e12)
 
 HARDWARE = {h.name: h for h in (TPU_V5E, GH200, B200, RTX5080, MI300X)}
+
+
+# ------------------------------------------------------------ engine terms
+
+# MAC-volume multiplier of each residue-product engine, relative to the int8
+# path's one (m,k,n) GEMM per plane.  The fp8 engine (e4m3 significand = 4
+# bits < the 7-bit residues) splits every residue into two balanced base-16
+# digits and runs HH + LL + the doubled-K cross GEMM — 4 digit-GEMM volumes
+# per plane (`kernels/fp8_mod_gemm.py`).
+ENGINE_OP_FACTOR = {"int8": 1.0, "fp8": 4.0}
+
+
+def engine_rate(hw: HW, engine: str) -> float:
+    """Sustained MAC throughput (OPS) of `engine` on `hw` (see `HW.fp8_ops`)."""
+    if engine == "int8":
+        return hw.int8_ops
+    if engine == "fp8":
+        return hw.fp8_ops if hw.fp8_ops > 0 else hw.int8_ops / 2.0
+    raise ValueError(f"unknown engine {engine!r}")
+
+
+ENGINES = tuple(ENGINE_OP_FACTOR)
 
 
 def complex_time_s(
@@ -58,11 +97,18 @@ def complex_time_s(
     mode: str = "fast",
     prec: str = "z",     # 'z' (complex128 in) | 'c' (complex64 in)
     c: float | None = None,
+    engine: str = "int8",
 ) -> float:
-    """Paper SIII-C total-time model for complex GEMM emulation."""
+    """Paper SIII-C total-time model for complex GEMM emulation.
+
+    `engine` prices the residue-product MACs: 'int8' is the paper's model
+    verbatim; 'fp8' charges `ENGINE_OP_FACTOR` digit-GEMM volumes at the
+    e4m3 rate (the memory terms are unchanged — both engines move the same
+    int8 residue planes; the digit split happens in-register).
+    """
     N = n_moduli
     cc = float(c if c is not None else N)
-    b, p = hw.mem_bw, hw.int8_ops
+    b, p = hw.mem_bw, engine_rate(hw, engine) / ENGINE_OP_FACTOR[engine]
     if mode == "fast":
         if prec == "z":
             mem = ((3 * N + 32 + cc) * k + 4) * (m + n) + (16 * N + 16 + 2 * cc) * m * n
@@ -80,24 +126,27 @@ def complex_time_s(
     return mem / b + ops / p
 
 
-def complex_tflops(m, n, k, n_moduli, hw: HW, mode="fast", prec="z", c=None):
-    t = complex_time_s(m, n, k, n_moduli, hw, mode, prec, c)
+def complex_tflops(m, n, k, n_moduli, hw: HW, mode="fast", prec="z", c=None,
+                   engine="int8"):
+    t = complex_time_s(m, n, k, n_moduli, hw, mode, prec, c, engine)
     return 8.0 * m * n * k / t * 1e-12
 
 
-def real_time_s(m, n, k, n_moduli, hw: HW, mode="fast", prec="d", c=None):
-    """Real-GEMM variant ([30] + SIV-C): N int8 GEMMs of (m,k,n)."""
+def real_time_s(m, n, k, n_moduli, hw: HW, mode="fast", prec="d", c=None,
+                engine="int8"):
+    """Real-GEMM variant ([30] + SIV-C): N engine GEMMs of (m,k,n)."""
     N = n_moduli
     cc = float(c if c is not None else N)
-    b, p = hw.mem_bw, hw.int8_ops
+    b, p = hw.mem_bw, engine_rate(hw, engine) / ENGINE_OP_FACTOR[engine]
     in_bytes = 8 if prec == "d" else 4
     mem = ((N + 2 * in_bytes + cc) * k + 2) * (m + n) + (6 * N + in_bytes + 2 * cc) * m * n
     ops = 2 * (N if mode == "fast" else N + 1) * m * n * k
     return mem / b + ops / p
 
 
-def real_tflops(m, n, k, n_moduli, hw: HW, mode="fast", prec="d", c=None):
-    t = real_time_s(m, n, k, n_moduli, hw, mode, prec, c)
+def real_tflops(m, n, k, n_moduli, hw: HW, mode="fast", prec="d", c=None,
+                engine="int8"):
+    t = real_time_s(m, n, k, n_moduli, hw, mode, prec, c, engine)
     return 2.0 * m * n * k / t * 1e-12
 
 
@@ -162,6 +211,7 @@ def formulation_time_s(
     karatsuba_launches: int = 3,
     modulus_batched: bool = False,
     comm_s: float = 0.0,
+    engine: str = "int8",
 ) -> float:
     """SIII-C time model specialized per Fig. 1 complex-product strategy.
 
@@ -178,14 +228,21 @@ def formulation_time_s(
     the sharded execution's collective cost (`sharded_comm_time_s`, charged
     on the per-shard shape the caller passes) — the same for every strategy
     today, but kept in the totals so sharded 'auto' selections model what
-    actually runs.
+    actually runs.  `engine` prices every MAC term at that engine's rate and
+    volume factor ('fp8': 4 digit-GEMM volumes at the e4m3 rate,
+    `ENGINE_OP_FACTOR`/`engine_rate`), so an fp8 policy's launch-vs-compute
+    crossover shifts with e4m3 throughput.
     """
     neff = n_moduli if mode == "fast" else n_moduli + 1
     launch_planes = 1 if modulus_batched else neff
-    base = complex_time_s(m, n, k, n_moduli, hw, mode, prec) + comm_s
+    base = complex_time_s(m, n, k, n_moduli, hw, mode, prec, engine=engine) + comm_s
     if formulation == "karatsuba":
         return base + karatsuba_launches * launch_planes * GEMM_LAUNCH_S
-    extra_ops = 2 * neff * m * n * k / hw.int8_ops  # 8N mnk vs the model's 6N
+    # 8N mnk vs the model's 6N, charged at the engine's effective rate
+    extra_ops = (
+        2 * neff * m * n * k
+        * ENGINE_OP_FACTOR[engine] / engine_rate(hw, engine)
+    )
     if formulation == "block_a":
         embed_bytes = 2 * neff * (4 * m * k + 2 * k * n)  # write+read Ahat/Bhat
     elif formulation == "block_b":
@@ -209,18 +266,66 @@ def select_formulation(
     karatsuba_launches: int = 3,
     modulus_batched: bool = False,
     comm_s: float = 0.0,
+    engine: str = "int8",
 ) -> str:
     """Pick the fastest Fig. 1 complex-product strategy under the SIII-C
     model (used by `core/plan.py` for ``formulation='auto'``).  Sharded
     callers pass per-shard (m, n) and their `sharded_comm_time_s` so the
-    launch-vs-compute crossover reflects the local problem each shard runs.
+    launch-vs-compute crossover reflects the local problem each shard runs;
+    fp8 policies pass ``engine="fp8"`` so the crossover reflects the e4m3
+    engine's op volume and rate.
     """
     return min(
         ("karatsuba", "block_a", "block_b"),
         key=lambda f: formulation_time_s(
             f, m, n, k, n_moduli, hw, mode, prec,
-            karatsuba_launches, modulus_batched, comm_s,
+            karatsuba_launches, modulus_batched, comm_s, engine,
         ),
+    )
+
+
+def engine_time_s(
+    engine: str,
+    m: int,
+    n: int,
+    k: int,
+    n_moduli: int,
+    hw: HW = TPU_V5E,
+    mode: str = "fast",
+    prec: str = "z",
+    complex_: bool | None = None,
+) -> float:
+    """Total SIII-C time of one emulated GEMM on `engine` ('int8' | 'fp8').
+
+    `prec` follows the model conventions: 'c'/'z' for complex (the default),
+    's'/'d' for real.  Used by `select_engine` and the throughput benchmark
+    to compare the two engines per shape on one hardware preset.
+    """
+    if complex_ is None:
+        complex_ = prec in ("c", "z")
+    if complex_:
+        return complex_time_s(m, n, k, n_moduli, hw, mode, prec, engine=engine)
+    return real_time_s(
+        m, n, k, n_moduli, hw, mode, "d" if prec in ("z", "d") else "s",
+        engine=engine,
+    )
+
+
+def select_engine(
+    m: int,
+    n: int,
+    k: int,
+    n_moduli: int,
+    hw: HW = TPU_V5E,
+    mode: str = "fast",
+    prec: str = "z",
+) -> str:
+    """The faster residue-product engine for this shape under the SIII-C
+    model: 'fp8' wins exactly when its rate advantage beats its 4x digit-MAC
+    volume (e.g. hardware whose e4m3 rate is >4x its int8 rate, or
+    memory-bound shapes where the op term hardly matters)."""
+    return min(
+        ENGINES, key=lambda e: engine_time_s(e, m, n, k, n_moduli, hw, mode, prec)
     )
 
 

@@ -121,6 +121,7 @@ def make_plan(
     fused_karatsuba: bool = False,
     modulus_batched: bool = False,
     comm_s: float = 0.0,
+    engine: str = "int8",
 ) -> EmulationPlan:
     """Build an :class:`EmulationPlan` from user-facing knobs.
 
@@ -139,6 +140,10 @@ def make_plan(
     comm_s: collective cost of a sharded execution (perfmodel
       `sharded_comm_time_s`, priced by `GemmPolicy.plan_for` on per-shard
       shapes) — folded into the 'auto' formulation totals.
+    engine: the multiply engine the executing backend runs residue products
+      on ('int8' | 'fp8') — the 'auto' selections price ops at that engine's
+      rate and MAC-volume factor (`perfmodel.ENGINE_OP_FACTOR`), so an fp8
+      policy's launch-vs-compute crossover reflects e4m3 throughput.
     """
     dt = jnp.dtype(dtype)
     if mode not in ("fast", "accu"):
@@ -160,7 +165,7 @@ def make_plan(
         if formulation == "auto":
             formulation = _auto_formulation(
                 shape, int(n_moduli), mode, dt, hw, fused_karatsuba,
-                modulus_batched, comm_s,
+                modulus_batched, comm_s, engine,
             )
         if formulation not in COMPLEX_FORMULATIONS:
             raise ValueError(f"unknown complex formulation {formulation!r}")
@@ -185,7 +190,7 @@ def make_plan(
 
 def _auto_formulation(
     shape, n_moduli, mode, dt, hw, fused_karatsuba=False,
-    modulus_batched=False, comm_s=0.0,
+    modulus_batched=False, comm_s=0.0, engine="int8",
 ):
     from . import perfmodel
 
@@ -204,6 +209,7 @@ def _auto_formulation(
         karatsuba_launches=1 if fused_karatsuba else 3,
         modulus_batched=modulus_batched,
         comm_s=comm_s,
+        engine=engine,
     )
 
 

@@ -18,15 +18,22 @@ became the seam for every execution target — *where* to run it:
                                     and one psum of the reconstructed output
                                     is the only communication
                                     (`distributed/sharded_gemm.py`)
+    execution="fp8"                 the FP8 (e4m3) engine: residue products
+                                    as exact base-16 digit GEMMs with
+                                    per-plane rescale, bitwise identical to
+                                    "kernel" but priced at the e4m3 rate
+                                    (`kernels/fp8_mod_gemm.py`,
+                                    arXiv:2603.10634)
 
 The sharded execution needs a mesh: pin it on the policy (``mesh=``) or
 scope a thread-local default with :func:`use_mesh` (also reachable as
 ``repro.use_mesh`` and via ``repro.use_policy(policy, mesh=...)``).
 ``shard_axes`` optionally overrides the (residue, m, n) mesh-axis names.
 
-Future backends (ROADMAP: "fp8", megakernel) plug in as new ``execution``
-values resolved by :meth:`GemmPolicy.execution_backend`; the plan/executor
-layer (`core/plan.py` + `core/executor.py`) is already backend-agnostic.
+Future backends (ROADMAP: megakernel) plug in as new ``execution`` values
+resolved by :meth:`GemmPolicy.execution_backend`; the plan/executor layer
+(`core/plan.py` + `core/executor.py`) is backend-agnostic — the fp8 engine
+is the existence proof that the protocol generalizes beyond int8.
 
 User code normally does not call this module directly: `repro.linalg.matmul`
 is the drop-in entry point, scoped by `repro.use_policy(policy)` — the
@@ -76,9 +83,11 @@ Backend = Literal[
     "native", "ozaki2_f32", "ozaki2_f64", "ozaki2_c64", "ozaki2_c128"
 ]
 
-Execution = Literal["reference", "kernel", "per_modulus_kernel", "sharded"]
+Execution = Literal[
+    "reference", "kernel", "per_modulus_kernel", "sharded", "fp8"
+]
 
-EXECUTIONS = ("reference", "kernel", "per_modulus_kernel", "sharded")
+EXECUTIONS = ("reference", "kernel", "per_modulus_kernel", "sharded", "fp8")
 
 
 # ------------------------------------------------- thread-local default mesh
@@ -100,6 +109,17 @@ def use_mesh(mesh):
     Nestable; the innermost scope wins.  `repro.use_policy(policy, mesh=...)`
     enters this scope alongside the policy scope, so one context manager
     distributes every matmul in a model.
+
+    Example — a mesh-less sharded policy resolves the ambient mesh::
+
+        >>> import jax, repro
+        >>> from repro.core import GemmPolicy
+        >>> mesh = jax.make_mesh((1,), ("residue",))
+        >>> pol = GemmPolicy(backend="ozaki2_f32", execution="sharded")
+        >>> with repro.use_mesh(mesh):
+        ...     resolved = pol.resolved_mesh()
+        >>> resolved is mesh
+        True
     """
     from jax.sharding import Mesh
 
@@ -136,19 +156,62 @@ BACKEND_FOR_DTYPE = {
 class GemmPolicy:
     """Static (hashable) matmul policy threaded through the model configs.
 
-    ``execution`` selects the residue backend that runs the plan (see module
-    docstring); ``interpret`` forces/forbids Pallas interpret mode for the
-    kernel executions (None = auto: interpret off-TPU).  ``method="auto"``
-    resolves to the paper's eq. (5) reconstruction on the reference path and
-    to the TPU-native Garner kernel on the kernel paths (the only
-    reconstruction the kernels implement — no f64 on the VPU).
-    ``out_dtype`` (a dtype name, or None for the compute dtype) requests a
-    different result precision, e.g. f64-grade output from f32 operands.
-    ``mesh`` pins the mesh a sharded execution distributes over (None: the
-    thread-local `use_mesh` default, resolved at trace time); ``shard_axes``
-    optionally overrides the resolved (residue, m, n) mesh-axis names.
-    Both are hashable (jax meshes hash), so sharded policies remain valid
-    jit statics and config fields.
+    One policy object answers every static question about a matmul.  The
+    fields, axis by axis:
+
+    ``backend``
+        *What to emulate* — the compute dtype class: ``"native"`` (plain
+        ``jnp.matmul``, no emulation) or ``"ozaki2_f32"`` / ``"ozaki2_f64"``
+        / ``"ozaki2_c64"`` / ``"ozaki2_c128"`` (SGEMM/DGEMM/CGEMM/ZGEMM
+        emulation; operands are coerced to that dtype).
+    ``n_moduli``
+        Number of CRT moduli N (None: the paper's per-(dtype, mode) default,
+        `plan.DEFAULT_MODULI`).  More moduli = more accuracy, more int8/fp8
+        work.
+    ``mode``
+        Scaling mode: ``"fast"`` (Cauchy-Schwarz bound, eqs. 11-12) or
+        ``"accu"`` (auxiliary 7-bit product bound, eqs. 13-14 — tighter, one
+        extra product).
+    ``method``
+        CRT reconstruction: ``"paper"`` (eq. (5) split), ``"dd"``
+        (double-double), ``"garner"`` (mixed-radix, the TPU-native kernel),
+        or ``"auto"`` — paper on the reference execution, garner on every
+        kernel execution (the only reconstruction the kernels implement; no
+        f64 on the VPU).
+    ``formulation``
+        Complex-product strategy (paper Fig. 1): ``"karatsuba"`` (eq. 10),
+        ``"block_a"`` / ``"block_b"`` (the eqs. 7/8 embeddings), or
+        ``"auto"`` (SIII-C perfmodel per shape, priced at the executing
+        backend's launch capabilities and engine).  Ignored for real
+        backends.
+    ``n_block``
+        Output-column blocking (paper SIII-A): an int, None (unblocked), or
+        ``"auto"`` (the paper's 8192 columns, balanced).
+    ``execution``
+        *Where to run it* — the residue backend: ``"reference"`` |
+        ``"kernel"`` | ``"per_modulus_kernel"`` | ``"sharded"`` | ``"fp8"``
+        (see module docstring; resolved by :meth:`execution_backend`).
+    ``interpret``
+        Forces/forbids Pallas interpret mode for the kernel executions
+        (None = auto: interpret off-TPU).
+    ``out_dtype``
+        Result dtype name (None: the compute dtype) — e.g. f64-shaped
+        output from f32 operands.
+    ``mesh`` / ``shard_axes``
+        Sharded execution only: the mesh to distribute over (None: the
+        thread-local `use_mesh` default, resolved at trace time) and an
+        optional override of the resolved (residue, m, n) mesh-axis names.
+        Both hashable, so sharded policies remain valid jit statics.
+
+    Example::
+
+        >>> from repro.core import GemmPolicy
+        >>> pol = GemmPolicy(backend="ozaki2_c128", mode="accu",
+        ...                  execution="fp8", n_block=8192)
+        >>> (pol.compute_dtype.__name__, pol.is_complex, pol.resolved_method)
+        ('complex128', True, 'garner')
+        >>> pol.plan_for(256, 256, 256).n_moduli     # paper default for accu
+        14
     """
 
     backend: Backend = "native"
@@ -231,6 +294,10 @@ class GemmPolicy:
                 KernelBackend(bool(interp)), self.resolved_mesh(),
                 self.shard_axes,
             )
+        if self.execution == "fp8":
+            from .executor import Fp8Backend
+
+            return Fp8Backend(bool(interp))
         cls = (
             KernelBackend
             if self.execution == "kernel"
@@ -273,6 +340,7 @@ class GemmPolicy:
             fused_karatsuba=getattr(be, "fused_karatsuba", False),
             modulus_batched=getattr(be, "modulus_batched", False),
             comm_s=comm_s,
+            engine=getattr(be, "engine", "int8"),
         )
 
 

@@ -4,6 +4,7 @@ mode on CPU; see tests/test_kernels.py for the per-kernel allclose sweeps).
 from .common import count_pallas_launches
 from .crt_garner import crt_garner
 from .flash_attention import flash_attention
+from .fp8_mod_gemm import FP8_K_CHUNK_LIMIT, fp8_mod_gemm_batched
 from .int8_mod_gemm import int8_mod_gemm, int8_mod_gemm_batched
 from .karatsuba_fused import karatsuba_mod_gemm, karatsuba_mod_gemm_batched
 from .ops import (
@@ -15,11 +16,13 @@ from .ops import (
 from .residue_cast import residue_cast
 
 __all__ = [
+    "FP8_K_CHUNK_LIMIT",
     "KernelBackend",
     "PerModulusKernelBackend",
     "count_pallas_launches",
     "crt_garner",
     "flash_attention",
+    "fp8_mod_gemm_batched",
     "int8_mod_gemm",
     "int8_mod_gemm_batched",
     "karatsuba_mod_gemm",

@@ -49,8 +49,9 @@ def main():
                              "ozaki2_c64", "ozaki2_c128"])
     ap.add_argument("--execution", default="reference",
                     choices=["reference", "kernel", "per_modulus_kernel",
-                             "sharded"],
-                    help="residue backend running the emulation plan")
+                             "sharded", "fp8"],
+                    help="residue backend running the emulation plan "
+                         "(fp8: the e4m3 digit-GEMM engine)")
     ap.add_argument("--residue", type=int, default=1,
                     help="residue mesh-axis size (sharded execution)")
     args = ap.parse_args()

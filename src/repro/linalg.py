@@ -4,16 +4,22 @@ This is the library analog of the paper's deployment story: the reference
 implementation LD_PRELOAD-interposes cuBLAS so unmodified applications run
 the CGEMM/ZGEMM emulation.  Here the interposition point is one function —
 
+    >>> import jax.numpy as jnp
     >>> import repro
     >>> from repro.core import GemmPolicy
-    >>> with repro.use_policy(GemmPolicy(backend="ozaki2_c64",
+    >>> a = jnp.eye(2, dtype=jnp.complex64)
+    >>> b = jnp.ones((2, 2), jnp.complex64)
+    >>> with repro.use_policy(GemmPolicy(backend="ozaki2_c64", n_moduli=5,
     ...                                  execution="kernel")):
     ...     y = repro.linalg.matmul(a, b)          # batched Pallas path
+    >>> (y.dtype.name, bool(jnp.all(y == b)))
+    ('complex64', True)
 
 — and everything above it (`repro.models` layers, the serve engine, the
 training step) calls `linalg.matmul`, so one `use_policy` scope (or one
 `gemm_policy` config field) moves a whole model between the native path,
-the jnp reference emulation and the modulus-batched Pallas kernels.
+the jnp reference emulation, the modulus-batched Pallas kernels, the
+sharded pipeline and the fp8 engine.
 
 Policy scoping and jit
 ----------------------
@@ -95,6 +101,21 @@ def use_policy(policy: GemmPolicy, *, mesh=None):
     default mesh (`use_mesh`) a ``GemmPolicy(execution="sharded",
     mesh=None)`` resolves at trace time — one context manager distributes
     every matmul in a model over the mesh.
+
+    Example — the ambient scope routes matmuls, nesting overrides it::
+
+        >>> import jax.numpy as jnp
+        >>> import repro
+        >>> from repro.core import GemmPolicy
+        >>> repro.current_policy().backend
+        'native'
+        >>> with repro.use_policy("ozaki2_f64"):         # name shorthand
+        ...     outer = repro.current_policy().backend
+        ...     with repro.use_policy(GemmPolicy(backend="ozaki2_f32",
+        ...                                      execution="fp8")):
+        ...         inner = repro.current_policy().execution
+        >>> (outer, inner, repro.current_policy().backend)
+        ('ozaki2_f64', 'fp8', 'native')
     """
     if isinstance(policy, str):
         policy = GemmPolicy(backend=policy)
@@ -143,6 +164,18 @@ def matmul(x, w, *, policy: GemmPolicy | None = None):
     `PreparedOperand` (residues cast once — the serving fast path).
     Differentiable through the emulated custom VJP; jit-compatible (the
     policy is trace-time static).
+
+    Example — an f64-grade product emulated on int8 arithmetic::
+
+        >>> import jax.numpy as jnp
+        >>> import repro
+        >>> from repro.core import GemmPolicy
+        >>> a = jnp.eye(3, dtype=jnp.float64) * 4.0
+        >>> b = jnp.full((3, 2), 2.5)
+        >>> y = repro.linalg.matmul(
+        ...     a, b, policy=GemmPolicy(backend="ozaki2_f64", n_moduli=6))
+        >>> bool(jnp.all(y == 10.0))       # exact: power-of-two operands
+        True
     """
     policy = current_policy() if policy is None else policy
     if isinstance(w, PreparedOperand):
@@ -196,20 +229,52 @@ def _blas(routine: str, dtype, x, w, policy: GemmPolicy | None):
 
 
 def sgemm(x, w, *, policy: GemmPolicy | None = None):
-    """Emulated SGEMM: f32 compute, every other knob from the policy."""
+    """Emulated SGEMM: f32 compute, every other knob (mode, execution,
+    n_block, ...) inherited from `policy` / the ambient scope.
+
+    Coerces both operands to float32 and forces ``backend="ozaki2_f32"`` —
+    `sgemm(a, b)` is always the emulated f32 product, whatever the ambient
+    backend field says.
+
+    >>> import jax.numpy as jnp, repro
+    >>> repro.linalg.sgemm(jnp.eye(2), jnp.ones((2, 2))).dtype.name
+    'float32'
+    """
     return _blas("sgemm", jnp.float32, x, w, policy)
 
 
 def dgemm(x, w, *, policy: GemmPolicy | None = None):
-    """Emulated DGEMM: f64 compute, every other knob from the policy."""
+    """Emulated DGEMM: f64 compute, every other knob from the policy.
+    On the kernel/fp8 executions the output is f64-shaped but f32-grade
+    (the Pallas cast quantizes through f32).
+
+    >>> import jax.numpy as jnp, repro
+    >>> repro.linalg.dgemm(jnp.eye(2), jnp.ones((2, 2))).dtype.name
+    'float64'
+    """
     return _blas("dgemm", jnp.float64, x, w, policy)
 
 
 def cgemm(x, w, *, policy: GemmPolicy | None = None):
-    """Emulated CGEMM (paper SIII): complex64 compute."""
+    """Emulated CGEMM (paper SIII): complex64 compute; the complex product
+    strategy is the policy's `formulation` (Fig. 1), default Karatsuba.
+
+    >>> import jax.numpy as jnp, repro
+    >>> a = jnp.eye(2) * (1 + 1j)
+    >>> repro.linalg.cgemm(a, a).dtype.name
+    'complex64'
+    """
     return _blas("cgemm", jnp.complex64, x, w, policy)
 
 
 def zgemm(x, w, *, policy: GemmPolicy | None = None):
-    """Emulated ZGEMM (paper SIII): complex128 compute."""
+    """Emulated ZGEMM (paper SIII): complex128 compute — the headline
+    routine on hardware with no native f64 (TPU v5e).
+
+    >>> import jax.numpy as jnp, repro
+    >>> a = jnp.eye(2, dtype=jnp.complex128) * 2j
+    >>> y = repro.linalg.zgemm(a, a)
+    >>> (y.dtype.name, complex(y[0, 0]))
+    ('complex128', (-4+0j))
+    """
     return _blas("zgemm", jnp.complex128, x, w, policy)

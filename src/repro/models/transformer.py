@@ -119,9 +119,26 @@ class Model:
 
     def _run_group(self, gp, bk, mk, x, positions):
         cfg = self.cfg
+        n_layers = jax.tree.leaves(gp)[0].shape[0]
 
-        def body(carry, lp):
-            x = self._constrain(carry)
+        # The stacked layer params are indexed in the body with an explicit
+        # int32 carry index instead of riding scan's xs: under
+        # jax_enable_x64 the scan machinery's internal loop counter is
+        # int64 (lax._const of a Python int), and the XLA SPMD partitioner
+        # rejects s64 dynamic_update_slice indices on sharded operands
+        # ("compare s64[] vs s32[]") when it transposes the remat scan.
+        # With the carry index pinned to int32, every gather the forward
+        # emits on the sharded layer stack — and every scatter-add its
+        # transpose emits for the layer-stacked cotangents — is s32; scan's
+        # own s64 counter only ever touches the replicated aux stack, which
+        # the partitioner leaves alone.
+        def body(carry, _):
+            i, x = carry
+            lp = jax.tree.map(
+                lambda p: jax.lax.dynamic_index_in_dim(p, i, keepdims=False),
+                gp,
+            )
+            x = self._constrain(x)
             hn = apply_norm(cfg.norm, lp["norm1"], x)
             x = x + BLOCKS[bk]["apply"](cfg, lp["block"], hn, positions)
             aux = jnp.zeros((), jnp.float32)
@@ -139,10 +156,13 @@ class Model:
                 else:
                     y = apply_mlp(mk, lp["mlp"], hn2, cfg.gemm_policy)
                 x = x + y
-            return self._constrain(x), aux
+            return (i + jnp.int32(1), self._constrain(x)), aux
 
         fn = jax.checkpoint(body) if cfg.remat else body
-        x, auxs = jax.lax.scan(fn, x, gp, unroll=True if cfg.scan_unroll else 1)
+        (_, x), auxs = jax.lax.scan(
+            fn, (jnp.int32(0), x), None, length=n_layers,
+            unroll=True if cfg.scan_unroll else 1,
+        )
         return x, jnp.sum(auxs)
 
     def backbone(self, params, batch):

@@ -63,7 +63,10 @@ def test_tree_pspecs_cover_all_archs():
 _SUBPROCESS_COMMON = textwrap.dedent(
     """
     import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+    # pin the platform: jax's backend discovery in the stripped subprocess
+    # env takes minutes without it (this box is CPU-only anyway)
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
     import numpy as np
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
@@ -72,8 +75,8 @@ _SUBPROCESS_COMMON = textwrap.dedent(
 )
 
 
-def _run_sub(body: str):
-    code = _SUBPROCESS_COMMON + textwrap.dedent(body)
+def _run_sub(body: str, devices: int = 8):
+    code = _SUBPROCESS_COMMON.format(devices=devices) + textwrap.dedent(body)
     res = subprocess.run(
         [sys.executable, "-c", code],
         capture_output=True,
@@ -195,5 +198,58 @@ def test_elastic_reshard_subprocess(tmp_path):
         assert set(leaf.sharding.mesh.devices.flat) <= set(devs)
         print("OK")
         """
+    )
+    assert "OK" in out
+
+
+def test_emulated_train_step_2device_mesh():
+    """Regression (ROADMAP, found in PR 4): `launch.train --backend
+    ozaki2_* --mesh 2x1` died in XLA SPMD partitioning ("compare s64[] vs
+    s32[]") for every emulated execution — under jax_enable_x64 the layer
+    scan's internal counter is int64, and the partitioner rejects s64
+    dynamic_update_slice indices on the sharded layer stack when it
+    transposes the remat scan.  `Model._run_group` now threads an explicit
+    int32 carry index and gathers the stacked layer params in the body, so
+    an emulated remat train step must compile and take a finite step on a
+    real (forced-host) 2-device mesh.
+
+    Not slow-marked: a deliberately tiny config keeps the subprocess under
+    ~1 min — this is the only tier-1 coverage of emulated training on a
+    multi-device mesh.
+    """
+    out = _run_sub(
+        """
+        from repro.core.policy import GemmPolicy
+        from repro.models import Model
+        from repro.models.config import ModelConfig
+        from repro.train.step import make_train_step, init_state
+        from repro.optim import AdamWConfig
+
+        mesh = jax.make_mesh((2, 1), ("data", "model"))
+        cfg = ModelConfig(
+            name="tiny", n_layers=2, d_model=32, vocab=64, n_heads=2,
+            n_kv_heads=2, head_dim=16, d_ff=64, dtype="float32", remat=True,
+            gemm_policy=GemmPolicy(
+                backend="ozaki2_f32", n_moduli=4, execution="reference"
+            ),
+        )
+        model = Model(cfg)
+        step, sh = make_train_step(model, AdamWConfig(), mesh=mesh, donate=False)
+        params, opt = init_state(
+            model, AdamWConfig(), jax.random.PRNGKey(0), sh
+        )
+        batch = jax.device_put(
+            {"tokens": jnp.asarray(
+                np.random.default_rng(0).integers(0, cfg.vocab, (4, 16)),
+                jnp.int32,
+            )},
+            sh["batch"],
+        )
+        _, _, metrics = step(params, opt, batch)
+        loss = float(metrics["loss"])
+        assert np.isfinite(loss), loss
+        print("OK", loss)
+        """,
+        devices=2,
     )
     assert "OK" in out

@@ -1,0 +1,304 @@
+"""The FP8 (e4m3) residue engine — `GemmPolicy(execution="fp8")`.
+
+What this file guarantees:
+
+  * `kernels/fp8_mod_gemm.fp8_mod_gemm_batched` — residues split into
+    balanced base-16 digits (exact in e4m3), three fp8 GEMMs per plane,
+    per-plane rescale in the epilogue — is **bitwise identical** to the
+    int8 engine (`int8_mod_gemm_batched`) including the carry input,
+    ragged shapes, traced moduli, and K-chunking at its tighter f32
+    accumulator bound (`FP8_K_CHUNK_LIMIT`).
+  * the policy route: ``execution="fp8"`` through `repro.linalg.matmul`
+    runs end-to-end for all four dtypes x {fast, accu} x all complex
+    formulations, bitwise equal to ``execution="kernel"`` everywhere (the
+    first non-int8 engine through the residue-backend protocol), with
+    CI-pinned accuracy bands vs the exact reference product.
+  * prepared weights and gradients ride the same backend seam unchanged.
+  * `perfmodel` prices the engine: `ENGINE_OP_FACTOR`/`engine_rate` feed
+    ``formulation="auto"`` via `GemmPolicy.plan_for`, and `select_engine`
+    picks int8/fp8 per shape and hardware.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import FAST_K, FAST_M, FAST_N, phi_matrix
+import repro
+from repro import linalg
+from repro.core import GemmPolicy, perfmodel
+from repro.core.executor import Fp8Backend, chunked_residue_matmul
+from repro.core.moduli import make_crt_context
+from repro.core.policy import BACKEND_FOR_DTYPE, policy_matmul, prepare_weights
+from repro.kernels import (
+    FP8_K_CHUNK_LIMIT,
+    count_pallas_launches,
+    fp8_mod_gemm_batched,
+    int8_mod_gemm_batched,
+)
+
+M, K, N = FAST_M, FAST_K, FAST_N
+
+DTYPES = [np.float32, np.float64, np.complex64, np.complex128]
+# small moduli counts keep the interpret-mode sweeps fast; engine parity is
+# independent of N (the digit split is per-residue)
+N_MODULI = {"float32": 5, "float64": 6, "complex64": 5, "complex128": 6}
+F32_GRADE = ("float32", "complex64")
+
+# CI-pinned max-relative-error bands of the fp8 execution vs the exact
+# product, at the default per-dtype moduli counts.  The engine is exact, so
+# these are the *pipeline's* bands: f32-grade quantization (the kernel cast
+# goes through f32) bounds every dtype at ~2^-24; fast mode's Cauchy-Schwarz
+# scaling is looser than accu's eq. 13-14 bound.  Identical to the int8
+# kernel path's bands by bitwise parity (asserted separately).
+ACCURACY_BAND = {"fast": 5e-6, "accu": 5e-6}
+
+
+def _policy(dtype, execution, **kw):
+    name = np.dtype(dtype).name
+    kw.setdefault("n_moduli", N_MODULI[name])
+    kw.setdefault("interpret", True)
+    return GemmPolicy(backend=BACKEND_FOR_DTYPE[name], execution=execution, **kw)
+
+
+def _operands(rng, dtype, shape_a=(M, K), shape_b=(K, N)):
+    x = jnp.asarray(phi_matrix(rng, shape_a, 0.5, dtype))
+    w = jnp.asarray(phi_matrix(rng, shape_b, 0.5, dtype))
+    return x, w
+
+
+def _residue_planes(rng, ctx, *shape):
+    half = np.asarray(ctx.half_arr)
+    return np.stack(
+        [rng.integers(-h, h + 1, shape) for h in half]
+    ).astype(np.int8)
+
+
+# ===================================================== kernel-level parity
+
+
+@pytest.mark.parametrize("shape", [(32, 64, 16), (33, 97, 25), (1, 31, 129)])
+def test_fp8_kernel_bitwise_vs_int8(rng, shape):
+    """The digit-split fp8 GEMM is exact: bitwise == the int8 engine on
+    aligned and ragged shapes (pad-and-slice is residue-exact)."""
+    m, k, n = shape
+    ctx = make_crt_context(5)
+    a = jnp.asarray(_residue_planes(rng, ctx, m, k))
+    b = jnp.asarray(_residue_planes(rng, ctx, k, n))
+    ref = int8_mod_gemm_batched(a, b, moduli=ctx.moduli, interpret=True)
+    out = fp8_mod_gemm_batched(a, b, moduli=ctx.moduli, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+def test_fp8_kernel_carry_and_traced_moduli(rng):
+    """The chunk-carry epilogue and the traced-moduli (sharded-style) entry
+    both stay bitwise-exact on the fp8 engine."""
+    ctx = make_crt_context(4)
+    a = jnp.asarray(_residue_planes(rng, ctx, 16, 48))
+    b = jnp.asarray(_residue_planes(rng, ctx, 48, 24))
+    carry = jnp.asarray(_residue_planes(rng, ctx, 16, 24))
+    ref = int8_mod_gemm_batched(
+        a, b, moduli=ctx.moduli, carry=carry, interpret=True
+    )
+    out = fp8_mod_gemm_batched(
+        a, b, moduli=ctx.moduli, carry=carry, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+    traced = fp8_mod_gemm_batched(
+        a, b, moduli=jnp.asarray(ctx.moduli_arr), carry=carry, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(traced))
+
+
+def test_fp8_chunked_matches_unchunked(rng):
+    """`chunked_residue_matmul` at the fp8 engine's chunk limit: forcing a
+    tiny chunk (many carry-epilogue launches) reproduces the one-launch
+    result bitwise — the chunk combine happens in the residue ring."""
+    ctx = make_crt_context(4)
+    a = jnp.asarray(_residue_planes(rng, ctx, 8, 100))
+    b = jnp.asarray(_residue_planes(rng, ctx, 100, 8))
+
+    def gemm(x, y, carry):
+        return fp8_mod_gemm_batched(
+            x, y, moduli=ctx.moduli, carry=carry, interpret=True
+        )
+
+    one = chunked_residue_matmul(gemm, a, b, ctx, carry_epilogue=True)
+    many = chunked_residue_matmul(
+        gemm, a, b, ctx, carry_epilogue=True, chunk_limit=32
+    )
+    np.testing.assert_array_equal(np.asarray(one), np.asarray(many))
+
+
+def test_fp8_kernel_rejects_oversized_k(rng):
+    """A single launch must refuse K beyond the f32 digit-accumulator bound
+    (the backend chunks instead of silently losing exactness)."""
+    ctx = make_crt_context(2)
+    a = jnp.zeros((2, 8, FP8_K_CHUNK_LIMIT + 32), jnp.int8)
+    b = jnp.zeros((2, FP8_K_CHUNK_LIMIT + 32, 8), jnp.int8)
+    with pytest.raises(ValueError, match="chunk"):
+        fp8_mod_gemm_batched(a, b, moduli=ctx.moduli, interpret=True)
+
+
+# ===================================================== policy-route parity
+
+
+@pytest.mark.parametrize("mode", ["fast", "accu"])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fp8_execution_parity(rng, dtype, mode):
+    """Tentpole: execution="fp8" is bitwise identical to execution="kernel"
+    for every dtype x mode — the engine changes, the numbers don't (casts
+    and Garner reconstruction are shared; the digit products are exact)."""
+    x, w = _operands(rng, dtype)
+    yk = np.asarray(policy_matmul(x, w, _policy(dtype, "kernel", mode=mode)))
+    yf = np.asarray(policy_matmul(x, w, _policy(dtype, "fp8", mode=mode)))
+    np.testing.assert_array_equal(yk, yf)
+    if np.dtype(dtype).name in F32_GRADE:
+        yr = np.asarray(
+            policy_matmul(x, w, _policy(dtype, "reference", mode=mode))
+        )
+        np.testing.assert_array_equal(yf, yr)
+
+
+@pytest.mark.parametrize("formulation", ["karatsuba", "block_a", "block_b"])
+def test_fp8_complex_formulations(rng, formulation):
+    """All three Fig. 1 strategies run on the fp8 engine (Karatsuba is
+    composed from 3 fp8 products — no fused kernel) and bit-match the int8
+    kernel path under the same formulation."""
+    x, w = _operands(rng, np.complex64)
+    yk = np.asarray(
+        policy_matmul(x, w, _policy(np.complex64, "kernel", formulation=formulation))
+    )
+    yf = np.asarray(
+        policy_matmul(x, w, _policy(np.complex64, "fp8", formulation=formulation))
+    )
+    np.testing.assert_array_equal(yk, yf)
+
+
+@pytest.mark.parametrize("mode", ["fast", "accu"])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fp8_accuracy_bands(rng, dtype, mode):
+    """End-to-end through `repro.linalg.matmul` at the default per-dtype
+    moduli counts: the fp8 execution's max relative error vs the exact
+    product stays inside the CI-pinned band (and equals the int8 kernel
+    path's error exactly, by engine parity)."""
+    x, w = _operands(rng, dtype)
+    pol = GemmPolicy(
+        backend=BACKEND_FOR_DTYPE[np.dtype(dtype).name],
+        execution="fp8",
+        mode=mode,
+        interpret=True,
+    )
+    with repro.use_policy(pol):
+        y = np.asarray(linalg.matmul(x, w))
+    if np.issubdtype(np.dtype(dtype), np.complexfloating):
+        ref = np.asarray(x, np.clongdouble) @ np.asarray(w, np.clongdouble)
+    else:
+        ref = np.asarray(x, np.longdouble) @ np.asarray(w, np.longdouble)
+    err = float(np.max(np.abs(y - ref)) / np.max(np.abs(ref)))
+    assert err < ACCURACY_BAND[mode], (np.dtype(dtype).name, mode, err)
+    yk = np.asarray(
+        linalg.matmul(x, w, policy=dataclasses.replace(pol, execution="kernel"))
+    )
+    np.testing.assert_array_equal(y, yk)
+
+
+def test_fp8_prepared_weights_parity(rng):
+    """`prepare_weights` under an fp8 policy casts with the fp8 backend's
+    (shared) kernel cast, so prepared serving is bit-identical to the direct
+    fp8 run — the backend seam covers the prepared path too."""
+    x, w = _operands(rng, np.float32)
+    pol = _policy(np.float32, "fp8")
+    direct = np.asarray(policy_matmul(x, w, pol))
+    tree = prepare_weights({"w": w}, pol)
+    prepped = np.asarray(policy_matmul(x, tree["w"], pol))
+    np.testing.assert_array_equal(direct, prepped)
+
+
+def test_fp8_grad_matches_kernel(rng):
+    """The custom VJP routes cotangent products through the same execution
+    backend: grads under fp8 are bitwise those of the kernel path."""
+    x, w = _operands(rng, np.float32)
+
+    def loss(pol):
+        return lambda a, b: jnp.sum(jnp.abs(policy_matmul(a, b, pol)) ** 2)
+
+    gk = jax.grad(loss(_policy(np.float32, "kernel")), argnums=(0, 1))(x, w)
+    gf = jax.grad(loss(_policy(np.float32, "fp8")), argnums=(0, 1))(x, w)
+    for a, b in zip(gk, gf):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fp8_launch_counts(rng):
+    """The fp8 path keeps the batched launch economics: 4 launches for a
+    real GEMM (cast, cast, product, reconstruct), and 3 products for the
+    composed Karatsuba — exactly `perfmodel.kernel_launch_count` with
+    `fused_karatsuba=False` (the capability `Fp8Backend` declares)."""
+    x, w = _operands(rng, np.float32)
+    pol = _policy(np.float32, "fp8")
+    n = count_pallas_launches(lambda a, b: policy_matmul(a, b, pol), x, w)
+    assert n == perfmodel.kernel_launch_count(
+        pol.n_moduli, "real", modulus_batched=True, fused_karatsuba=False
+    ) == 4
+    xc, wc = _operands(rng, np.complex64)
+    polc = _policy(np.complex64, "fp8", formulation="karatsuba")
+    nc = count_pallas_launches(lambda a, b: policy_matmul(a, b, polc), xc, wc)
+    assert nc == perfmodel.kernel_launch_count(
+        polc.n_moduli, "karatsuba", modulus_batched=True, fused_karatsuba=False
+    ) == 6
+
+
+# ===================================================== perfmodel pricing
+
+
+def test_engine_pricing_volume_factor():
+    """At equal engine rates the fp8 engine costs strictly more (4x MAC
+    volume), so `select_engine` keeps int8; a >4x e4m3 rate flips it."""
+    hw = perfmodel.B200  # fp8_ops == int8_ops
+    m = n = k = 4096
+    t_i8 = perfmodel.engine_time_s("int8", m, n, k, 14, hw)
+    t_f8 = perfmodel.engine_time_s("fp8", m, n, k, 14, hw)
+    assert t_f8 > t_i8
+    assert perfmodel.select_engine(m, n, k, 14, hw) == "int8"
+    fast_fp8 = dataclasses.replace(hw, fp8_ops=5.0 * hw.int8_ops)
+    assert perfmodel.select_engine(m, n, k, 14, fast_fp8) == "fp8"
+    # no-native-fp8 preset (v5e): the engine runs at the upconvert rate
+    assert perfmodel.engine_rate(perfmodel.TPU_V5E, "fp8") == pytest.approx(
+        perfmodel.TPU_V5E.int8_ops / 2
+    )
+
+
+def test_fp8_auto_formulation_prices_engine():
+    """`plan_for` reads the backend's `engine` capability, so an fp8
+    policy's formulation='auto' decision is made at e4m3 pricing: with the
+    op term 8x heavier (4x volume at half rate on the v5e preset), the
+    compute-heavy Karatsuba-vs-embedding crossover moves."""
+    pol = GemmPolicy(
+        backend="ozaki2_c64", execution="fp8", formulation="auto",
+        n_moduli=5, interpret=True,
+    )
+    plan = pol.plan_for(64, 64, 64)
+    assert plan.formulation in ("karatsuba", "block_a", "block_b")
+    # the engine term is really threaded: the two engines price differently
+    t_int8 = perfmodel.formulation_time_s(
+        "karatsuba", 512, 512, 512, 5, perfmodel.TPU_V5E,
+        modulus_batched=True, engine="int8",
+    )
+    t_fp8 = perfmodel.formulation_time_s(
+        "karatsuba", 512, 512, 512, 5, perfmodel.TPU_V5E,
+        modulus_batched=True, engine="fp8",
+    )
+    assert t_fp8 > t_int8
+
+
+def test_fp8_backend_capabilities():
+    """The protocol capabilities the policy/plan layers read off the
+    backend: batched launches, composed Karatsuba, fp8 engine tag."""
+    be = Fp8Backend(True)
+    assert be.modulus_batched and not be.fused_karatsuba
+    assert be.engine == "fp8"
+    assert hash(be) == hash(Fp8Backend(True))  # jit-static eligible
+    pol = GemmPolicy(backend="ozaki2_f32", execution="fp8", interpret=True)
+    assert isinstance(pol.execution_backend(), Fp8Backend)
