@@ -65,6 +65,12 @@ def check_launch_counts(m: int, n: int, k: int, n_moduli: int) -> int:
             interpret=True, **kw,
         )
 
+    def fpol(backend, **kw):
+        return GemmPolicy(
+            backend=backend, n_moduli=n_moduli, execution="fused",
+            interpret=True, **kw,
+        )
+
     cases = [
         (
             "real",
@@ -86,11 +92,31 @@ def check_launch_counts(m: int, n: int, k: int, n_moduli: int) -> int:
             (ca, cb),
             perfmodel.kernel_launch_count(n_moduli, "block_a"),
         ),
+        # the megakernel: cast + products + Garner share ONE pallas_call —
+        # the whole point of execution='fused' (4 -> 1 vs the kernel path)
+        (
+            "fused_real",
+            lambda x, y: linalg.matmul(x, y, policy=fpol("ozaki2_f32")),
+            (a, b),
+            perfmodel.kernel_launch_count(n_moduli, "real", fused=True),
+        ),
+        (
+            "fused_karatsuba",
+            lambda x, y: linalg.matmul(x, y, policy=fpol("ozaki2_c64")),
+            (ca, cb),
+            perfmodel.kernel_launch_count(n_moduli, "karatsuba", fused=True),
+        ),
     ]
     bad = 0
     for name, fn, operands, expect in cases:
         got = count_pallas_launches(fn, *operands)
         ok = got == expect
+        if name.startswith("fused"):
+            # the fused path must actually *reduce* launches, not merely
+            # match its own model row
+            ok = ok and got == 1 and got < perfmodel.kernel_launch_count(
+                n_moduli, name.removeprefix("fused_")
+            )
         bad += not ok
         emit(
             f"kernel_fusion/launches/{name}/{m}x{n}x{k}/N={n_moduli}",

@@ -15,17 +15,19 @@ Key reproduced claims (checked in the derived column):
 CLI (the tracked-throughput harness; `benchmarks.run` still calls `run()`):
 
     PYTHONPATH=src python -m benchmarks.bench_throughput \
-        [--smoke] [--execution reference|kernel|sharded|fp8] [--residue R] \
-        [--mesh DxM] [--json BENCH_throughput.json]
+        [--smoke] [--execution reference|kernel|sharded|fp8|fused] \
+        [--residue R] [--mesh DxM] [--json BENCH_throughput.json] [--force]
 
 `--execution` picks the residue backend the measured section times
 (`sharded` builds a host mesh — run under
 XLA_FLAGS=--xla_force_host_platform_device_count=N to span N devices;
-`fp8` runs the e4m3 digit-GEMM engine) and every measured record reports
-BOTH aggregate and per-device GEMM throughput, written to the `--json`
-file keyed by execution — re-running one execution replaces only its own
-records, so BENCH_throughput.json accumulates the int8-vs-fp8 (and
-sharded) trajectories side by side.
+`fp8` runs the e4m3 digit-GEMM engine; `fused` the one-launch megakernel)
+and every measured record reports BOTH aggregate and per-device GEMM
+throughput, written to the `--json` file keyed by the full measurement
+config (execution, mesh, devices, name) — re-running replaces exactly the
+re-measured keys, so BENCH_throughput.json accumulates the kernel-vs-fused
+(and fp8/sharded) trajectories side by side; records it cannot key-match
+are never dropped without `--force`.
 """
 from __future__ import annotations
 
@@ -159,6 +161,16 @@ def _bench_mesh(execution: str, residue: int, mesh_arg: str | None):
     )
 
 
+# (blas-prefix, backend, numpy dtype, flops per m*n*k) measured per mode —
+# one real and one complex class keeps the tracked trajectory per dtype x
+# mode without quadrupling bench wall-time (f64/c128 follow the same code
+# paths at higher N).
+_MEASURED_CLASSES = (
+    ("s", "ozaki2_f32", np.float32, 2.0),
+    ("c", "ozaki2_c64", np.complex64, 8.0),
+)
+
+
 def measured_policy(
     sizes=(256, 512),
     execution: str = "reference",
@@ -168,10 +180,12 @@ def measured_policy(
 ):
     """Measured wall-time of the policy-routed emulation on this host.
 
-    Reports aggregate TFLOPS (whole-GEMM flops / wall time) and per-device
-    TFLOPS (aggregate / devices the mesh spans) for every configuration —
-    the number that must stay flat as the mesh grows is per-device, and the
-    one that must grow is aggregate.
+    Covers dtype class x scaling mode (sgemm/cgemm x fast/accu) so the
+    tracked records pin the whole measured surface per execution.  Reports
+    aggregate TFLOPS (whole-GEMM flops / wall time) and per-device TFLOPS
+    (aggregate / devices the mesh spans) for every configuration — the
+    number that must stay flat as the mesh grows is per-device, and the one
+    that must grow is aggregate.
     """
     import repro
     from repro import linalg
@@ -184,30 +198,35 @@ def measured_policy(
     )
     rng = np.random.default_rng(1)
     for s in sizes:
-        a = jnp.asarray(phi_matrix(rng, (s, s), 0.5, np.complex64))
-        b = jnp.asarray(phi_matrix(rng, (s, s), 0.5, np.complex64))
-        for nm in (6, 8):
-            pol = GemmPolicy(
-                backend="ozaki2_c64", n_moduli=nm, execution=execution,
-                mesh=mesh,
-            )
-            us = time_fn(functools.partial(linalg.matmul_jit, policy=pol), a, b)
-            agg = 8 * s**3 / (us * 1e-6) * 1e-12
-            emit(
-                f"fig6_13/measured_cpu/cgemm/{execution}/mesh{mesh_name}/fast-{nm}/{s}",
-                us,
-                f"tflops_aggregate={agg:.4f};tflops_per_device={agg / n_dev:.4f}",
-            )
-            if records is not None:
-                records.append({
-                    "name": f"cgemm/fast-{nm}/{s}",
-                    "execution": execution,
-                    "mesh": mesh_name,
-                    "devices": n_dev,
-                    "us_per_call": us,
-                    "tflops_aggregate": agg,
-                    "tflops_per_device": agg / n_dev,
-                })
+        for prec, backend, dt, flop in _MEASURED_CLASSES:
+            a = jnp.asarray(phi_matrix(rng, (s, s), 0.5, dt))
+            b = jnp.asarray(phi_matrix(rng, (s, s), 0.5, dt))
+            for mode in ("fast", "accu"):
+                pol = GemmPolicy(
+                    backend=backend, mode=mode, execution=execution,
+                    mesh=mesh,
+                )
+                us = time_fn(
+                    functools.partial(linalg.matmul_jit, policy=pol), a, b
+                )
+                agg = flop * s**3 / (us * 1e-6) * 1e-12
+                emit(
+                    f"fig6_13/measured_cpu/{prec}gemm/{execution}"
+                    f"/mesh{mesh_name}/{mode}/{s}",
+                    us,
+                    f"tflops_aggregate={agg:.4f}"
+                    f";tflops_per_device={agg / n_dev:.4f}",
+                )
+                if records is not None:
+                    records.append({
+                        "name": f"{prec}gemm/{mode}/{s}",
+                        "execution": execution,
+                        "mesh": mesh_name,
+                        "devices": n_dev,
+                        "us_per_call": us,
+                        "tflops_aggregate": agg,
+                        "tflops_per_device": agg / n_dev,
+                    })
 
 
 def run():
@@ -221,9 +240,14 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes (CI: proves the path end-to-end)")
     ap.add_argument("--execution", default="reference",
-                    choices=["reference", "kernel", "sharded", "fp8"],
+                    choices=["reference", "kernel", "sharded", "fp8",
+                             "fused"],
                     help="residue backend the measured section times "
-                         "(fp8: the e4m3 digit-GEMM engine)")
+                         "(fp8: the e4m3 digit-GEMM engine; fused: the "
+                         "one-launch megakernel)")
+    ap.add_argument("--force", action="store_true",
+                    help="allow --json to drop existing records it cannot "
+                         "key-match (foreign/older record schema)")
     ap.add_argument("--residue", type=int, default=1,
                     help="residue mesh-axis size (sharded execution)")
     ap.add_argument("--mesh", default=None,
@@ -240,19 +264,41 @@ def main():
         sizes, args.execution, args.residue, args.mesh, records
     )
     if args.json:
-        # Accumulate keyed by execution: a kernel run must not clobber the
-        # fp8 run's records (or vice versa) — BENCH_throughput.json tracks
-        # the int8-vs-fp8 (and sharded) trajectories side by side.  Only the
-        # re-measured execution's records are replaced.
+        # Accumulate keyed by the full measurement config: a record is
+        # replaced only when this run re-measured its exact
+        # (execution, mesh, devices, name) key — a kernel run must not
+        # clobber the fused/fp8/sharded runs, and a 2x2-mesh run must not
+        # clobber the 1x8 trajectory of the same execution.  Records whose
+        # key cannot be read (foreign or pre-key schema) are never dropped
+        # silently: that refuses with a hint unless --force.
+        def _key(r):
+            try:
+                return (r["execution"], r["mesh"], r["devices"], r["name"])
+            except (KeyError, TypeError):
+                return None
+
+        new_keys = {_key(r) for r in records}
         kept: list = []
         try:
             with open(args.json) as f:
-                kept = [
-                    r for r in json.load(f).get("records", [])
-                    if r.get("execution") != args.execution
-                ]
-        except (OSError, ValueError):
-            pass
+                old = json.load(f).get("records", [])
+        except FileNotFoundError:
+            old = []
+        except (OSError, ValueError) as e:
+            raise SystemExit(
+                f"--json target {args.json!r} exists but is unreadable "
+                f"({e}); refusing to overwrite — fix or remove it, or "
+                f"point --json elsewhere"
+            )
+        unkeyed = [r for r in old if _key(r) is None]
+        if unkeyed and not args.force:
+            raise SystemExit(
+                f"--json target {args.json!r} holds {len(unkeyed)} records "
+                "without an (execution, mesh, devices, name) key; refusing "
+                "to silently overwrite them — re-run with --force to drop, "
+                "or point --json at a fresh file"
+            )
+        kept = [r for r in old if _key(r) is not None and _key(r) not in new_keys]
         with open(args.json, "w") as f:
             json.dump({"records": kept + records}, f, indent=1)
     # CI contract: the run must produce finite nonzero throughput records

@@ -208,10 +208,11 @@ class Fp8Backend:
     The first non-int8 engine through the residue-backend protocol: casts
     and Garner reconstruction are shared with the batched int8 kernel path
     (delegated to `KernelBackend`, so the plane layout and f32 quantization
-    grade are identical), only `residue_matmul` runs on the fp8 engine and
-    `karatsuba` is composed from it (3 fp8 products — no fused variant yet,
-    declared via ``fused_karatsuba = False`` so the perfmodel-driven 'auto'
-    selections charge the right launch count).  The digit split is exact,
+    grade are identical), only the products run on the fp8 engine:
+    `residue_matmul` as one batched digit-triple launch and `karatsuba` as
+    the fused D/E/F digit kernel (one launch per K-chunk, declared via
+    ``fused_karatsuba = True`` so the perfmodel-driven 'auto' selections
+    charge the right launch count).  The digit split is exact,
     hence the whole pipeline is **bitwise identical** to
     ``execution="kernel"`` — what changes is the engine the MACs run on and
     therefore the `perfmodel` pricing (``engine = "fp8"``: 4 digit-MAC
@@ -226,7 +227,7 @@ class Fp8Backend:
     interpret: bool | None = None
 
     # capability flags consulted by the perfmodel-driven 'auto' selections
-    fused_karatsuba = False
+    fused_karatsuba = True
     modulus_batched = True
     engine = "fp8"
 
@@ -267,8 +268,26 @@ class Fp8Backend:
         )
 
     def karatsuba(self, arr, ari, brr, bri, ctx):
-        """Composed Karatsuba (3 fp8 residue products, paper eq. 10)."""
-        return _composed_karatsuba(self, arr, ari, brr, bri, ctx)
+        """Fused fp8 Karatsuba: the D/E/F digit triples all run in ONE
+        launch per K-chunk (`fp8_karatsuba_mod_gemm_batched`, 9 f32
+        accumulators in VMEM) instead of 3 composed products with host
+        combines — bitwise identical, chunked at the fp8 digit bound."""
+        from ..kernels.fp8_mod_gemm import (
+            FP8_K_CHUNK_LIMIT,
+            fp8_karatsuba_mod_gemm_batched,
+        )
+
+        return chunked_residue_matmul(
+            lambda a, b, carry: fp8_karatsuba_mod_gemm_batched(
+                a[0], a[1], b[0], b[1],
+                moduli=ctx.moduli, carry=carry, interpret=self.interpret,
+            ),
+            (arr, ari),
+            (brr, bri),
+            ctx,
+            carry_epilogue=True,
+            chunk_limit=FP8_K_CHUNK_LIMIT,
+        )
 
 
 # ------------------------------------------------- composed complex embeds
@@ -323,9 +342,35 @@ def _blocked_pipeline_real(plan, backend, ctx, e_mu, ares, e_nu, bres_slice, n):
 
     `bres_slice(sl)` yields the B-side residues for one block — freshly cast
     by the executor, or sliced out of a `PreparedOperand`.
+
+    Backends exposing the `psum_partial`/`psum_combine` hooks (the sharded
+    worker with a sharded residue axis) get the overlap-friendly two-phase
+    structure: every block's residue product is issued before ANY partial is
+    psummed, then ONE collective reduces the collected partial pytree, then
+    the reconstructions run — so the collective is no longer serialized
+    between consecutive blocks' products and XLA's async collectives can
+    hide it behind them.  Bitwise identical (a pytree psum is the same
+    per-leaf psum of exact f64 integer partials).
     """
+    psum_partial = getattr(backend, "psum_partial", None)
+    slices = list(plan.n_block_slices(n))
+    if psum_partial is not None:
+        partials = [
+            psum_partial(backend.residue_matmul(ares, bres_slice(sl), ctx))
+            for sl in slices
+        ]
+        planes = backend.psum_combine(partials)
+        blocks = [
+            backend.reconstruct_post(
+                e_r, e_mu, e_nu[sl], ctx, plan.method, plan.real_out_dtype
+            )
+            for e_r, sl in zip(planes, slices)
+        ]
+        return (
+            blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks, axis=1)
+        )
     blocks = []
-    for sl in plan.n_block_slices(n):
+    for sl in slices:
         e_r = backend.residue_matmul(ares, bres_slice(sl), ctx)
         blocks.append(
             backend.reconstruct(
@@ -339,14 +384,147 @@ def _blocked_pipeline_complex(
     plan, backend, ctx, e_mu, arr, ari, e_nu, bres_slice, n
 ):
     """Complex twin of `_blocked_pipeline_real`; `bres_slice(sl)` yields the
-    (brr, bri) residue pair for one output-column block."""
+    (brr, bri) residue pair for one output-column block.  The two-phase
+    psum hooks apply to the stacked CR/CI partials the same way."""
     rdt = plan.real_out_dtype
+    psum_partial = getattr(backend, "psum_partial", None)
+    slices = list(plan.n_block_slices(n))
+    if psum_partial is not None:
+        partials = []
+        for sl in slices:
+            brr, bri = bres_slice(sl)
+            er, ei = _complex_product(backend, plan, arr, ari, brr, bri, ctx)
+            partials.append(psum_partial(jnp.stack([er, ei])))
+        planes = backend.psum_combine(partials, stacked=True)
+        blocks = []
+        for full, sl in zip(planes, slices):
+            out = backend.reconstruct_post_stack(
+                full, e_mu, e_nu[sl], ctx, plan.method, rdt
+            )
+            blocks.append(jax.lax.complex(out[0], out[1]))
+        return (
+            blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks, axis=1)
+        )
     blocks = []
-    for sl in plan.n_block_slices(n):
+    for sl in slices:
         brr, bri = bres_slice(sl)
         er, ei = _complex_product(backend, plan, arr, ari, brr, bri, ctx)
         cr, ci = _reconstruct_pair(
             backend, er, ei, e_mu, e_nu[sl], ctx, plan.method, rdt
+        )
+        blocks.append(jax.lax.complex(cr, ci))
+    return blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks, axis=1)
+
+
+# ------------------------------------------------------- fused megakernel
+
+
+def _fused_pipeline_real(plan, backend, ctx, e_mu, a, e_nu, b_slice,
+                         b_res_slice, n):
+    """Real pipeline on a megakernel backend: ONE `fused_gemm` launch per
+    output-column block (cast prologue + products + Garner epilogue all
+    in-kernel).  `b_slice(sl)` yields the raw B block, or `b_res_slice(sl)`
+    the pre-cast (N, k, n_blk) planes of a prepared operand."""
+    blocks = []
+    for sl in plan.n_block_slices(n):
+        if b_res_slice is not None:
+            out = backend.fused_gemm(
+                a, None, e_mu, e_nu[sl], ctx, plan.n_limbs,
+                plan.real_out_dtype, b_res=b_res_slice(sl),
+            )
+        else:
+            out = backend.fused_gemm(
+                a, b_slice(sl), e_mu, e_nu[sl], ctx, plan.n_limbs,
+                plan.real_out_dtype,
+            )
+        blocks.append(out)
+    return blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks, axis=1)
+
+
+def _fused_complex_block(
+    backend, plan, ctx, e_mu, ar, ai, e_nu_sl, b_blk, b_res_blk, nl, rdt
+):
+    """One output-column block of the fused complex pipeline -> (cr, ci).
+
+    'karatsuba' runs the fused complex megakernel directly.  The block
+    embeddings (paper eqs. 7/8) embed the RAW operands (or, prepared, the
+    int8 residue planes) and run the real megakernel once: the residue cast
+    commutes bitwise with negation (trunc and round are symmetric), so
+    cast(-AI) equals the composed path's negated int8 planes exactly.
+    """
+    if plan.formulation == "karatsuba":
+        if b_res_blk is not None:
+            return backend.fused_karatsuba_gemm(
+                ar, ai, None, None, e_mu, e_nu_sl, ctx, nl, rdt,
+                b_res=b_res_blk,
+            )
+        return backend.fused_karatsuba_gemm(
+            ar, ai, b_blk[0], b_blk[1], e_mu, e_nu_sl, ctx, nl, rdt
+        )
+    if plan.formulation == "block_a":
+        # eq. (7): [[AR,-AI],[AI,AR]] @ [BR;BI] = [CR;CI]
+        ahat = jnp.concatenate(
+            [
+                jnp.concatenate([ar, -ai], axis=-1),
+                jnp.concatenate([ai, ar], axis=-1),
+            ],
+            axis=-2,
+        )
+        ehat = jnp.concatenate([e_mu, e_mu])
+        if b_res_blk is not None:
+            chat = backend.fused_gemm(
+                ahat, None, ehat, e_nu_sl, ctx, nl, rdt,
+                b_res=jnp.concatenate(b_res_blk, axis=-2),
+            )
+        else:
+            bhat = jnp.concatenate(b_blk, axis=-2)
+            chat = backend.fused_gemm(ahat, bhat, ehat, e_nu_sl, ctx, nl, rdt)
+        m = ar.shape[-2]
+        return chat[..., :m, :], chat[..., m:, :]
+    if plan.formulation == "block_b":
+        # eq. (8): [AI,AR] @ [[BR,-BI],[BI,BR]] = [CI,CR]
+        ahat = jnp.concatenate([ai, ar], axis=-1)
+        ehat_nu = jnp.concatenate([e_nu_sl, e_nu_sl])
+        if b_res_blk is not None:
+            brr, bri = b_res_blk
+            bhat = jnp.concatenate(
+                [
+                    jnp.concatenate([brr, bri], axis=-2),
+                    jnp.concatenate([-bri, brr], axis=-2),
+                ],
+                axis=-1,
+            )
+            chat = backend.fused_gemm(
+                ahat, None, e_mu, ehat_nu, ctx, nl, rdt, b_res=bhat
+            )
+        else:
+            br, bi = b_blk
+            bhat = jnp.concatenate(
+                [
+                    jnp.concatenate([br, bi], axis=-2),
+                    jnp.concatenate([-bi, br], axis=-2),
+                ],
+                axis=-1,
+            )
+            chat = backend.fused_gemm(ahat, bhat, e_mu, ehat_nu, ctx, nl, rdt)
+        n = chat.shape[-1] // 2
+        return chat[..., :, n:], chat[..., :, :n]
+    raise ValueError(f"unknown formulation {plan.formulation!r}")
+
+
+def _fused_pipeline_complex(
+    plan, backend, ctx, e_mu, ar, ai, e_nu, b_slice, b_res_slice, n
+):
+    """Complex pipeline on a megakernel backend: one launch per block."""
+    nl = plan.n_limbs
+    rdt = plan.real_out_dtype
+    blocks = []
+    for sl in plan.n_block_slices(n):
+        b_blk = None if b_res_slice is not None else b_slice(sl)
+        b_res_blk = b_res_slice(sl) if b_res_slice is not None else None
+        cr, ci = _fused_complex_block(
+            backend, plan, ctx, e_mu, ar, ai, e_nu[sl], b_blk, b_res_blk,
+            nl, rdt,
         )
         blocks.append(jax.lax.complex(cr, ci))
     return blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks, axis=1)
@@ -370,6 +548,13 @@ def _execute_real(plan, a, b, backend):
         rc, cc = _accu_combines(backend)
         e_mu, e_nu = scaling.scale_accurate_real(a, b, ctx, rc, cc)
     nl = plan.n_limbs
+    if getattr(backend, "megakernel", False):
+        # fast AND accu mode: the scaling pass above is pallas-free, so the
+        # whole emulated GEMM is the megakernel's single launch per block
+        return _fused_pipeline_real(
+            plan, backend, ctx, e_mu, a, e_nu,
+            lambda sl: b[:, sl], None, b.shape[1],
+        )
     ares = backend.cast(a, e_mu, 0, ctx, nl)
     return _blocked_pipeline_real(
         plan, backend, ctx, e_mu, ares, e_nu,
@@ -388,6 +573,11 @@ def _execute_complex(plan, a, b, backend):
         rc, cc = _accu_combines(backend)
         e_mu, e_nu = scaling.scale_accurate_complex(ar, ai, br, bi, ctx, rc, cc)
     nl = plan.n_limbs
+    if getattr(backend, "megakernel", False):
+        return _fused_pipeline_complex(
+            plan, backend, ctx, e_mu, ar, ai, e_nu,
+            lambda sl: (br[:, sl], bi[:, sl]), None, b.shape[1],
+        )
     arr, ari = _cast_pair(backend, ar, ai, e_mu, 0, ctx, nl)
     return _blocked_pipeline_complex(
         plan, backend, ctx, e_mu, arr, ari, e_nu,
@@ -667,15 +857,22 @@ def _gemm_prepared_accu(prep, x, plan, backend):
             e_mu, e_nu = scaling.accu_exponents(
                 cmax, e_pbar, e_xbar, p_nz, x_nz, ctx
             )
-            arr, ari = _cast_pair(backend, wr, wi, e_mu, 0, ctx, nl)
+            ar_, ai_ = wr, wi
             br_, bi_ = xr, xi
         else:
             cmax = scaling.accu_cbar_complex(xbar, pbar)
             e_mu, e_nu = scaling.accu_exponents(
                 cmax, e_xbar, e_pbar, x_nz, p_nz, ctx
             )
-            arr, ari = _cast_pair(backend, xr, xi, e_mu, 0, ctx, nl)
+            ar_, ai_ = xr, xi
             br_, bi_ = wr, wi
+        if getattr(backend, "megakernel", False):
+            # accu re-casts from raw anyway, so the fused prologue applies
+            return _fused_pipeline_complex(
+                plan, backend, ctx, e_mu, ar_, ai_, e_nu,
+                lambda sl: (br_[:, sl], bi_[:, sl]), None, br_.shape[1],
+            )
+        arr, ari = _cast_pair(backend, ar_, ai_, e_mu, 0, ctx, nl)
         return _blocked_pipeline_complex(
             plan, backend, ctx, e_mu, arr, ari, e_nu,
             lambda sl: _cast_pair(
@@ -701,6 +898,11 @@ def _gemm_prepared_accu(prep, x, plan, backend):
             cbar, e_xbar, e_pbar, x_nz, p_nz, ctx
         )
         a_, b_ = x, prep.raw
+    if getattr(backend, "megakernel", False):
+        return _fused_pipeline_real(
+            plan, backend, ctx, e_mu, a_, e_nu,
+            lambda sl: b_[:, sl], None, b_.shape[1],
+        )
     ares = backend.cast(a_, e_mu, 0, ctx, nl)
     return _blocked_pipeline_real(
         plan, backend, ctx, e_mu, ares, e_nu,
@@ -763,6 +965,7 @@ def gemm_prepared(
         fused_karatsuba=getattr(backend, "fused_karatsuba", False),
         modulus_batched=getattr(backend, "modulus_batched", False),
         engine=getattr(backend, "engine", "int8"),
+        megakernel=getattr(backend, "megakernel", False),
     )
     nl = prep.n_limbs
     other_side = "left" if prep.side == "right" else "right"
@@ -778,6 +981,13 @@ def gemm_prepared(
             "with prepare_weights(fast policy)"
         )
 
+    # the fused megakernel casts the streaming side in its prologue and
+    # consumes the prepared side's planes directly — one launch per block.
+    # A LEFT-prepared fast operand stores planes but no raw matrix, and the
+    # megakernel prologue needs the raw A tile, so side='left' falls through
+    # to the composed kernel path the megakernel backend inherits.
+    fused = getattr(backend, "megakernel", False) and prep.side == "right"
+
     if prep.is_complex:
         xr, xi = jnp.real(x), jnp.imag(x)
         e_other = _solo_scale_complex(xr, xi, ctx, other_side)
@@ -789,6 +999,11 @@ def gemm_prepared(
             )
         else:
             e_mu, e_nu = e_other, prep.e_scale
+            if fused:
+                return _fused_pipeline_complex(
+                    plan, backend, ctx, e_mu, xr, xi, e_nu, None,
+                    lambda sl: tuple(r[..., sl] for r in prep.residues), n,
+                )
             arr, ari = _cast_pair(backend, xr, xi, e_mu, 0, ctx, nl)
             bres_slice = lambda sl: tuple(  # noqa: E731
                 r[..., sl] for r in prep.residues
@@ -805,6 +1020,11 @@ def gemm_prepared(
         )
     else:
         e_mu, e_nu = e_other, prep.e_scale
+        if fused:
+            return _fused_pipeline_real(
+                plan, backend, ctx, e_mu, x, e_nu, None,
+                lambda sl: prep.res[..., sl], n,
+            )
         ares = backend.cast(x, e_mu, 0, ctx, nl)
         bres_slice = lambda sl: prep.res[..., sl]  # noqa: E731
     return _blocked_pipeline_real(

@@ -210,6 +210,7 @@ def formulation_time_s(
     prec: str = "z",
     karatsuba_launches: int = 3,
     modulus_batched: bool = False,
+    megakernel: bool = False,
     comm_s: float = 0.0,
     engine: str = "int8",
 ) -> float:
@@ -224,7 +225,12 @@ def formulation_time_s(
     reference path, 1 when the backend fuses the D/E/F triple into one
     kernel (`kernels/karatsuba_fused.py`).  `modulus_batched` collapses the
     per-modulus launch factor to 1 (the batched kernels run all N planes in
-    one grid), leaving only the op/byte terms to scale with N.  `comm_s` is
+    one grid), leaving only the op/byte terms to scale with N.  `megakernel`
+    (the `execution='fused'` single-launch path) collapses the launch term of
+    *every* strategy to exactly one `GEMM_LAUNCH_S` — cast, products and
+    reconstruction share one kernel — so the selection degenerates to the
+    op/byte terms (the block embeddings still pay their HBM embed traffic
+    and 8N-vs-6N op volume).  `comm_s` is
     the sharded execution's collective cost (`sharded_comm_time_s`, charged
     on the per-shard shape the caller passes) — the same for every strategy
     today, but kept in the totals so sharded 'auto' selections model what
@@ -237,6 +243,8 @@ def formulation_time_s(
     launch_planes = 1 if modulus_batched else neff
     base = complex_time_s(m, n, k, n_moduli, hw, mode, prec, engine=engine) + comm_s
     if formulation == "karatsuba":
+        if megakernel:
+            return base + GEMM_LAUNCH_S
         return base + karatsuba_launches * launch_planes * GEMM_LAUNCH_S
     # 8N mnk vs the model's 6N, charged at the engine's effective rate
     extra_ops = (
@@ -249,9 +257,10 @@ def formulation_time_s(
         embed_bytes = 2 * neff * (2 * m * k + 4 * k * n)
     else:
         raise ValueError(f"unknown formulation {formulation!r}")
+    launches = 1 if megakernel else launch_planes
     return (
         base + extra_ops + embed_bytes / hw.mem_bw
-        + launch_planes * GEMM_LAUNCH_S
+        + launches * GEMM_LAUNCH_S
     )
 
 
@@ -265,6 +274,7 @@ def select_formulation(
     prec: str = "z",
     karatsuba_launches: int = 3,
     modulus_batched: bool = False,
+    megakernel: bool = False,
     comm_s: float = 0.0,
     engine: str = "int8",
 ) -> str:
@@ -273,13 +283,14 @@ def select_formulation(
     callers pass per-shard (m, n) and their `sharded_comm_time_s` so the
     launch-vs-compute crossover reflects the local problem each shard runs;
     fp8 policies pass ``engine="fp8"`` so the crossover reflects the e4m3
-    engine's op volume and rate.
+    engine's op volume and rate; megakernel (`execution='fused'`) policies
+    charge one launch per strategy, so only op/byte terms differentiate.
     """
     return min(
         ("karatsuba", "block_a", "block_b"),
         key=lambda f: formulation_time_s(
             f, m, n, k, n_moduli, hw, mode, prec,
-            karatsuba_launches, modulus_batched, comm_s, engine,
+            karatsuba_launches, modulus_batched, megakernel, comm_s, engine,
         ),
     )
 
@@ -338,6 +349,7 @@ def kernel_launch_count(
     n_chunks: int = 1,
     n_blocks: int = 1,
     prepared: bool = False,
+    fused: bool = False,
 ) -> int:
     """Pallas-launch count of one emulated GEMM on the kernel path.
 
@@ -349,9 +361,24 @@ def kernel_launch_count(
     reconstructions, and 3x on unfused Karatsuba.  `prepared=True` drops the
     weight-side cast entirely (its residue planes were cast once up front by
     `prepare_weights` / `PreparedOperand` — the serving fast path), leaving
-    cast + product + reconstruct = 3 launches per GEMM.  Asserted against
-    the actually-traced jaxpr in tests and the CI smoke benchmark.
+    cast + product + reconstruct = 3 launches per GEMM.
+
+    `fused=True` is the `execution='fused'` megakernel: the residue casts
+    run as the kernel prologue, Garner reconstruction as its epilogue, and
+    the K-chunk carry loop becomes an in-kernel grid dimension — so the
+    whole GEMM is exactly one `pallas_call` per output-column block,
+    regardless of n_moduli, mode, formulation or K-chunking:
+
+        path                    batched kernel      fused megakernel
+        fast real/complex       4  (2+1+1)          1
+        prepared fast (right)   3  (1+1+1)          1
+        K-chunked (c chunks)    3 + c               1
+
+    Asserted against the actually-traced jaxpr in tests and the CI smoke
+    benchmark.
     """
+    if fused:
+        return n_blocks
     planes = 1 if modulus_batched else n_moduli
     complex_ = formulation != "real"
     per_part = 1 if modulus_batched else 2  # real+imag stacked vs separate

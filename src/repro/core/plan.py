@@ -120,6 +120,7 @@ def make_plan(
     hw=None,
     fused_karatsuba: bool = False,
     modulus_batched: bool = False,
+    megakernel: bool = False,
     comm_s: float = 0.0,
     engine: str = "int8",
 ) -> EmulationPlan:
@@ -137,6 +138,10 @@ def make_plan(
     modulus_batched: the executing backend folds all N residue planes into
       one kernel grid (`kernels` batched path) — the 'auto' selection then
       charges each product strategy a single launch instead of N.
+    megakernel: the executing backend fuses cast + products + reconstruction
+      into a single launch per GEMM (`execution='fused'`) — the 'auto'
+      selection then charges every formulation exactly one launch, so the
+      choice degenerates to the compute/memory terms.
     comm_s: collective cost of a sharded execution (perfmodel
       `sharded_comm_time_s`, priced by `GemmPolicy.plan_for` on per-shard
       shapes) — folded into the 'auto' formulation totals.
@@ -165,7 +170,7 @@ def make_plan(
         if formulation == "auto":
             formulation = _auto_formulation(
                 shape, int(n_moduli), mode, dt, hw, fused_karatsuba,
-                modulus_batched, comm_s, engine,
+                modulus_batched, megakernel, comm_s, engine,
             )
         if formulation not in COMPLEX_FORMULATIONS:
             raise ValueError(f"unknown complex formulation {formulation!r}")
@@ -190,7 +195,7 @@ def make_plan(
 
 def _auto_formulation(
     shape, n_moduli, mode, dt, hw, fused_karatsuba=False,
-    modulus_batched=False, comm_s=0.0, engine="int8",
+    modulus_batched=False, megakernel=False, comm_s=0.0, engine="int8",
 ):
     from . import perfmodel
 
@@ -208,6 +213,7 @@ def _auto_formulation(
         prec=prec,
         karatsuba_launches=1 if fused_karatsuba else 3,
         modulus_batched=modulus_batched,
+        megakernel=megakernel,
         comm_s=comm_s,
         engine=engine,
     )

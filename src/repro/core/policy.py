@@ -24,16 +24,27 @@ became the seam for every execution target — *where* to run it:
                                     "kernel" but priced at the e4m3 rate
                                     (`kernels/fp8_mod_gemm.py`,
                                     arXiv:2603.10634)
+    execution="fused"               the one-launch megakernel: residue casts
+                                    as the kernel prologue, Garner
+                                    reconstruction as its epilogue, K-chunk
+                                    carries in-kernel — a fast-mode GEMM is
+                                    exactly one `pallas_call`, bitwise
+                                    identical to "kernel".  With an ambient
+                                    `use_mesh` (or pinned ``mesh=``) the
+                                    fused worker runs under the sharded
+                                    pipeline (m/n sharding; residue-sharded
+                                    meshes fall back to the composed worker)
 
 The sharded execution needs a mesh: pin it on the policy (``mesh=``) or
 scope a thread-local default with :func:`use_mesh` (also reachable as
 ``repro.use_mesh`` and via ``repro.use_policy(policy, mesh=...)``).
 ``shard_axes`` optionally overrides the (residue, m, n) mesh-axis names.
 
-Future backends (ROADMAP: megakernel) plug in as new ``execution`` values
-resolved by :meth:`GemmPolicy.execution_backend`; the plan/executor layer
+Execution targets plug in as new ``execution`` values resolved by
+:meth:`GemmPolicy.execution_backend`; the plan/executor layer
 (`core/plan.py` + `core/executor.py`) is backend-agnostic — the fp8 engine
-is the existence proof that the protocol generalizes beyond int8.
+and the fused megakernel are the existence proofs that the protocol
+generalizes beyond per-stage int8 kernels.
 
 User code normally does not call this module directly: `repro.linalg.matmul`
 is the drop-in entry point, scoped by `repro.use_policy(policy)` — the
@@ -84,10 +95,12 @@ Backend = Literal[
 ]
 
 Execution = Literal[
-    "reference", "kernel", "per_modulus_kernel", "sharded", "fp8"
+    "reference", "kernel", "per_modulus_kernel", "sharded", "fp8", "fused"
 ]
 
-EXECUTIONS = ("reference", "kernel", "per_modulus_kernel", "sharded", "fp8")
+EXECUTIONS = (
+    "reference", "kernel", "per_modulus_kernel", "sharded", "fp8", "fused"
+)
 
 
 # ------------------------------------------------- thread-local default mesh
@@ -190,7 +203,8 @@ class GemmPolicy:
     ``execution``
         *Where to run it* — the residue backend: ``"reference"`` |
         ``"kernel"`` | ``"per_modulus_kernel"`` | ``"sharded"`` | ``"fp8"``
-        (see module docstring; resolved by :meth:`execution_backend`).
+        | ``"fused"`` (see module docstring; resolved by
+        :meth:`execution_backend`).
     ``interpret``
         Forces/forbids Pallas interpret mode for the kernel executions
         (None = auto: interpret off-TPU).
@@ -298,6 +312,19 @@ class GemmPolicy:
             from .executor import Fp8Backend
 
             return Fp8Backend(bool(interp))
+        if self.execution == "fused":
+            from ..kernels.ops import FusedBackend
+
+            be = FusedBackend(bool(interp))
+            # optional-mesh: inside a use_mesh scope (or with mesh= pinned)
+            # the fused worker runs under the sharded pipeline; without one
+            # it is the plain single-device megakernel
+            mesh = self.mesh if self.mesh is not None else current_mesh()
+            if mesh is not None:
+                from ..distributed.sharded_gemm import ShardedBackend
+
+                return ShardedBackend(be, mesh, self.shard_axes)
+            return be
         cls = (
             KernelBackend
             if self.execution == "kernel"
@@ -339,6 +366,7 @@ class GemmPolicy:
             shape=shape,
             fused_karatsuba=getattr(be, "fused_karatsuba", False),
             modulus_batched=getattr(be, "modulus_batched", False),
+            megakernel=getattr(be, "megakernel", False),
             comm_s=comm_s,
             engine=getattr(be, "engine", "int8"),
         )
@@ -437,11 +465,16 @@ def policy_matmul(x: jnp.ndarray, w, policy: GemmPolicy) -> jnp.ndarray:
             )
         if w.side != "right":
             raise ValueError("policy_matmul expects a side='right' prepared weight")
-        if policy.execution == "sharded":
-            raise ValueError(
-                "prepared weights are not supported under execution="
-                "'sharded' yet (the prepared planes live unsharded); run "
-                "prepared serving on execution='kernel' or pass raw weights"
+        if policy.execution == "sharded" or (
+            policy.execution == "fused"
+            and (policy.mesh is not None or current_mesh() is not None)
+        ):
+            raise NotImplementedError(
+                "prepared weights are not supported under a sharded "
+                "execution yet (the prepared residue planes live unsharded "
+                "on one device); serve prepared weights with GemmPolicy("
+                "execution='kernel') or execution='fused' outside any mesh "
+                "scope, or pass raw weights to shard this matmul"
             )
         if policy.mode == "accu" and w.raw is None:
             raise ValueError(
@@ -495,11 +528,15 @@ def prepare_weights(params, policy: GemmPolicy):
     """
     if policy.backend == "native":
         return params
-    if policy.execution == "sharded":
-        raise ValueError(
-            "prepare_weights under execution='sharded' is not supported yet "
+    if policy.execution == "sharded" or (
+        policy.execution == "fused"
+        and (policy.mesh is not None or current_mesh() is not None)
+    ):
+        raise NotImplementedError(
+            "prepare_weights under a sharded execution is not supported yet "
             "(prepared planes live unsharded); prepare with "
-            "execution='kernel' or serve unprepared"
+            "execution='kernel' — or 'fused' outside any mesh scope — "
+            "and serve on that policy, or serve unprepared"
         )
     if policy.mode not in ("fast", "accu"):
         raise ValueError(f"unknown mode {policy.mode!r}")

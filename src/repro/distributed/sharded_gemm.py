@@ -79,6 +79,7 @@ class _ShardWorker:
 
     def __init__(self, inner, ctx: CRTContext, axes: GemmShardAxes, mesh: Mesh):
         self.inner = inner
+        self.ctx = ctx
         self.axes = axes
         self.r = mesh.shape[axes.residue] if axes.residue is not None else 1
         # mirror the stacked-launch capabilities so the executor's
@@ -87,6 +88,23 @@ class _ShardWorker:
             self.cast_stack = self._cast_stack
         if hasattr(inner, "reconstruct_stack"):
             self.reconstruct_stack = self._reconstruct_stack
+        # megakernel inners run fused per-shard when every shard holds ALL
+        # residue planes (r == 1: the moduli stay compile-time static, which
+        # the fused Garner epilogue requires); with a sharded residue axis
+        # the worker falls back to the composed primitives + the two-phase
+        # psum hooks below (the Garner table cannot take a dynamic chunk).
+        self.megakernel = self.r == 1 and getattr(inner, "megakernel", False)
+        if self.megakernel:
+            self.fused_gemm = inner.fused_gemm
+            self.fused_karatsuba_gemm = inner.fused_karatsuba_gemm
+        if self.r > 1:
+            # overlap hooks: the executor issues every block's product, then
+            # ONE psum of the collected partial pytree (async-friendly),
+            # then the per-block reconstructions
+            self.psum_partial = self._psum_partial
+            self.psum_combine = self._psum_combine
+            self.reconstruct_post = self._reconstruct_post
+            self.reconstruct_post_stack = self._reconstruct_post_stack
         # accurate-mode bound maxima must cover the full row/column
         if axes.n is not None:
             self.accu_row_combine = lambda v: lax.pmax(v, axes.n)
@@ -217,6 +235,47 @@ class _ShardWorker:
         planes = crt.residues_from_partial(jnp.moveaxis(t, 0, 1), ctx)
         return jnp.moveaxis(planes, 0, 1)
 
+    # -- two-phase psum hooks (r > 1): the executor's blocked pipelines
+    # issue ALL blocks' products before any collective, psum the collected
+    # partial pytree ONCE, then rebuild + reconstruct per block — so the
+    # only cross-device traffic of the pipeline is one async-overlappable
+    # collective instead of one serialized psum between consecutive blocks.
+    # Bitwise identical to the per-block `_full_planes` route: a pytree
+    # psum is the same per-leaf reduction of exact f64 integer partials.
+
+    def _psum_partial(self, e_res):
+        """Local (.., N_loc, m, n) plane chunk -> exact f64 partial planes
+        (NO collective — collected by the executor across blocks)."""
+        return crt.partial_combine(e_res, self.u_loc)
+
+    def _psum_combine(self, partials, stacked: bool = False):
+        """ONE psum of all blocks' partials, then rebuild the COMPLETE
+        (.., N, m, n) residue planes of every block locally."""
+        partials = lax.psum(partials, self.axes.residue)
+        out = []
+        for t in partials:
+            if stacked:
+                planes = crt.residues_from_partial(
+                    jnp.moveaxis(t, 0, 1), self.ctx
+                )
+                out.append(jnp.moveaxis(planes, 0, 1))
+            else:
+                out.append(crt.residues_from_partial(t, self.ctx))
+        return out
+
+    def _reconstruct_post(self, e_res, e_mu, e_nu, ctx, method, out_dtype):
+        """Reconstruct from already-complete planes (post `psum_combine`)."""
+        return self.inner.reconstruct(e_res, e_mu, e_nu, ctx, method, out_dtype)
+
+    def _reconstruct_post_stack(self, e_res, e_mu, e_nu, ctx, method, out_dtype):
+        rec = getattr(self.inner, "reconstruct_stack", None)
+        if rec is None:
+            return (
+                self.inner.reconstruct(e_res[0], e_mu, e_nu, ctx, method, out_dtype),
+                self.inner.reconstruct(e_res[1], e_mu, e_nu, ctx, method, out_dtype),
+            )
+        return rec(e_res, e_mu, e_nu, ctx, method, out_dtype)
+
     def reconstruct(self, e_res, e_mu, e_nu, ctx, method, out_dtype):
         if self.r > 1:
             e_res = self._full_planes(e_res, ctx, stacked=False)
@@ -252,6 +311,12 @@ class ShardedBackend:
     @property
     def modulus_batched(self) -> bool:
         return getattr(self.inner, "modulus_batched", False)
+
+    @property
+    def megakernel(self) -> bool:
+        # advertised for plan pricing; per-shard workers actually run fused
+        # only when the residue axis is unsharded (r == 1, static moduli)
+        return getattr(self.inner, "megakernel", False)
 
     def resolve_axes(self, m: int, n: int) -> GemmShardAxes:
         return resolve_gemm_axes(self.mesh, m, n, self.shard_axes)

@@ -4,10 +4,19 @@ mode on CPU; see tests/test_kernels.py for the per-kernel allclose sweeps).
 from .common import count_pallas_launches
 from .crt_garner import crt_garner
 from .flash_attention import flash_attention
-from .fp8_mod_gemm import FP8_K_CHUNK_LIMIT, fp8_mod_gemm_batched
-from .int8_mod_gemm import int8_mod_gemm, int8_mod_gemm_batched
-from .karatsuba_fused import karatsuba_mod_gemm, karatsuba_mod_gemm_batched
+from .fp8_mod_gemm import (
+    FP8_K_CHUNK_LIMIT,
+    fp8_karatsuba_mod_gemm_batched,
+    fp8_mod_gemm_batched,
+)
+from .int8_mod_gemm import fused_mod_gemm, int8_mod_gemm, int8_mod_gemm_batched
+from .karatsuba_fused import (
+    fused_karatsuba_mod_gemm,
+    karatsuba_mod_gemm,
+    karatsuba_mod_gemm_batched,
+)
 from .ops import (
+    FusedBackend,
     KernelBackend,
     PerModulusKernelBackend,
     ozaki2_cgemm_kernels,
@@ -17,12 +26,16 @@ from .residue_cast import residue_cast
 
 __all__ = [
     "FP8_K_CHUNK_LIMIT",
+    "FusedBackend",
     "KernelBackend",
     "PerModulusKernelBackend",
     "count_pallas_launches",
     "crt_garner",
     "flash_attention",
+    "fp8_karatsuba_mod_gemm_batched",
     "fp8_mod_gemm_batched",
+    "fused_karatsuba_mod_gemm",
+    "fused_mod_gemm",
     "int8_mod_gemm",
     "int8_mod_gemm_batched",
     "karatsuba_mod_gemm",

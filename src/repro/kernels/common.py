@@ -76,6 +76,60 @@ def sym_mod_int32_dyn(d, pf, half, m16):
     return sym_mod_f32(rh * m16 + rl, pf, half)
 
 
+def static_mod_params(p: int) -> tuple[float, float, float]:
+    """(pf, half, m16) as Python floats for a compile-time modulus.
+
+    The static twin of :func:`dyn_mod_params`: host-computed m16 is the same
+    exact symmetric residue of 2^16 mod p, so `sym_mod_int32_dyn` fed with
+    these constants is bitwise identical to the dynamic-modulus call.
+    """
+    half = (p - 1) // 2
+    m16 = pow(1 << 16, 1, p)
+    if m16 > half:
+        m16 -= p
+    return float(p), float(half), float(m16)
+
+
+def residue_tiles_f32(x, s1, s2, *, moduli, n_limbs, scale_axis):
+    """Scale -> trunc -> limb-peel -> per-modulus canonical residues, in f32.
+
+    The single implementation of Alg. 1 steps IV + V-i/ii shared by the
+    standalone residue-cast kernel and the fused megakernel prologues: both
+    run literally these ops, so their int8 planes are bitwise identical.
+
+    `x` is one (bm, bk) f32 tile; `s1*s2` the power-of-two scale factors
+    broadcast along rows (scale_axis=0) or columns (scale_axis=1).  Returns
+    a list of N (bm, bk) f32 tiles, each the exact canonical symmetric
+    residue (|r| <= (p-1)/2) ready for `.astype(jnp.int8)`.
+    """
+    if scale_axis == 0:
+        scale = (s1 * s2)[:, None]
+    else:
+        scale = (s1 * s2)[None, :]
+    x = jnp.trunc(x * scale)  # exact: power-of-two scale, f32 trunc
+
+    # exact base-2^24 limb peel (DESIGN.md S2)
+    limbs = []
+    rem = x
+    for i in reversed(range(1, n_limbs)):
+        base = LIMB**i
+        hi = jnp.trunc(rem * (1.0 / base))  # 1/2^24k is a power of two: exact
+        rem = rem - hi * base
+        limbs.append(hi)
+    limbs.append(rem)
+    limbs = limbs[::-1]
+
+    radix = limb_radix_f32(moduli, n_limbs)  # static host table
+    out = []
+    for l, p in enumerate(moduli):
+        pf, half = float(p), float((p - 1) // 2)
+        acc = jnp.zeros_like(x)
+        for i in range(n_limbs):
+            acc = acc + sym_mod_f32(limbs[i], pf, half) * float(radix[i, l])
+        out.append(sym_mod_f32(acc, pf, half))
+    return out
+
+
 def limb_radix_f32(moduli, n_limbs: int) -> np.ndarray:
     """(n_limbs, N) f32 table of symmetric 2^(24 i) mod p_l."""
     tab = np.zeros((n_limbs, len(moduli)), dtype=np.float32)

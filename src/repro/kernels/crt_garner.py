@@ -58,14 +58,25 @@ def _weight_table(ctx: CRTContext) -> np.ndarray:
     return tab
 
 
-def _kernel(e_ref, r1_ref, r2_ref, c1_ref, c2_ref, out_ref, *, ctx, out_dd):
+def garner_tile(planes, rr, cc, *, ctx, out_dd):
+    """Garner digits -> double-single value -> inverse scaling, one tile.
+
+    The single implementation of the reconstruction math shared by the
+    standalone Garner kernel and the fused megakernel epilogues: both run
+    literally these ops, so their outputs are bitwise identical.
+
+    `planes` is a list of N (bm, bn) f32 canonical residue tiles of C';
+    `rr`/`cc` the broadcast-ready inverse-scale factor products (already
+    shaped (bm, 1) / (1, bn)).  Returns the (bm, bn) f32 tile, or the
+    (hi, lo) double-single pair when `out_dd`.
+    """
     moduli = ctx.moduli
     n = ctx.n
     # --- Garner digits (exact f32 integer arithmetic, all values < 2^17) ---
     digits = []
     for t in range(n):
         pf, half = float(moduli[t]), float((moduli[t] - 1) // 2)
-        r = e_ref[0, t, :, :].astype(jnp.float32)
+        r = planes[t]
         for s in range(t):
             r = sym_mod_f32((r - digits[s]) * float(ctx.garner_inv[s, t]), pf, half)
         digits.append(r)
@@ -78,13 +89,21 @@ def _kernel(e_ref, r1_ref, r2_ref, c1_ref, c2_ref, out_ref, *, ctx, out_dd):
         pe = pe + jnp.float32(wt[t, 1]) * digits[t]
         hi, lo = ex.dd_add(hi, lo, ph, pe)
     # --- exact inverse power-of-two scaling (folds in 2^S) ---
+    if out_dd:
+        return hi * rr * cc, lo * rr * cc
+    return ((hi + lo) * rr) * cc
+
+
+def _kernel(e_ref, r1_ref, r2_ref, c1_ref, c2_ref, out_ref, *, ctx, out_dd):
+    planes = [e_ref[0, t, :, :].astype(jnp.float32) for t in range(ctx.n)]
     rr = (r1_ref[...] * r2_ref[...])[:, None]
     cc = (c1_ref[...] * c2_ref[...])[None, :]
     if out_dd:
-        out_ref[0, 0, :, :] = (hi * rr) * cc
-        out_ref[0, 1, :, :] = (lo * rr) * cc
+        hi, lo = garner_tile(planes, rr, cc, ctx=ctx, out_dd=True)
+        out_ref[0, 0, :, :] = hi
+        out_ref[0, 1, :, :] = lo
     else:
-        out_ref[0] = ((hi + lo) * rr) * cc
+        out_ref[0] = garner_tile(planes, rr, cc, ctx=ctx, out_dd=False)
 
 
 # not jitted: CRTContext holds numpy tables and is unhashable; the public

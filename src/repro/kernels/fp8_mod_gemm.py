@@ -167,6 +167,170 @@ def _batched_call(a, b, carry, mod_arr, *, bm, bn, bk, interpret):
     )(mod_arr, *operands)
 
 
+def _karatsuba_kernel(moduli_ref, ar_ref, ai_ref, br_ref, bi_ref, *rest,
+                      k_steps, has_carry):
+    if has_carry:
+        (cr_in_ref, ci_in_ref, cr_ref, ci_ref, *accs) = rest
+    else:
+        (cr_ref, ci_ref, *accs) = rest
+    d_hh, d_xx, d_ll, e_hh, e_xx, e_ll, f_hh, f_xx, f_ll = accs
+    # program_id read once at kernel top level (outside pl.when bodies)
+    pf, half, m16 = dyn_mod_params(moduli_ref, pl.program_id(0))
+
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        for acc in accs:
+            acc[...] = jnp.zeros_like(acc)
+
+    ar = ar_ref[0].astype(jnp.float32)
+    ai = ai_ref[0].astype(jnp.float32)
+    br = br_ref[0].astype(jnp.float32)
+    bi = bi_ref[0].astype(jnp.float32)
+    # (AR + AI) mod p formed in VMEM: |sum| <= 254 -> exact f32 mod
+    asum = sym_mod_f32(ar + ai, pf, half)
+    bsum = sym_mod_f32(br + bi, pf, half)
+    dot = functools.partial(
+        jax.lax.dot_general,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    def accumulate(a32, b32, hh, xx, ll):
+        ah, al = _digits(a32)
+        bh, bl = _digits(b32)
+        hh[...] += dot(ah.astype(_F8), bh.astype(_F8))
+        ll[...] += dot(al.astype(_F8), bl.astype(_F8))
+        xx[...] += dot(
+            jnp.concatenate([ah, al], axis=1).astype(_F8),
+            jnp.concatenate([bl, bh], axis=0).astype(_F8),
+        )
+
+    accumulate(ar, br, d_hh, d_xx, d_ll)
+    accumulate(ai, bi, e_hh, e_xx, e_ll)
+    accumulate(asum, bsum, f_hh, f_xx, f_ll)
+
+    @pl.when(pl.program_id(3) == k_steps - 1)
+    def _epilogue():
+        m4 = sym_mod_f32(jnp.float32(16.0), pf, half)
+        m8 = sym_mod_f32(m4 * m4, pf, half)
+
+        def combine(hh, xx, ll):
+            eh = sym_mod_int32_dyn(hh[...].astype(jnp.int32), pf, half, m16)
+            exx = sym_mod_int32_dyn(xx[...].astype(jnp.int32), pf, half, m16)
+            el = sym_mod_int32_dyn(ll[...].astype(jnp.int32), pf, half, m16)
+            return sym_mod_f32(m8 * eh + m4 * exx + el, pf, half)
+
+        dr = combine(d_hh, d_xx, d_ll)
+        de = combine(e_hh, e_xx, e_ll)
+        df = combine(f_hh, f_xx, f_ll)
+        cr = dr - de
+        ci = df - dr - de
+        if has_carry:
+            cr = cr + cr_in_ref[0].astype(jnp.float32)
+            ci = ci + ci_in_ref[0].astype(jnp.float32)
+        cr_ref[0] = sym_mod_f32(cr, pf, half).astype(jnp.int8)
+        ci_ref[0] = sym_mod_f32(ci, pf, half).astype(jnp.int8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
+)
+def _karatsuba_call(ar, ai, br, bi, carry, mod_arr, *, bm, bn, bk, interpret):
+    n_mod, m, k = ar.shape
+    n = br.shape[-1]
+    k_steps = k // bk
+    a_spec = pl.BlockSpec((1, bm, bk), lambda l, i, j, kk, mods: (l, i, kk))
+    b_spec = pl.BlockSpec((1, bk, bn), lambda l, i, j, kk, mods: (l, kk, j))
+    o_spec = pl.BlockSpec((1, bm, bn), lambda l, i, j, kk, mods: (l, i, j))
+    in_specs = [a_spec, a_spec, b_spec, b_spec]
+    operands = [ar, ai, br, bi]
+    if carry is not None:
+        in_specs += [o_spec, o_spec]
+        operands += list(carry)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_mod, m // bm, n // bn, k_steps),
+        in_specs=in_specs,
+        out_specs=(o_spec, o_spec),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)] * 9,
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _karatsuba_kernel, k_steps=k_steps, has_carry=carry is not None
+        ),
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((n_mod, m, n), jnp.int8),
+            jax.ShapeDtypeStruct((n_mod, m, n), jnp.int8),
+        ),
+        interpret=interpret,
+    )(mod_arr, *operands)
+
+
+def fp8_karatsuba_mod_gemm_batched(
+    ar: jnp.ndarray,
+    ai: jnp.ndarray,
+    br: jnp.ndarray,
+    bi: jnp.ndarray,
+    *,
+    moduli: tuple[int, ...] | jnp.ndarray,
+    carry: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool | None = None,
+):
+    """Residues of (CR', CI') = (AR'+iAI')(BR'+iBI') mod p_l on the e4m3
+    engine, all planes and all three Karatsuba products in ONE launch.
+
+    The fp8 twin of `karatsuba_mod_gemm_batched`: the D/E/F products each
+    run as the exact balanced-digit HH/X/LL triple (9 f32 accumulators in
+    VMEM), the (AR+AI)/(BR+BI) sum operands are formed per tile in VMEM, and
+    the epilogue combines digits and the Karatsuba recombination in exact
+    f32 — bitwise identical to composing three `fp8_mod_gemm_batched` calls
+    with host combines, in 1 launch instead of 3.  Inputs (N, m, k) /
+    (N, k, n) int8 stacks, optional (CR, CI) carry pair, k <=
+    `FP8_K_CHUNK_LIMIT` per launch.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    n_mod, m, k = ar.shape
+    if k > FP8_K_CHUNK_LIMIT:
+        raise ValueError(
+            f"fp8 digit accumulation is exact only for k <= "
+            f"{FP8_K_CHUNK_LIMIT} per launch (got k={k}); chunk via "
+            f"chunked_residue_matmul(chunk_limit=FP8_K_CHUNK_LIMIT)"
+        )
+    n_given = (
+        moduli.shape[0] if isinstance(moduli, jnp.ndarray) else len(moduli)
+    )
+    if (
+        ai.shape != ar.shape
+        or br.shape != bi.shape
+        or br.shape[:2] != (n_mod, k)
+        or n_given != n_mod
+    ):
+        raise ValueError(
+            f"shape mismatch: ar {ar.shape}, ai {ai.shape}, br {br.shape}, "
+            f"bi {bi.shape}, N={n_given}"
+        )
+    n = br.shape[-1]
+    bm, mp = block_and_padded(m, bm, align=128)
+    bn, np_ = block_and_padded(n, bn, align=128)
+    bk, kp = block_and_padded(k, bk, align=32)
+    ar = pad_dims(ar, {1: mp, 2: kp})
+    ai = pad_dims(ai, {1: mp, 2: kp})
+    br = pad_dims(br, {1: kp, 2: np_})
+    bi = pad_dims(bi, {1: kp, 2: np_})
+    if carry is not None:
+        carry = tuple(pad_dims(c, {1: mp, 2: np_}) for c in carry)
+    cr, ci = _karatsuba_call(
+        ar, ai, br, bi, carry, jnp.asarray(moduli, jnp.int32),
+        bm=bm, bn=bn, bk=bk, interpret=bool(interpret),
+    )
+    return cr[:, :m, :n], ci[:, :m, :n]
+
+
 def fp8_mod_gemm_batched(
     a: jnp.ndarray,
     b: jnp.ndarray,

@@ -39,8 +39,12 @@ from .common import (
     dyn_mod_params,
     interpret_default,
     pad_dims,
+    residue_tiles_f32,
+    split_scale_exponent,
+    static_mod_params,
     sym_mod_int32_dyn,
 )
+from .crt_garner import _prescale, garner_tile
 
 
 def _kernel(moduli_ref, a_ref, b_ref, *rest, k_steps, has_carry):
@@ -146,6 +150,215 @@ def int8_mod_gemm_batched(
         interpret=bool(interpret),
     )
     return out[:, :m, :n]
+
+
+# --------------------------------------------------------------- megakernel
+
+
+def _fused_kernel(
+    *refs, ctx, n_limbs, k_steps, chunk_steps, out_dd, prepared
+):
+    """cast A tile + cast/load B tile + N int8 products + Garner, one grid.
+
+    The prologue runs `common.residue_tiles_f32` (the residue-cast kernel's
+    exact op sequence) on the raw f32 tiles; the epilogue runs
+    `crt_garner.garner_tile` (the Garner kernel's exact op sequence) on the
+    canonical residues — so the fused output is bitwise identical to the
+    4-launch cast/cast/product/reconstruct composition by construction.
+    The K grid dimension is innermost: Pallas auto-pipelines the next K
+    block's fetches against the current products (the double-buffering the
+    host-side chunk loop could never give across launches).
+    """
+    if prepared:
+        (a_ref, sa1_ref, sa2_ref, b_ref,
+         r1_ref, r2_ref, c1_ref, c2_ref, out_ref, acc_ref) = refs
+    else:
+        (a_ref, sa1_ref, sa2_ref, b_ref, sb1_ref, sb2_ref,
+         r1_ref, r2_ref, c1_ref, c2_ref, out_ref, acc_ref) = refs
+    n = ctx.n
+    # program_id must be read outside pl.when bodies (the interpret-mode
+    # evaluator does not substitute it inside cond sub-jaxprs)
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # --- prologue: in-kernel residue cast of the operand tiles ---
+    a_tiles = residue_tiles_f32(
+        a_ref[...], sa1_ref[...], sa2_ref[...],
+        moduli=ctx.moduli, n_limbs=n_limbs, scale_axis=0,
+    )
+    if prepared:
+        b_tiles = [b_ref[l] for l in range(n)]  # pre-cast int8 planes
+    else:
+        b_tiles = [
+            t.astype(jnp.int8)
+            for t in residue_tiles_f32(
+                b_ref[...], sb1_ref[...], sb2_ref[...],
+                moduli=ctx.moduli, n_limbs=n_limbs, scale_axis=1,
+            )
+        ]
+
+    # --- N int8 MXU products into the plane-stacked int32 accumulator ---
+    for l in range(n):
+        acc_ref[l] += jax.lax.dot_general(
+            a_tiles[l].astype(jnp.int8),
+            b_tiles[l],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+
+    # --- in-kernel K-chunk reduction (replaces the host carry loop) ---
+    if k_steps > chunk_steps:
+
+        @pl.when(((kk + 1) % chunk_steps == 0) & (kk < k_steps - 1))
+        def _chunk_reduce():
+            for l, p in enumerate(ctx.moduli):
+                pf, half, m16 = static_mod_params(p)
+                acc_ref[l] = sym_mod_int32_dyn(
+                    acc_ref[l], pf, half, m16
+                ).astype(jnp.int32)
+
+    # --- epilogue: Garner reconstruction of the output tile ---
+    @pl.when(kk == k_steps - 1)
+    def _epilogue():
+        planes = []
+        for l, p in enumerate(ctx.moduli):
+            pf, half, m16 = static_mod_params(p)
+            planes.append(sym_mod_int32_dyn(acc_ref[l], pf, half, m16))
+        rr = (r1_ref[...] * r2_ref[...])[:, None]
+        cc = (c1_ref[...] * c2_ref[...])[None, :]
+        if out_dd:
+            hi, lo = garner_tile(planes, rr, cc, ctx=ctx, out_dd=True)
+            out_ref[0] = hi
+            out_ref[1] = lo
+        else:
+            out_ref[...] = garner_tile(planes, rr, cc, ctx=ctx, out_dd=False)
+
+
+# not jitted: CRTContext holds numpy tables and is unhashable; the public
+# pipeline wrappers jit the whole plan execution anyway.
+def _fused_call(
+    a, sa1, sa2, b, sb, r1, r2, c1, c2, *, ctx, n_limbs, k_steps,
+    chunk_steps, out_dd, bm, bn, bk, interpret
+):
+    prepared = sb is None
+    m = a.shape[0]
+    n = (b.shape[-1])
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
+        pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
+    ]
+    operands = [a, sa1, sa2]
+    if prepared:
+        in_specs.append(
+            pl.BlockSpec((ctx.n, bk, bn), lambda i, j, kk: (0, kk, j))
+        )
+        operands.append(b)
+    else:
+        in_specs.append(pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)))
+        operands.append(b)
+        in_specs += [
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ]
+        operands += list(sb)
+    in_specs += [
+        pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
+        pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
+        pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+    ]
+    operands += [r1, r2, c1, c2]
+    out_shape = (
+        jax.ShapeDtypeStruct((2, m, n), jnp.float32)
+        if out_dd
+        else jax.ShapeDtypeStruct((m, n), jnp.float32)
+    )
+    out_spec = (
+        pl.BlockSpec((2, bm, bn), lambda i, j, kk: (0, i, j))
+        if out_dd
+        else pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _fused_kernel, ctx=ctx, n_limbs=n_limbs, k_steps=k_steps,
+            chunk_steps=chunk_steps, out_dd=out_dd, prepared=prepared,
+        ),
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((ctx.n, bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(*operands)
+
+
+def fused_mod_gemm(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    e_mu: jnp.ndarray,
+    e_nu: jnp.ndarray,
+    ctx,
+    *,
+    n_limbs: int,
+    out_dd: bool = False,
+    b_res: jnp.ndarray | None = None,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    chunk_limit: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """The one-launch real megakernel: C = A @ B emulated end to end.
+
+    a: (m, k) f32 (pre-scaled mantissas, as produced by the scaling pass);
+    b: (k, n) f32, or None with `b_res` the pre-cast (N, k, n) int8 planes
+    (prepared serving); e_mu/e_nu: the integer scale exponents.  Returns the
+    reconstructed (m, n) f32 output — or the (2, m, n) double-single pair
+    with `out_dd` — in ONE `pallas_call`: the residue casts run as the
+    kernel prologue, the N int8 products accumulate per K block (with
+    in-kernel chunk reduction replacing the host carry loop past
+    `chunk_limit` columns), and the Garner reconstruction runs as the
+    epilogue on the final K block.  Bitwise identical to the composed
+    cast/product/reconstruct kernel path.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    if chunk_limit is None:
+        chunk_limit = 1 << 17
+    a = a.astype(jnp.float32)
+    if b is not None:
+        b = b.astype(jnp.float32)
+    m, k = a.shape
+    n = b_res.shape[-1] if b_res is not None else b.shape[-1]
+    bm, mp = block_and_padded(m, bm, align=128)
+    bn, np_ = block_and_padded(n, bn, align=128)
+    bk, kp = block_and_padded(k, bk, align=32)
+    a = pad_dims(a, {0: mp, 1: kp})
+    e_mu = pad_dims(e_mu, {0: mp})
+    e_nu = pad_dims(e_nu, {0: np_})
+    sa1, sa2 = split_scale_exponent(e_mu)
+    s = _prescale(ctx)
+    s_r = s // 2
+    r1, r2 = split_scale_exponent(-e_mu, bias=s_r)
+    c1, c2 = split_scale_exponent(-e_nu, bias=s - s_r)
+    if b_res is not None:
+        bp = pad_dims(b_res, {1: kp, 2: np_})
+        sb = None
+    else:
+        bp = pad_dims(b, {0: kp, 1: np_})
+        sb = split_scale_exponent(e_nu)
+    k_steps = kp // bk
+    chunk_steps = max(1, chunk_limit // bk)
+    out = _fused_call(
+        a, sa1, sa2, bp, sb, r1, r2, c1, c2, ctx=ctx, n_limbs=n_limbs,
+        k_steps=k_steps, chunk_steps=chunk_steps, out_dd=out_dd,
+        bm=bm, bn=bn, bk=bk, interpret=bool(interpret),
+    )
+    return out[..., :m, :n]
 
 
 def int8_mod_gemm(

@@ -40,9 +40,13 @@ from .common import (
     dyn_mod_params,
     interpret_default,
     pad_dims,
+    residue_tiles_f32,
+    split_scale_exponent,
+    static_mod_params,
     sym_mod_f32,
     sym_mod_int32_dyn,
 )
+from .crt_garner import _prescale, garner_tile
 
 
 def _dot_i8(a, b):
@@ -180,6 +184,219 @@ def karatsuba_mod_gemm_batched(
         bm=bm, bn=bn, bk=bk, interpret=bool(interpret),
     )
     return cr[:, :m, :n], ci[:, :m, :n]
+
+
+# --------------------------------------------------------------- megakernel
+
+
+def _fused_kernel(
+    *refs, ctx, n_limbs, k_steps, chunk_steps, out_dd, prepared
+):
+    """cast AR/AI (+BR/BI) + 3 Karatsuba products x N planes + two Garner
+    reconstructions, one grid — the complex twin of
+    `int8_mod_gemm._fused_kernel` (same shared prologue/epilogue helpers,
+    same bitwise-parity-by-construction argument)."""
+    if prepared:
+        (ar_ref, ai_ref, sa1_ref, sa2_ref, brr_ref, bri_ref,
+         r1_ref, r2_ref, c1_ref, c2_ref,
+         cr_ref, ci_ref, d_acc, e_acc, f_acc) = refs
+    else:
+        (ar_ref, ai_ref, sa1_ref, sa2_ref, br_ref, bi_ref,
+         sb1_ref, sb2_ref, r1_ref, r2_ref, c1_ref, c2_ref,
+         cr_ref, ci_ref, d_acc, e_acc, f_acc) = refs
+    n = ctx.n
+    # program_id read once at kernel top level (outside pl.when bodies)
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        d_acc[...] = jnp.zeros_like(d_acc)
+        e_acc[...] = jnp.zeros_like(e_acc)
+        f_acc[...] = jnp.zeros_like(f_acc)
+
+    # --- prologue: in-kernel residue casts (f32 canonical residue tiles) ---
+    sa1, sa2 = sa1_ref[...], sa2_ref[...]
+    art = residue_tiles_f32(
+        ar_ref[...], sa1, sa2, moduli=ctx.moduli, n_limbs=n_limbs, scale_axis=0
+    )
+    ait = residue_tiles_f32(
+        ai_ref[...], sa1, sa2, moduli=ctx.moduli, n_limbs=n_limbs, scale_axis=0
+    )
+    if prepared:
+        brt = [brr_ref[l].astype(jnp.float32) for l in range(n)]
+        bit = [bri_ref[l].astype(jnp.float32) for l in range(n)]
+    else:
+        sb1, sb2 = sb1_ref[...], sb2_ref[...]
+        brt = residue_tiles_f32(
+            br_ref[...], sb1, sb2, moduli=ctx.moduli, n_limbs=n_limbs,
+            scale_axis=1,
+        )
+        bit = residue_tiles_f32(
+            bi_ref[...], sb1, sb2, moduli=ctx.moduli, n_limbs=n_limbs,
+            scale_axis=1,
+        )
+
+    # --- the D/E/F Karatsuba triple per plane (sum operands in VMEM) ---
+    for l, p in enumerate(ctx.moduli):
+        pf, half = float(p), float((p - 1) // 2)
+        asum = sym_mod_f32(art[l] + ait[l], pf, half).astype(jnp.int8)
+        bsum = sym_mod_f32(brt[l] + bit[l], pf, half).astype(jnp.int8)
+        d_acc[l] += _dot_i8(art[l].astype(jnp.int8), brt[l].astype(jnp.int8))
+        e_acc[l] += _dot_i8(ait[l].astype(jnp.int8), bit[l].astype(jnp.int8))
+        f_acc[l] += _dot_i8(asum, bsum)
+
+    # --- in-kernel K-chunk reduction (replaces the host carry loop) ---
+    if k_steps > chunk_steps:
+
+        @pl.when(((kk + 1) % chunk_steps == 0) & (kk < k_steps - 1))
+        def _chunk_reduce():
+            for l, p in enumerate(ctx.moduli):
+                pf, half, m16 = static_mod_params(p)
+                for acc in (d_acc, e_acc, f_acc):
+                    acc[l] = sym_mod_int32_dyn(
+                        acc[l], pf, half, m16
+                    ).astype(jnp.int32)
+
+    # --- epilogue: CR/CI combine + two Garner reconstructions ---
+    @pl.when(kk == k_steps - 1)
+    def _epilogue():
+        cr_planes, ci_planes = [], []
+        for l, p in enumerate(ctx.moduli):
+            pf, half, m16 = static_mod_params(p)
+            dr = sym_mod_int32_dyn(d_acc[l], pf, half, m16)
+            de = sym_mod_int32_dyn(e_acc[l], pf, half, m16)
+            df = sym_mod_int32_dyn(f_acc[l], pf, half, m16)
+            cr_planes.append(sym_mod_f32(dr - de, pf, half))
+            ci_planes.append(sym_mod_f32(df - dr - de, pf, half))
+        rr = (r1_ref[...] * r2_ref[...])[:, None]
+        cc = (c1_ref[...] * c2_ref[...])[None, :]
+        if out_dd:
+            hi, lo = garner_tile(cr_planes, rr, cc, ctx=ctx, out_dd=True)
+            cr_ref[0], cr_ref[1] = hi, lo
+            hi, lo = garner_tile(ci_planes, rr, cc, ctx=ctx, out_dd=True)
+            ci_ref[0], ci_ref[1] = hi, lo
+        else:
+            cr_ref[...] = garner_tile(cr_planes, rr, cc, ctx=ctx, out_dd=False)
+            ci_ref[...] = garner_tile(ci_planes, rr, cc, ctx=ctx, out_dd=False)
+
+
+# not jitted: CRTContext holds numpy tables and is unhashable; the public
+# pipeline wrappers jit the whole plan execution anyway.
+def _fused_call(
+    ar, ai, sa1, sa2, b_pair, sb, r1, r2, c1, c2, *, ctx, n_limbs, k_steps,
+    chunk_steps, out_dd, bm, bn, bk, interpret
+):
+    prepared = sb is None
+    m = ar.shape[0]
+    n = b_pair[0].shape[-1]
+    row_spec = pl.BlockSpec((bm,), lambda i, j, kk: (i,))
+    col_spec = pl.BlockSpec((bn,), lambda i, j, kk: (j,))
+    a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    in_specs = [a_spec, a_spec, row_spec, row_spec]
+    operands = [ar, ai, sa1, sa2]
+    if prepared:
+        bp_spec = pl.BlockSpec((ctx.n, bk, bn), lambda i, j, kk: (0, kk, j))
+        in_specs += [bp_spec, bp_spec]
+        operands += list(b_pair)
+    else:
+        b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+        in_specs += [b_spec, b_spec, col_spec, col_spec]
+        operands += list(b_pair) + list(sb)
+    in_specs += [row_spec, row_spec, col_spec, col_spec]
+    operands += [r1, r2, c1, c2]
+    one_shape = (
+        jax.ShapeDtypeStruct((2, m, n), jnp.float32)
+        if out_dd
+        else jax.ShapeDtypeStruct((m, n), jnp.float32)
+    )
+    one_spec = (
+        pl.BlockSpec((2, bm, bn), lambda i, j, kk: (0, i, j))
+        if out_dd
+        else pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _fused_kernel, ctx=ctx, n_limbs=n_limbs, k_steps=k_steps,
+            chunk_steps=chunk_steps, out_dd=out_dd, prepared=prepared,
+        ),
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=in_specs,
+        out_specs=(one_spec, one_spec),
+        out_shape=(one_shape, one_shape),
+        scratch_shapes=[
+            pltpu.VMEM((ctx.n, bm, bn), jnp.int32),
+            pltpu.VMEM((ctx.n, bm, bn), jnp.int32),
+            pltpu.VMEM((ctx.n, bm, bn), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*operands)
+
+
+def fused_karatsuba_mod_gemm(
+    ar: jnp.ndarray,
+    ai: jnp.ndarray,
+    br: jnp.ndarray,
+    bi: jnp.ndarray,
+    e_mu: jnp.ndarray,
+    e_nu: jnp.ndarray,
+    ctx,
+    *,
+    n_limbs: int,
+    out_dd: bool = False,
+    b_res: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    chunk_limit: int | None = None,
+    interpret: bool | None = None,
+):
+    """The one-launch complex megakernel: C = (AR+iAI)(BR+iBI) emulated.
+
+    ar/ai: (m, k) f32 pre-scaled mantissas; br/bi: (k, n) f32, or None with
+    `b_res` the pre-cast ((N, k, n), (N, k, n)) int8 plane pair (prepared
+    serving).  Returns the reconstructed (cr, ci) pair, each (m, n) f32 —
+    or (2, m, n) double-single with `out_dd` — in ONE `pallas_call`:
+    residue casts in the prologue, the fused Karatsuba D/E/F triple per K
+    block (in-kernel chunk reduction past `chunk_limit` columns), CR/CI
+    combine + both Garner reconstructions in the epilogue.  Bitwise
+    identical to the composed cast/karatsuba/reconstruct kernel path.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    if chunk_limit is None:
+        chunk_limit = 1 << 17
+    ar = ar.astype(jnp.float32)
+    ai = ai.astype(jnp.float32)
+    m, k = ar.shape
+    n = b_res[0].shape[-1] if b_res is not None else br.shape[-1]
+    bm, mp = block_and_padded(m, bm, align=128)
+    bn, np_ = block_and_padded(n, bn, align=128)
+    bk, kp = block_and_padded(k, bk, align=32)
+    ar = pad_dims(ar, {0: mp, 1: kp})
+    ai = pad_dims(ai, {0: mp, 1: kp})
+    e_mu = pad_dims(e_mu, {0: mp})
+    e_nu = pad_dims(e_nu, {0: np_})
+    sa1, sa2 = split_scale_exponent(e_mu)
+    s = _prescale(ctx)
+    s_r = s // 2
+    r1, r2 = split_scale_exponent(-e_mu, bias=s_r)
+    c1, c2 = split_scale_exponent(-e_nu, bias=s - s_r)
+    if b_res is not None:
+        b_pair = tuple(pad_dims(x, {1: kp, 2: np_}) for x in b_res)
+        sb = None
+    else:
+        b_pair = tuple(
+            pad_dims(x.astype(jnp.float32), {0: kp, 1: np_}) for x in (br, bi)
+        )
+        sb = split_scale_exponent(e_nu)
+    k_steps = kp // bk
+    chunk_steps = max(1, chunk_limit // bk)
+    cr, ci = _fused_call(
+        ar, ai, sa1, sa2, b_pair, sb, r1, r2, c1, c2, ctx=ctx,
+        n_limbs=n_limbs, k_steps=k_steps, chunk_steps=chunk_steps,
+        out_dd=out_dd, bm=bm, bn=bn, bk=bk, interpret=bool(interpret),
+    )
+    return cr[..., :m, :n], ci[..., :m, :n]
 
 
 def karatsuba_mod_gemm(

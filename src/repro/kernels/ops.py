@@ -168,6 +168,70 @@ class KernelBackend(_KernelBackendBase):
 
 
 @dataclasses.dataclass(frozen=True)
+class FusedBackend(KernelBackend):
+    """Residue backend running the one-launch megakernels
+    (execution="fused"): the residue casts run as the GEMM kernel's
+    prologue, the N int8 plane products accumulate per K grid block
+    (auto-pipelined, i.e. double-buffered, with in-kernel chunk reduction
+    replacing the host carry loop), and the Garner reconstruction runs as
+    the epilogue — a fast-mode emulated GEMM is ONE `pallas_call` per
+    output-column block (accu mode too: the scaling pass is pallas-free).
+
+    The executor dispatches on ``megakernel = True`` (`_fused_pipeline_*`);
+    everything the megakernel cannot serve — left-prepared operands, the
+    sharded worker's r>1 dynamic plane chunks — falls back to the composed
+    single-launch primitives inherited from :class:`KernelBackend`, so the
+    fused execution is never less capable, only fewer launches.  Bitwise
+    identical to ``execution="kernel"`` by construction: the prologue and
+    epilogue run literally the shared `common.residue_tiles_f32` /
+    `crt_garner.garner_tile` op sequences.
+    """
+
+    megakernel = True
+
+    @staticmethod
+    def _chunk_limit() -> int:
+        # resolved at call time from the executor module so the tests'
+        # monkeypatch of executor.K_CHUNK_LIMIT governs the fused path too
+        from ..core import executor as _executor
+
+        return _executor.K_CHUNK_LIMIT
+
+    def fused_gemm(
+        self, a, b, e_mu, e_nu, ctx, n_limbs, out_dtype, b_res=None
+    ):
+        from .int8_mod_gemm import fused_mod_gemm
+
+        out_dd = jnp.dtype(out_dtype) == jnp.float64
+        out = fused_mod_gemm(
+            a, b, e_mu, e_nu, ctx, n_limbs=n_limbs, out_dd=out_dd,
+            b_res=b_res, chunk_limit=self._chunk_limit(),
+            interpret=self.interpret,
+        )
+        if out_dd:
+            return out[0].astype(jnp.float64) + out[1].astype(jnp.float64)
+        return out
+
+    def fused_karatsuba_gemm(
+        self, ar, ai, br, bi, e_mu, e_nu, ctx, n_limbs, out_dtype, b_res=None
+    ):
+        from .karatsuba_fused import fused_karatsuba_mod_gemm
+
+        out_dd = jnp.dtype(out_dtype) == jnp.float64
+        cr, ci = fused_karatsuba_mod_gemm(
+            ar, ai, br, bi, e_mu, e_nu, ctx, n_limbs=n_limbs, out_dd=out_dd,
+            b_res=b_res, chunk_limit=self._chunk_limit(),
+            interpret=self.interpret,
+        )
+        if out_dd:
+            return (
+                cr[0].astype(jnp.float64) + cr[1].astype(jnp.float64),
+                ci[0].astype(jnp.float64) + ci[1].astype(jnp.float64),
+            )
+        return cr, ci
+
+
+@dataclasses.dataclass(frozen=True)
 class PerModulusKernelBackend(_KernelBackendBase):
     """Pre-batching reference: one `pallas_call` per modulus (3N-launch
     complex products via per-modulus fused Karatsuba), kept as the bitwise

@@ -27,41 +27,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .common import (
-    LIMB,
     block_and_padded,
     interpret_default,
-    limb_radix_f32,
     pad_dims,
-    sym_mod_f32,
+    residue_tiles_f32,
 )
 
 
 def _kernel(a_ref, s1_ref, s2_ref, out_ref, *, moduli, n_limbs, scale_axis):
-    a = a_ref[0]
-    if scale_axis == 0:
-        scale = (s1_ref[...] * s2_ref[...])[:, None]
-    else:
-        scale = (s1_ref[...] * s2_ref[...])[None, :]
-    x = jnp.trunc(a * scale)  # exact: power-of-two scale, f32 trunc
-
-    # exact base-2^24 limb peel (DESIGN.md S2)
-    limbs = []
-    rem = x
-    for i in reversed(range(1, n_limbs)):
-        base = LIMB**i
-        hi = jnp.trunc(rem * (1.0 / base))  # 1/2^24k is a power of two: exact
-        rem = rem - hi * base
-        limbs.append(hi)
-    limbs.append(rem)
-    limbs = limbs[::-1]
-
-    radix = limb_radix_f32(moduli, n_limbs)  # static host table
-    for l, p in enumerate(moduli):
-        pf, half = float(p), float((p - 1) // 2)
-        acc = jnp.zeros_like(x)
-        for i in range(n_limbs):
-            acc = acc + sym_mod_f32(limbs[i], pf, half) * float(radix[i, l])
-        out_ref[0, l, :, :] = sym_mod_f32(acc, pf, half).astype(jnp.int8)
+    tiles = residue_tiles_f32(
+        a_ref[0], s1_ref[...], s2_ref[...],
+        moduli=moduli, n_limbs=n_limbs, scale_axis=scale_axis,
+    )
+    for l in range(len(moduli)):
+        out_ref[0, l, :, :] = tiles[l].astype(jnp.int8)
 
 
 @functools.partial(

@@ -49,9 +49,10 @@ def main():
                              "ozaki2_c64", "ozaki2_c128"])
     ap.add_argument("--execution", default="reference",
                     choices=["reference", "kernel", "per_modulus_kernel",
-                             "sharded", "fp8"],
+                             "sharded", "fp8", "fused"],
                     help="residue backend running the emulation plan "
-                         "(fp8: the e4m3 digit-GEMM engine)")
+                         "(fp8: the e4m3 digit-GEMM engine; fused: the "
+                         "one-launch megakernel)")
     ap.add_argument("--residue", type=int, default=1,
                     help="residue mesh-axis size (sharded execution)")
     args = ap.parse_args()

@@ -194,9 +194,14 @@ class Model:
             w = jnp.pad(w, ((0, 0), (0, pad)))
         wc = w.reshape(w.shape[0], n_chunks, chunk).transpose(1, 0, 2)
 
-        def body(carry, xs):
-            m, l, gold = carry
-            wi, i = xs
+        # the slab index rides in the carry as int32 and the slab is gathered
+        # inside the body: scanning over wc as xs would make jax.lax.scan
+        # index it with an s64 counter under jax_enable_x64, and the SPMD
+        # partitioner rejects s64 dynamic-slice indices (same fix as the
+        # layer-scan in _run_group)
+        def body(carry, _):
+            i, m, l, gold = carry
+            wi = jax.lax.dynamic_index_in_dim(wc, i, keepdims=False)
             logits = (h.astype(jnp.float32) @ wi.astype(jnp.float32))
             base = i * chunk
             idx = jnp.arange(chunk, dtype=jnp.int32)[None, None, :] + base
@@ -210,17 +215,18 @@ class Model:
                 logits, jnp.clip(targets - base, 0, chunk - 1)[..., None], axis=-1
             )[..., 0]
             gold = jnp.where(in_chunk, g, gold)
-            return (m_new, l, gold), None
+            return (i + jnp.int32(1), m_new, l, gold), None
 
         b, s = targets.shape
         init = (
+            jnp.int32(0),
             jnp.full((b, s), -1e30, jnp.float32),
             jnp.zeros((b, s), jnp.float32),
             jnp.full((b, s), -1e30, jnp.float32),
         )
         body = jax.checkpoint(body)
-        (m, l, gold), _ = jax.lax.scan(
-            body, init, (wc, jnp.arange(n_chunks, dtype=jnp.int32)),
+        (_, m, l, gold), _ = jax.lax.scan(
+            body, init, None, length=n_chunks,
             unroll=True if cfg.scan_unroll else 1,
         )
         logz = m + jnp.log(jnp.maximum(l, 1e-30))

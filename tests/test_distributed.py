@@ -253,3 +253,57 @@ def test_emulated_train_step_2device_mesh():
         devices=2,
     )
     assert "OK" in out
+
+
+def test_chunked_ce_train_step_2device_mesh():
+    """Regression: `loss_vocab_chunk` on a multi-device mesh died the same
+    s64-vs-s32 SPMD death as the layer scan (PR 4) — `Model._chunked_ce`
+    scanned *over* the vocab-slab stack as scan xs, so under jax_enable_x64
+    the scan indexed the stack with an s64 counter that the partitioner
+    rejects when it transposes the remat scan.  The body now gathers the
+    slab with an explicit int32 carry index (xs=None), so a chunked-CE
+    emulated train step must compile and take a finite step on a real
+    (forced-host) 2-device mesh.  The mesh puts both devices on the
+    *model* axis — the crash needs the head weights (and so the slab
+    stack) actually sharded; a data-only mesh compiles even unfixed.
+
+    Not slow-marked: the tiny config keeps the subprocess fast, and this is
+    the only tier-1 coverage of the chunked-CE loss under SPMD.
+    """
+    out = _run_sub(
+        """
+        from repro.core.policy import GemmPolicy
+        from repro.models import Model
+        from repro.models.config import ModelConfig
+        from repro.train.step import make_train_step, init_state
+        from repro.optim import AdamWConfig
+
+        mesh = jax.make_mesh((1, 2), ("data", "model"))
+        cfg = ModelConfig(
+            name="tiny", n_layers=2, d_model=32, vocab=64, n_heads=2,
+            n_kv_heads=2, head_dim=16, d_ff=64, dtype="float32", remat=True,
+            loss_vocab_chunk=16,
+            gemm_policy=GemmPolicy(
+                backend="ozaki2_f32", n_moduli=4, execution="reference"
+            ),
+        )
+        model = Model(cfg)
+        step, sh = make_train_step(model, AdamWConfig(), mesh=mesh, donate=False)
+        params, opt = init_state(
+            model, AdamWConfig(), jax.random.PRNGKey(0), sh
+        )
+        batch = jax.device_put(
+            {"tokens": jnp.asarray(
+                np.random.default_rng(0).integers(0, cfg.vocab, (4, 16)),
+                jnp.int32,
+            )},
+            sh["batch"],
+        )
+        _, _, metrics = step(params, opt, batch)
+        loss = float(metrics["loss"])
+        assert np.isfinite(loss), loss
+        print("OK", loss)
+        """,
+        devices=2,
+    )
+    assert "OK" in out

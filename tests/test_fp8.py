@@ -233,21 +233,22 @@ def test_fp8_grad_matches_kernel(rng):
 
 def test_fp8_launch_counts(rng):
     """The fp8 path keeps the batched launch economics: 4 launches for a
-    real GEMM (cast, cast, product, reconstruct), and 3 products for the
-    composed Karatsuba — exactly `perfmodel.kernel_launch_count` with
-    `fused_karatsuba=False` (the capability `Fp8Backend` declares)."""
+    real GEMM (cast, cast, product, reconstruct) — and, since the fused
+    fp8 Karatsuba kernel landed, the complex triple shares ONE launch per
+    K-chunk (`fused_karatsuba=True`, the capability `Fp8Backend` now
+    declares): 4 launches for complex too."""
     x, w = _operands(rng, np.float32)
     pol = _policy(np.float32, "fp8")
     n = count_pallas_launches(lambda a, b: policy_matmul(a, b, pol), x, w)
     assert n == perfmodel.kernel_launch_count(
-        pol.n_moduli, "real", modulus_batched=True, fused_karatsuba=False
+        pol.n_moduli, "real", modulus_batched=True
     ) == 4
     xc, wc = _operands(rng, np.complex64)
     polc = _policy(np.complex64, "fp8", formulation="karatsuba")
     nc = count_pallas_launches(lambda a, b: policy_matmul(a, b, polc), xc, wc)
     assert nc == perfmodel.kernel_launch_count(
-        polc.n_moduli, "karatsuba", modulus_batched=True, fused_karatsuba=False
-    ) == 6
+        polc.n_moduli, "karatsuba", modulus_batched=True, fused_karatsuba=True
+    ) == 4
 
 
 # ===================================================== perfmodel pricing
@@ -295,9 +296,9 @@ def test_fp8_auto_formulation_prices_engine():
 
 def test_fp8_backend_capabilities():
     """The protocol capabilities the policy/plan layers read off the
-    backend: batched launches, composed Karatsuba, fp8 engine tag."""
+    backend: batched launches, fused fp8 Karatsuba, fp8 engine tag."""
     be = Fp8Backend(True)
-    assert be.modulus_batched and not be.fused_karatsuba
+    assert be.modulus_batched and be.fused_karatsuba
     assert be.engine == "fp8"
     assert hash(be) == hash(Fp8Backend(True))  # jit-static eligible
     pol = GemmPolicy(backend="ozaki2_f32", execution="fp8", interpret=True)

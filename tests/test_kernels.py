@@ -17,6 +17,7 @@ from repro.core.executor import execute_plan
 from repro.core.moduli import make_crt_context
 from repro.core.plan import make_plan
 from repro.kernels import (
+    FusedBackend,
     KernelBackend,
     PerModulusKernelBackend,
     count_pallas_launches,
@@ -419,3 +420,122 @@ def test_block_shrink_just_over_multiple(rng, m):
     np.testing.assert_array_equal(got, want)
     expect_f64 = a.astype(np.float64) @ b.astype(np.float64)
     assert np.max(np.abs(got - expect_f64)) / np.max(np.abs(expect_f64)) < 1e-5
+
+
+# --------------------------------------------------------------- megakernel
+
+FUSED = FusedBackend(interpret=True)
+
+
+@pytest.mark.parametrize("mode", ["fast", "accu"])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_fused_launch_count_real(rng, dtype, mode):
+    """Acceptance: the megakernel traces a real emulated GEMM — fast AND
+    accu (the scaling pass is pallas-free) — to exactly ONE `pallas_call`,
+    matching `kernel_launch_count(..., fused=True)`, and stays bitwise
+    identical to the 4-launch kernel path."""
+    a, b = _operands(rng, dtype)
+    plan = _garner_plan(dtype, mode)
+    got = count_pallas_launches(
+        lambda x, y: execute_plan(plan, x, y, FUSED), a, b
+    )
+    assert got == perfmodel.kernel_launch_count(5, "real", fused=True) == 1
+    np.testing.assert_array_equal(
+        np.asarray(execute_plan(plan, a, b, FUSED)),
+        np.asarray(execute_plan(plan, a, b, BATCHED)),
+    )
+
+
+@pytest.mark.parametrize("formulation", ["karatsuba", "block_a", "block_b"])
+@pytest.mark.parametrize("mode", ["fast", "accu"])
+@pytest.mark.parametrize("dtype", [np.complex64, np.complex128])
+def test_fused_launch_count_complex(rng, dtype, mode, formulation):
+    """Acceptance: one `pallas_call` for a complex emulated GEMM on every
+    Fig. 1 formulation x mode, bitwise identical to the kernel path (the
+    block embeddings ride the real megakernel on embedded operands; the
+    Karatsuba megakernel fuses cast + D/E/F + both Garner epilogues)."""
+    a, b = _operands(rng, dtype)
+    plan = _garner_plan(dtype, mode, formulation, n_moduli=4)
+    got = count_pallas_launches(
+        lambda x, y: execute_plan(plan, x, y, FUSED), a, b
+    )
+    assert got == perfmodel.kernel_launch_count(4, formulation, fused=True) == 1
+    np.testing.assert_array_equal(
+        np.asarray(execute_plan(plan, a, b, FUSED)),
+        np.asarray(execute_plan(plan, a, b, BATCHED)),
+    )
+
+
+@pytest.mark.parametrize("mode", ["fast", "accu"])
+@pytest.mark.parametrize("dtype", [np.float32, np.complex64])
+def test_fused_prepared_one_launch(rng, dtype, mode):
+    """Prepared serving on the megakernel: the pre-cast weight planes feed
+    the kernel's B residue inputs directly, so the whole prepared GEMM is
+    still ONE launch (vs 3 on the kernel path) and bitwise identical."""
+    from repro.core.executor import PreparedOperand, gemm_prepared
+
+    a, b = _operands(rng, dtype)
+    keep_raw = mode == "accu"
+    wk = PreparedOperand(b, 5, side="right", backend=BATCHED, keep_raw=keep_raw)
+    wf = PreparedOperand(b, 5, side="right", backend=FUSED, keep_raw=keep_raw)
+    kw = dict(method="garner", mode=mode)
+    got = count_pallas_launches(
+        lambda x: gemm_prepared(wf, x, backend=FUSED, **kw), a
+    )
+    want_model = perfmodel.kernel_launch_count(
+        5, "real" if dtype == np.float32 else "karatsuba",
+        fused=True, prepared=True,
+    )
+    assert got == want_model == 1
+    np.testing.assert_array_equal(
+        np.asarray(gemm_prepared(wf, a, backend=FUSED, **kw)),
+        np.asarray(gemm_prepared(wk, a, backend=BATCHED, **kw)),
+    )
+
+
+def test_fused_chunked_k_one_launch(rng, monkeypatch):
+    """K-chunking moves INSIDE the megakernel grid (k innermost = Pallas
+    double-buffers the block fetches): the host carry loop of the kernel
+    path collapses into one launch, still bitwise identical — the in-kernel
+    chunk reduction produces the same canonical residues as the host
+    carries."""
+    import repro.core.executor as executor
+
+    a, b = _operands(rng, np.float32, k=160)
+    plan = _garner_plan(np.float32)
+    ca, cb = _operands(rng, np.complex64, k=160)
+    cplan = _garner_plan(np.complex64, formulation="karatsuba")
+    whole = np.asarray(execute_plan(plan, a, b, BATCHED))
+    cwhole = np.asarray(execute_plan(cplan, ca, cb, BATCHED))
+
+    monkeypatch.setattr(executor, "K_CHUNK_LIMIT", 64)
+    np.testing.assert_array_equal(
+        whole, np.asarray(execute_plan(plan, a, b, FUSED))
+    )
+    np.testing.assert_array_equal(
+        cwhole, np.asarray(execute_plan(cplan, ca, cb, FUSED))
+    )
+    got = count_pallas_launches(
+        lambda x, y: execute_plan(plan, x, y, FUSED), a, b
+    )
+    assert got == perfmodel.kernel_launch_count(
+        5, "real", n_chunks=3, fused=True
+    ) == 1
+
+
+def test_fused_n_block_launch_per_block(rng):
+    """Output-column blocking still fans out one launch PER BLOCK (the
+    n_blocks factor of `kernel_launch_count`), each block a full megakernel,
+    bitwise identical to the blocked kernel path."""
+    a, b = _operands(rng, np.float32)
+    plan = _garner_plan(np.float32, n_block=8)  # FAST_N=24 -> 3 blocks
+    got = count_pallas_launches(
+        lambda x, y: execute_plan(plan, x, y, FUSED), a, b
+    )
+    assert got == perfmodel.kernel_launch_count(
+        5, "real", fused=True, n_blocks=3
+    ) == 3
+    np.testing.assert_array_equal(
+        np.asarray(execute_plan(plan, a, b, FUSED)),
+        np.asarray(execute_plan(plan, a, b, BATCHED)),
+    )

@@ -395,15 +395,28 @@ def test_sharded_policy_is_hashable_and_jit_static(rng):
 
 
 def test_prepared_and_sharded_raise(rng):
+    """Prepared weights meeting a sharded execution fail FAST with a
+    NotImplementedError that names the remediation (serve on 'kernel' /
+    'fused' outside a mesh, or pass raw weights) — not a deep generic
+    failure.  The fused execution inside a mesh scope resolves to the same
+    sharded pipeline, so it must refuse identically."""
     mesh = _mesh(1, 1, 1)
     x, w = _operands(rng, np.float32)
     kpol = _policy(np.float32, "kernel")
     spol = _policy(np.float32, "sharded", mesh=mesh)
     prep = prepare_weights({"w": w}, kpol)["w"]
-    with pytest.raises(ValueError, match="sharded"):
+    with pytest.raises(NotImplementedError, match="execution='kernel'"):
         policy_matmul(x, prep, spol)
-    with pytest.raises(ValueError, match="sharded"):
+    with pytest.raises(NotImplementedError, match="execution='kernel'"):
         prepare_weights({"w": w}, spol)
+    fpol = _policy(np.float32, "fused", mesh=mesh)
+    with pytest.raises(NotImplementedError, match="mesh"):
+        policy_matmul(x, prep, fpol)
+    with pytest.raises(NotImplementedError, match="mesh"):
+        prepare_weights({"w": w}, fpol)
+    # NotImplementedError is not a ValueError: callers that caught the old
+    # generic error by type must not silently swallow the new one
+    assert not issubclass(NotImplementedError, ValueError)
 
 
 def test_sharded_plan_prices_communication():
@@ -422,3 +435,66 @@ def test_sharded_plan_prices_communication():
     assert t8 > t2 > perfmodel.COLLECTIVE_LAUNCH_S
     parts = perfmodel.crt_partial_parts(8)
     assert parts >= 2  # ~64-bit weights split into >= 2 exact f64 parts
+
+
+# ======================================== parity: the fused megakernel
+
+
+@pytest.mark.parametrize("mode", ["fast", "accu"])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_bitwise_kernel_single_device(rng, dtype, mode):
+    """Acceptance: execution='fused' (no mesh — the plain megakernel) is
+    bitwise identical to execution='kernel' for every dtype x mode at the
+    policy entry point."""
+    x, w = _operands(rng, dtype)
+    y_k = np.asarray(policy_matmul(x, w, _policy(dtype, "kernel", mode=mode)))
+    y_f = np.asarray(policy_matmul(x, w, _policy(dtype, "fused", mode=mode)))
+    np.testing.assert_array_equal(y_k, y_f)
+
+
+@pytest.mark.parametrize(
+    "meshdims", [(2, 1, 1), (1, 2, 1), (1, 1, 2), (2, 2, 2), (1, 1, 8)]
+)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_multi_mesh_bitwise(rng, dtype, meshdims):
+    """The megakernel under every mesh shape reproduces the 1-device kernel
+    output bit for bit: m/n-sharded meshes run the fused worker (one launch
+    per shard), residue-sharded meshes fall back to the composed worker
+    with the two-phase deferred psum — both produce the same canonical
+    residues, hence the same bits."""
+    x, w = _operands(rng, dtype)
+    mesh = _mesh(*meshdims)
+    y_k = np.asarray(policy_matmul(x, w, _policy(dtype, "kernel")))
+    y_f = np.asarray(policy_matmul(x, w, _policy(dtype, "fused", mesh=mesh)))
+    np.testing.assert_array_equal(y_k, y_f)
+
+
+def test_fused_worker_engages_on_mn_mesh(rng):
+    """Structural check behind the mesh parity: on an m/n-only mesh the
+    sharded wrapper delegates to the fused worker — the traced program holds
+    exactly ONE `pallas_call` — while a residue-sharded mesh falls back to
+    the composed worker (multiple launches, two-phase psum), since the fused
+    Garner epilogue needs the full compile-time-static modulus set."""
+    from repro.kernels import FusedBackend, KernelBackend, count_pallas_launches
+    from repro.distributed.sharded_gemm import ShardedBackend
+
+    x, w = _operands(rng, np.float32)
+    mesh_mn = _mesh(1, 2, 1)
+    assert ShardedBackend(FusedBackend(True), mesh_mn, None).megakernel
+    assert not ShardedBackend(KernelBackend(True), mesh_mn, None).megakernel
+    got_mn = count_pallas_launches(
+        lambda a, b: policy_matmul(
+            a, b, _policy(np.float32, "fused", mesh=mesh_mn)
+        ),
+        x, w,
+    )
+    assert got_mn == 1
+    if len(jax.devices()) >= 2:
+        mesh_r = _mesh(1, 1, 2)
+        got_r = count_pallas_launches(
+            lambda a, b: policy_matmul(
+                a, b, _policy(np.float32, "fused", mesh=mesh_r)
+            ),
+            x, w,
+        )
+        assert got_r > 1  # composed fallback: per-stage launches
