@@ -240,8 +240,8 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes (CI: proves the path end-to-end)")
     ap.add_argument("--execution", default="reference",
-                    choices=["reference", "kernel", "sharded", "fp8",
-                             "fused"],
+                    choices=["reference", "kernel", "per_modulus_kernel",
+                             "sharded", "fp8", "fused"],
                     help="residue backend the measured section times "
                          "(fp8: the e4m3 digit-GEMM engine; fused: the "
                          "one-launch megakernel)")

@@ -1,0 +1,225 @@
+"""python -m repro.analysis — certify the traced pipeline across the matrix.
+
+Traces the *real* deployment path (`repro.linalg.matmul` under each
+`GemmPolicy`, plus a tiny-model train step fwd+bwd) across an
+execution x dtype x mode matrix at smoke shapes, runs every analysis pass
+the policy's backend mandates (``backend.analyze(plan, shape)``), the
+static CRT partial-split certificate, and the source lints — and exits
+nonzero if any finding survives.  CI runs this as the `tier1-analysis`
+job::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \\
+        PYTHONPATH=src python -m repro.analysis --matrix smoke
+
+With a single device the sharded rows run on a degenerate 1-device mesh
+(the passes still certify the collective layout of the traced program).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+#: smoke-matrix GEMM shape (matches the tier-1 fast profile)
+SMOKE_SHAPE = (32, 96, 24)
+
+#: small-but-valid moduli counts per compute dtype (the tier-1 profile)
+N_MODULI = {"float32": 5, "float64": 6, "complex64": 5, "complex128": 6}
+
+DTYPES = ("float32", "float64", "complex64", "complex128")
+MODES = ("fast", "accu")
+
+
+def _mesh_for(execution: str):
+    """A (data, model, residue) mesh for sharded rows: 2-way residue when
+    the host exposes >=2 devices, else degenerate 1x1x1."""
+    if execution != "sharded":
+        return None
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    r = 2 if jax.device_count() >= 2 else 1
+    devices = np.asarray(jax.devices()[:r]).reshape(1, 1, r)
+    return Mesh(devices, ("data", "model", "residue"))
+
+
+def _run_matmul_row(execution, dtype_name, mode, shape):
+    import jax
+    import jax.numpy as jnp
+
+    from repro import linalg
+    from repro.analysis import certify_partial_split, run_passes
+    from repro.core.policy import BACKEND_FOR_DTYPE, GemmPolicy
+
+    m, k, n = shape
+    kwargs = dict(
+        backend=BACKEND_FOR_DTYPE[dtype_name],
+        n_moduli=N_MODULI[dtype_name],
+        mode=mode,
+        execution=execution,
+        interpret=True,
+    )
+    mesh = _mesh_for(execution)
+    if mesh is not None:
+        kwargs["mesh"] = mesh
+    policy = GemmPolicy(**kwargs)
+    plan = policy.plan_for(m, k, n)
+    backend = policy.execution_backend()
+    passes = backend.analyze(plan, (m, k, n))
+
+    a = jnp.zeros((m, k), jnp.dtype(dtype_name))
+    b = jnp.zeros((k, n), jnp.dtype(dtype_name))
+    jaxpr = jax.make_jaxpr(
+        lambda x, w: linalg.matmul(x, w, policy=policy)
+    )(a, b)
+    findings = run_passes(passes, jaxpr)
+    findings += certify_partial_split(plan.ctx.moduli)
+    return findings, [p.name for p in passes]
+
+
+def _run_model_row(execution):
+    """Trace a tiny-model train step (fwd+bwd under `use_policy`) and run
+    the shape-independent passes (overflow, collectives, scan indices)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.analysis import run_passes
+    from repro.core.policy import GemmPolicy
+    from repro.models import Model
+    from repro.models.config import ModelConfig
+    from repro.optim import AdamWConfig
+    from repro.train.step import init_state, make_train_step
+
+    policy = GemmPolicy(
+        backend="ozaki2_f32", n_moduli=4, execution=execution, interpret=True
+    )
+    cfg = ModelConfig(
+        name="analysis-tiny", n_layers=2, d_model=32, vocab=64, n_heads=2,
+        n_kv_heads=2, head_dim=16, d_ff=64, dtype="float32", remat=True,
+        gemm_policy=policy,
+    )
+    model = Model(cfg)
+    opt = AdamWConfig()
+    step, _ = make_train_step(model, opt, donate=False)
+    params, opt_state = init_state(model, opt, jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jnp.asarray(
+            np.zeros((2, 16), dtype=np.int32), jnp.int32
+        )
+    }
+    jaxpr = jax.make_jaxpr(step)(params, opt_state, batch)
+    backend = policy.execution_backend()
+    plan = policy.plan_for(*SMOKE_SHAPE)
+    # no launch expectation: the step runs many GEMM shapes
+    passes = backend.analyze(plan, None)
+    return run_passes(passes, jaxpr), [p.name for p in passes]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static certification of the residue-emulation stack",
+    )
+    ap.add_argument("--matrix", choices=["smoke"], default="smoke",
+                    help="shape profile for the traced matrix (smoke: the "
+                         "tier-1 fast dims %s)" % (SMOKE_SHAPE,))
+    ap.add_argument("--executions", nargs="+", default=None,
+                    help="subset of GemmPolicy executions (default: all)")
+    ap.add_argument("--dtypes", nargs="+", default=None, choices=DTYPES,
+                    help="subset of compute dtypes (default: all four)")
+    ap.add_argument("--modes", nargs="+", default=None, choices=MODES,
+                    help="subset of scaling modes (default: fast and accu)")
+    ap.add_argument("--shape", nargs=3, type=int, metavar=("M", "K", "N"),
+                    default=None, help="override the matrix GEMM shape")
+    ap.add_argument("--skip-model", action="store_true",
+                    help="skip the model fwd+bwd rows")
+    ap.add_argument("--skip-lint", action="store_true",
+                    help="skip the source-level policy-surface lints")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="print every clean row, not just a summary")
+    args = ap.parse_args(argv)
+
+    import repro  # noqa: F401 - enables x64; the matrix certifies under it
+    from repro.analysis import lint_repo
+    from repro.core.policy import EXECUTIONS
+
+    executions = tuple(args.executions or EXECUTIONS)
+    unknown = set(executions) - set(EXECUTIONS)
+    if unknown:
+        ap.error(f"unknown executions {sorted(unknown)}; valid: {EXECUTIONS}")
+    dtypes = tuple(args.dtypes or DTYPES)
+    modes = tuple(args.modes or MODES)
+    shape = tuple(args.shape) if args.shape else SMOKE_SHAPE
+
+    all_findings = []
+    rows = clean = 0
+    for execution in executions:
+        for dtype_name in dtypes:
+            for mode in modes:
+                rows += 1
+                label = f"{execution:>18s} x {dtype_name:>10s} x {mode}"
+                try:
+                    findings, pass_names = _run_matmul_row(
+                        execution, dtype_name, mode, shape
+                    )
+                except Exception as exc:  # row must trace to certify
+                    print(f"ERROR {label}: trace failed: {exc!r}")
+                    all_findings.append(exc)
+                    continue
+                if findings:
+                    print(f"FAIL  {label}")
+                    for f in findings:
+                        print(f"      {f}")
+                    all_findings.extend(findings)
+                else:
+                    clean += 1
+                    if args.verbose:
+                        print(f"ok    {label}  [{', '.join(pass_names)}]")
+
+    if not args.skip_model:
+        for execution in ("kernel",):
+            rows += 1
+            label = f"{'model fwd+bwd':>18s} x {execution}"
+            try:
+                findings, pass_names = _run_model_row(execution)
+            except Exception as exc:
+                print(f"ERROR {label}: trace failed: {exc!r}")
+                all_findings.append(exc)
+                continue
+            if findings:
+                print(f"FAIL  {label}")
+                for f in findings:
+                    print(f"      {f}")
+                all_findings.extend(findings)
+            else:
+                clean += 1
+                if args.verbose:
+                    print(f"ok    {label}  [{', '.join(pass_names)}]")
+
+    if not args.skip_lint:
+        rows += 1
+        root = Path(__file__).resolve().parents[3]
+        findings = lint_repo(root)
+        if findings:
+            print(f"FAIL  {'source lints':>18s} ({root})")
+            for f in findings:
+                print(f"      {f}")
+            all_findings.extend(findings)
+        else:
+            clean += 1
+            if args.verbose:
+                print(f"ok    {'source lints':>18s}")
+
+    import jax
+
+    print(
+        f"repro.analysis: {clean}/{rows} rows certified clean "
+        f"({len(all_findings)} findings) on {jax.device_count()} device(s)"
+    )
+    return 1 if all_findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,165 @@
+"""Jaxpr walking utilities shared by every analysis pass.
+
+The traced programs this repo certifies are deeply nested: `pjit` bodies
+hold `shard_map` bodies hold `pallas_call` kernel jaxprs hold `cond`
+sub-jaxprs.  The helpers here generalize the launch-count walker that used
+to live in `kernels/common.py` (re-exported from there for compat) into a
+single recursive traversal that also tracks *where* an equation lives:
+
+  * `iter_subjaxprs(value)`  — duck-typed extraction of any jaxpr nested in
+    an eqn param value (ClosedJaxpr, Jaxpr, or lists/tuples of either);
+  * `iter_eqns(jaxpr)`       — depth-first traversal yielding every eqn in
+    every nesting level together with an :class:`EqnContext` (the enclosing
+    primitive path, whether the eqn sits inside a `scan` body, the grid of
+    the enclosing `pallas_call`, and the const bindings of its jaxpr);
+  * `count_primitive(jaxpr, name)` / `count_pallas_calls(fn, *args)` — the
+    launch-count primitives used by the certifier and the CI smoke bench.
+
+Everything duck-types `jax.core` objects (ClosedJaxpr: has ``.jaxpr`` and
+``.consts``; Jaxpr: has ``.eqns`` and ``.invars``) so it survives jax
+module reshuffles, exactly like the original `kernels/common` walker.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+def _is_closed(v) -> bool:
+    return hasattr(v, "jaxpr") and hasattr(v, "consts")
+
+
+def _is_open(v) -> bool:
+    return hasattr(v, "eqns") and hasattr(v, "invars")
+
+
+def unwrap(jaxpr):
+    """(ClosedJaxpr | Jaxpr) -> (open Jaxpr, consts | None)."""
+    if _is_closed(jaxpr):
+        return jaxpr.jaxpr, list(jaxpr.consts)
+    return jaxpr, None
+
+
+def iter_subjaxprs(v):
+    """Yield any (open) jaxprs nested inside an eqn-param value (duck-typed
+    so it survives jax.core module reshuffles)."""
+    if _is_closed(v):  # ClosedJaxpr
+        yield v.jaxpr
+    elif _is_open(v):  # Jaxpr
+        yield v
+    elif isinstance(v, (list, tuple)):
+        for item in v:
+            yield from iter_subjaxprs(item)
+
+
+def _closed_subjaxprs(v):
+    """Like `iter_subjaxprs` but keeps the consts: yields (Jaxpr, consts|None)."""
+    if _is_closed(v):
+        yield v.jaxpr, list(v.consts)
+    elif _is_open(v):
+        yield v, None
+    elif isinstance(v, (list, tuple)):
+        for item in v:
+            yield from _closed_subjaxprs(item)
+
+
+@dataclasses.dataclass
+class EqnContext:
+    """Where an eqn lives inside the traced program.
+
+    ``path``          primitive names of the enclosing eqns, outermost first
+                      (e.g. ``("pjit", "shard_map", "pallas_call")``);
+    ``in_scan_body``  True inside (any nesting of) a `scan` body jaxpr —
+                      the scope the SPMD index-width detector cares about;
+    ``pallas_grid``   the grid of the enclosing `pallas_call` (None outside
+                      any kernel) — the overflow certifier multiplies dot
+                      contractions by the innermost grid axis, since the
+                      repo's mod-GEMM kernels all accumulate across it;
+    ``consts``        var -> value bindings for the constvars of the eqn's
+                      own jaxpr (where the enclosing ClosedJaxpr exposed
+                      them), letting passes prove bounds "from consts".
+    """
+
+    path: tuple = ()
+    in_scan_body: bool = False
+    pallas_grid: tuple | None = None
+    consts: dict = dataclasses.field(default_factory=dict)
+
+
+def pallas_grid(params) -> tuple | None:
+    """Best-effort grid of a `pallas_call` eqn's params (duck-typed across
+    jax versions: grid_mapping.grid, else a plain 'grid' param)."""
+    gm = params.get("grid_mapping")
+    grid = getattr(gm, "grid", None)
+    if grid is None:
+        grid = params.get("grid")
+    if grid is None:
+        return None
+    try:
+        return tuple(int(g) for g in grid)
+    except (TypeError, ValueError):
+        return None
+
+
+def child_context(ctx: EqnContext, eqn) -> EqnContext:
+    """The context of jaxprs nested in `eqn`'s params, given `eqn`'s own."""
+    name = eqn.primitive.name
+    return EqnContext(
+        path=ctx.path + (name,),
+        in_scan_body=ctx.in_scan_body or name == "scan",
+        pallas_grid=(
+            pallas_grid(eqn.params) if name == "pallas_call" else ctx.pallas_grid
+        ),
+    )
+
+
+def iter_eqns(jaxpr, ctx: EqnContext | None = None):
+    """Depth-first (eqn, EqnContext) over `jaxpr` and every nested sub-jaxpr.
+
+    `jaxpr` may be a ClosedJaxpr (consts resolved into the context) or an
+    open Jaxpr.
+    """
+    open_jaxpr, consts = unwrap(jaxpr)
+    if ctx is None:
+        ctx = EqnContext()
+    if consts is not None:
+        ctx = dataclasses.replace(
+            ctx, consts=dict(zip(open_jaxpr.constvars, consts))
+        )
+    for eqn in open_jaxpr.eqns:
+        yield eqn, ctx
+        sub_ctx = child_context(ctx, eqn)
+        for v in eqn.params.values():
+            for sub, sub_consts in _closed_subjaxprs(v):
+                src = sub if sub_consts is None else _Closed(sub, sub_consts)
+                yield from iter_eqns(src, sub_ctx)
+
+
+@dataclasses.dataclass
+class _Closed:
+    """Minimal ClosedJaxpr stand-in (duck-typed by `unwrap`)."""
+
+    jaxpr: object
+    consts: list
+
+
+def count_primitive(jaxpr, name: str) -> int:
+    """Number of `name` equations in `jaxpr`, including nested sub-jaxprs."""
+    return sum(1 for eqn, _ in iter_eqns(jaxpr) if eqn.primitive.name == name)
+
+
+def count_pallas_calls(fn, *args, **kwargs) -> int:
+    """Number of `pallas_call` equations in the jaxpr of fn(*args, **kwargs).
+
+    This is the kernel-launch count of one execution (the grid of a single
+    call is not a launch multiplier), used by the launch-count certifier,
+    the regression tests and the CI smoke benchmark.
+    """
+    jaxpr = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    return count_primitive(jaxpr, "pallas_call")
+
+
+# historical name (pre-analysis-package); kept as a compat alias because the
+# kernels package and the fusion benchmark re-export it
+count_pallas_launches = count_pallas_calls

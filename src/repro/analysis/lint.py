@@ -1,0 +1,134 @@
+"""Source-level lints keeping the policy surface in sync across the repo.
+
+Unlike the jaxpr passes (which certify traced programs), these lints parse
+files: the README must document every `GemmPolicy` execution and field, and
+every CLI that exposes an ``--execution`` flag must offer exactly the
+executions `GemmPolicy` accepts — a new engine that forgets to update a
+launcher (or a launcher advertising an execution the policy rejects) is a
+finding, not a runtime surprise.
+
+`tests/test_docs.py` delegates its README-vs-code sync check here, and the
+`python -m repro.analysis` CLI runs :func:`lint_repo` alongside the jaxpr
+matrix.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+
+from .passes import Finding
+
+__all__ = ["execution_choices", "lint_policy_surface", "lint_repo"]
+
+#: CLIs that must expose the full execution axis
+EXECUTION_CLIS = (
+    "src/repro/launch/train.py",
+    "src/repro/launch/dryrun.py",
+    "src/repro/launch/serve.py",
+    "benchmarks/bench_throughput.py",
+)
+
+_LINT = "policy-surface"
+
+
+def execution_choices(path) -> list | None:
+    """The ``choices=[...]`` of the ``--execution`` argparse flag in `path`,
+    or None if the file defines no such flag with literal choices."""
+    tree = ast.parse(Path(path).read_text(), filename=str(path))
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "add_argument"):
+            continue
+        if not (node.args
+                and isinstance(node.args[0], ast.Constant)
+                and node.args[0].value == "--execution"):
+            continue
+        for kw in node.keywords:
+            if kw.arg == "choices" and isinstance(kw.value, (ast.List, ast.Tuple)):
+                vals = [
+                    el.value
+                    for el in kw.value.elts
+                    if isinstance(el, ast.Constant)
+                ]
+                return vals
+    return None
+
+
+def lint_policy_surface(root) -> list:
+    """README + CLI surface vs `GemmPolicy`'s literal execution axis."""
+    from ..core import policy as policy_mod
+    from ..core.policy import EXECUTIONS, GemmPolicy
+
+    root = Path(root)
+    findings: list[Finding] = []
+
+    # the typing literal and the runtime tuple must agree (the tuple is
+    # what validation and the CLIs key off; the literal is what IDEs see)
+    import typing
+
+    literal = typing.get_args(getattr(policy_mod, "Execution", None))
+    if literal and set(literal) != set(EXECUTIONS):
+        findings.append(
+            Finding(
+                _LINT,
+                "core/policy.py: Execution literal "
+                f"{sorted(literal)} != EXECUTIONS {sorted(EXECUTIONS)}",
+            )
+        )
+
+    readme = (root / "README.md").read_text()
+    for ex in EXECUTIONS:
+        if f"`{ex}`" not in readme:
+            findings.append(
+                Finding(
+                    _LINT,
+                    f"README.md does not document execution `{ex}` "
+                    "(every GemmPolicy execution must appear in backticks)",
+                )
+            )
+    for field in dataclasses.fields(GemmPolicy):
+        if field.name not in readme:
+            findings.append(
+                Finding(
+                    _LINT,
+                    f"README.md does not mention GemmPolicy field "
+                    f"`{field.name}`",
+                )
+            )
+
+    for rel in EXECUTION_CLIS:
+        path = root / rel
+        if not path.exists():
+            findings.append(Finding(_LINT, f"{rel}: file not found"))
+            continue
+        choices = execution_choices(path)
+        if choices is None:
+            findings.append(
+                Finding(
+                    _LINT,
+                    f"{rel}: no --execution argument with literal choices",
+                )
+            )
+        elif set(choices) != set(EXECUTIONS):
+            missing = sorted(set(EXECUTIONS) - set(choices))
+            extra = sorted(set(choices) - set(EXECUTIONS))
+            detail = []
+            if missing:
+                detail.append(f"missing {missing}")
+            if extra:
+                detail.append(f"unknown {extra}")
+            findings.append(
+                Finding(
+                    _LINT,
+                    f"{rel}: --execution choices out of sync with "
+                    f"GemmPolicy.EXECUTIONS ({'; '.join(detail)})",
+                )
+            )
+    return findings
+
+
+def lint_repo(root) -> list:
+    """All source lints for the repo rooted at `root`."""
+    return lint_policy_surface(root)

@@ -168,6 +168,16 @@ class ReferenceBackend:
     # separate products and runs one launch per modulus
     fused_karatsuba = False
     modulus_batched = False
+    uses_pallas = False
+
+    def analyze(self, plan, shape=None):
+        """Static-analysis suite certifying this engine (repro.analysis):
+        overflow/exactness, collective safety, scan index width, and —
+        given ``shape=(m, k, n)`` — the launch-count certificate (0 for
+        the jnp reference path)."""
+        from ..analysis import passes_for_backend
+
+        return passes_for_backend(self, plan, shape)
 
     def cast(self, x, e, axis, ctx, n_limbs):
         """quantize by 2^e along `axis` and residue-decompose (steps IV/V-i/ii)."""
@@ -230,6 +240,15 @@ class Fp8Backend:
     fused_karatsuba = True
     modulus_batched = True
     engine = "fp8"
+    uses_pallas = True
+
+    def analyze(self, plan, shape=None):
+        """Static-analysis suite certifying the fp8 engine: the overflow
+        pass uses `FP8_K_CHUNK_LIMIT` for the digit dots (see
+        repro.analysis.passes_for_backend)."""
+        from ..analysis import passes_for_backend
+
+        return passes_for_backend(self, plan, shape)
 
     def _shared(self):
         # lazy import: core stays importable without the Pallas stack

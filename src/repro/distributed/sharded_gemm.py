@@ -318,6 +318,20 @@ class ShardedBackend:
         # only when the residue axis is unsharded (r == 1, static moduli)
         return getattr(self.inner, "megakernel", False)
 
+    @property
+    def uses_pallas(self) -> bool:
+        return getattr(self.inner, "uses_pallas", True)
+
+    def analyze(self, plan, shape=None):
+        """Static-analysis suite certifying the sharded pipeline: the
+        collective-safety pass is the load-bearing one here (only exact
+        f64 CRT partials may psum), and the launch-count certificate is
+        derived from `shard_factors` (the fused worker engages only on
+        m/n-only meshes).  See repro.analysis.passes_for_backend."""
+        from ..analysis import passes_for_backend
+
+        return passes_for_backend(self, plan, shape)
+
     def resolve_axes(self, m: int, n: int) -> GemmShardAxes:
         return resolve_gemm_axes(self.mesh, m, n, self.shard_axes)
 

@@ -204,37 +204,18 @@ def block_and_padded(
 
 
 # ------------------------------------------------- launch-count diagnostics
+# The jaxpr walker grew into the repro.analysis pass framework (PR 7);
+# re-exported here because older callers import it from kernels.common.
 
-
-def _iter_subjaxprs(v):
-    """Yield any jaxprs nested inside an eqn-param value (duck-typed so it
-    survives jax.core module reshuffles)."""
-    if hasattr(v, "jaxpr") and hasattr(v, "consts"):  # ClosedJaxpr
-        yield v.jaxpr
-    elif hasattr(v, "eqns") and hasattr(v, "invars"):  # Jaxpr
-        yield v
-    elif isinstance(v, (list, tuple)):
-        for item in v:
-            yield from _iter_subjaxprs(item)
+from ..analysis.jaxprs import (  # noqa: E402,F401
+    count_pallas_calls,
+    count_pallas_launches,
+    iter_subjaxprs as _iter_subjaxprs,
+)
 
 
 def _count_in_jaxpr(jaxpr) -> int:
-    total = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            total += 1
-        for v in eqn.params.values():
-            for sub in _iter_subjaxprs(v):
-                total += _count_in_jaxpr(sub)
-    return total
+    """Compat shim: pallas_call count of one (open) jaxpr, nested included."""
+    from ..analysis.jaxprs import count_primitive
 
-
-def count_pallas_launches(fn, *args, **kwargs) -> int:
-    """Number of `pallas_call` equations in the jaxpr of fn(*args, **kwargs).
-
-    This is the kernel-launch count of one execution (the grid of a single
-    call is not a launch multiplier), used by the launch-count regression
-    tests and the CI smoke benchmark.
-    """
-    jaxpr = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
-    return _count_in_jaxpr(jaxpr.jaxpr)
+    return count_primitive(jaxpr, "pallas_call")

@@ -64,6 +64,18 @@ class _KernelBackendBase:
     # by the perfmodel-driven 'auto' plan selections)
     fused_karatsuba = True
     modulus_batched = False
+    uses_pallas = True
+
+    def analyze(self, plan, shape=None):
+        """Static-analysis suite certifying this kernel backend (see
+        repro.analysis.passes_for_backend): overflow/exactness, collective
+        safety, scan index width, and — given ``shape=(m, k, n)`` — a
+        launch-count certificate pinned to the perfmodel prediction for
+        this backend's capabilities (modulus_batched / fused_karatsuba /
+        megakernel)."""
+        from ..analysis import passes_for_backend
+
+        return passes_for_backend(self, plan, shape)
 
     def cast(self, x, e, axis, ctx: CRTContext, n_limbs: int):
         s1, s2 = split_scale_exponent(e)

@@ -179,11 +179,15 @@ def ssd_scan(xbar, a_dt, bmat, cmat, init_state=None, chunk=128):
     l_mat = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))  # (B,Nc,H,Q,Q)
     g_mat = jnp.einsum("bcin,bcjn->bcij", cc, bc)
     y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp", g_mat, l_mat, xc)
-    # per-chunk end states
-    decay_states = jnp.exp(acs[:, :, -1:, :] - acs)  # (B,Nc,Q,H)
+    # per-chunk end states.  NB: slice-then-squeeze, not `acs[:, :, -1, :]`
+    # — a negative *integer* index lowers to a dynamic_slice whose
+    # normalized index scalars are s64 under x64, inside the remat layer
+    # scan (the SPMD partitioner bug class ScanIndexWidthPass flags).
+    a_last = acs[:, :, -1:, :]  # (B,Nc,1,H) static slice
+    decay_states = jnp.exp(a_last - acs)  # (B,Nc,Q,H)
     states = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", decay_states, bc, xc)
     # inter-chunk recurrence
-    chunk_decay = jnp.exp(acs[:, :, -1, :])  # (B,Nc,H)
+    chunk_decay = jnp.exp(jnp.squeeze(a_last, 2))  # (B,Nc,H)
 
     def body(carry, xs):
         st, gamma = xs
@@ -375,7 +379,9 @@ def rglru_prefill(cfg: ModelConfig, p, x, positions, cache):
     h = _rglru_apply_seq(cfg, p, xc)
     y = (h * gate).astype(x.dtype)
     out = apply_linear(p["out"], y, cfg.gemm_policy)
-    return out, {"conv": conv, "h": h[:, -1]}
+    # slice-then-squeeze: `h[:, -1]` would emit an s64 dynamic_slice inside
+    # the prefill layer scan (ScanIndexWidthPass bug class)
+    return out, {"conv": conv, "h": jnp.squeeze(h[:, -1:], 1)}
 
 
 def rglru_decode(cfg: ModelConfig, p, x, cache, pos):

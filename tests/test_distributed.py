@@ -255,6 +255,64 @@ def test_emulated_train_step_2device_mesh():
     assert "OK" in out
 
 
+def test_ssd_train_step_2device_mesh_and_index_widths():
+    """Regression (found by `repro.analysis.ScanIndexWidthPass`, PR 7): the
+    SSD block's chunk-boundary gathers used negative *integer* indexing
+    (`acs[:, :, -1, :]`, `h[:, -1]`), which lowers to a dynamic_slice whose
+    normalized index scalars are s64 under jax_enable_x64 — inside the remat
+    layer scan, i.e. exactly the s64-index-in-scan-body shape the SPMD
+    partitioner chokes on (the PR 4 bug class the two tests above pin for
+    the layer scan and chunked CE).  `blocks.ssd_scan` / `rglru_prefill`
+    now slice-then-squeeze (a static lax.slice).  Certify the traced train
+    step index-width-clean AND take a finite emulated step on a real
+    (forced-host) 2-device mesh.
+
+    Not slow-marked: the reduced mamba2 config is tiny and this is the only
+    tier-1 coverage of an SSD/recurrent block under SPMD.
+    """
+    out = _run_sub(
+        """
+        import dataclasses
+        from repro.analysis import ScanIndexWidthPass
+        from repro.configs import get_reduced
+        from repro.core.policy import GemmPolicy
+        from repro.models import Model
+        from repro.train.step import make_train_step, init_state
+        from repro.optim import AdamWConfig
+
+        mesh = jax.make_mesh((2, 1), ("data", "model"))
+        cfg = dataclasses.replace(
+            get_reduced("mamba2-130m"), dtype="float32", remat=True,
+            gemm_policy=GemmPolicy(
+                backend="ozaki2_f32", n_moduli=4, execution="reference"
+            ),
+        )
+        model = Model(cfg)
+        step, sh = make_train_step(model, AdamWConfig(), mesh=mesh, donate=False)
+        params, opt = init_state(
+            model, AdamWConfig(), jax.random.PRNGKey(0), sh
+        )
+        batch = jax.device_put(
+            {"tokens": jnp.asarray(
+                np.random.default_rng(0).integers(0, cfg.vocab, (4, 16)),
+                jnp.int32,
+            )},
+            sh["batch"],
+        )
+        findings = ScanIndexWidthPass().run(
+            jax.make_jaxpr(step)(params, opt, batch)
+        )
+        assert findings == [], [str(f) for f in findings]
+        _, _, metrics = step(params, opt, batch)
+        loss = float(metrics["loss"])
+        assert np.isfinite(loss), loss
+        print("OK", loss)
+        """,
+        devices=2,
+    )
+    assert "OK" in out
+
+
 def test_chunked_ce_train_step_2device_mesh():
     """Regression: `loss_vocab_chunk` on a multi-device mesh died the same
     s64-vs-s32 SPMD death as the layer scan (PR 4) — `Model._chunked_ce`

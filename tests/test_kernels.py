@@ -5,13 +5,15 @@ reconstruction kernel is compared at its double-single precision.  The
 modulus-batched kernels (one `pallas_call` for all N planes) must be
 BIT-IDENTICAL to the retained per-modulus launches, including ragged
 (non-block-divisible) shapes and chunked-K carries, and the pipeline's
-launch counts must match the perfmodel's `kernel_launch_count`.
+launch counts must match the perfmodel's `kernel_launch_count` (certified
+through the shared `repro.analysis.LaunchCountPass`).
 """
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
 from conftest import FAST_K, FAST_M, FAST_N, phi_matrix
+from repro.analysis import certify_launch_count
 from repro.core import perfmodel
 from repro.core.executor import execute_plan
 from repro.core.moduli import make_crt_context
@@ -20,7 +22,6 @@ from repro.kernels import (
     FusedBackend,
     KernelBackend,
     PerModulusKernelBackend,
-    count_pallas_launches,
     crt_garner,
     int8_mod_gemm,
     int8_mod_gemm_batched,
@@ -299,10 +300,11 @@ def test_chunked_k_carry_epilogue(rng, monkeypatch):
     chunked = np.asarray(execute_plan(plan, a, b, BATCHED))
     np.testing.assert_array_equal(whole, chunked)
     # 3 chunks of k=160 -> 2 casts + 3 products + 1 reconstruct = 6 launches
-    n_launches = count_pallas_launches(
-        lambda x, y: execute_plan(plan, x, y, BATCHED), a, b
-    )
-    assert n_launches == perfmodel.kernel_launch_count(5, "real", n_chunks=3) == 6
+    want = perfmodel.kernel_launch_count(5, "real", n_chunks=3)
+    assert want == 6
+    assert certify_launch_count(
+        want, lambda x, y: execute_plan(plan, x, y, BATCHED), a, b
+    ) == []
 
     # complex Karatsuba: CR/CI chunk carries thread through the fused kernel
     cchunked = np.asarray(execute_plan(cplan, ca, cb, BATCHED))
@@ -317,34 +319,37 @@ def test_launch_counts_independent_of_n(rng, n_moduli):
     perfmodel's `kernel_launch_count` (which drives formulation='auto')."""
     a, b = _operands(rng, np.float32)
     plan = _garner_plan(np.float32, n_moduli=n_moduli)
-    got = count_pallas_launches(
-        lambda x, y: execute_plan(plan, x, y, BATCHED), a, b
-    )
-    assert got == perfmodel.kernel_launch_count(n_moduli, "real") == 4
-    got_pm = count_pallas_launches(
-        lambda x, y: execute_plan(plan, x, y, PER_MODULUS), a, b
-    )
-    assert got_pm == perfmodel.kernel_launch_count(
+    want = perfmodel.kernel_launch_count(n_moduli, "real")
+    assert want == 4
+    assert certify_launch_count(
+        want, lambda x, y: execute_plan(plan, x, y, BATCHED), a, b
+    ) == []
+    want_pm = perfmodel.kernel_launch_count(
         n_moduli, "real", modulus_batched=False
-    ) == 3 + n_moduli
+    )
+    assert want_pm == 3 + n_moduli
+    assert certify_launch_count(
+        want_pm, lambda x, y: execute_plan(plan, x, y, PER_MODULUS), a, b
+    ) == []
 
 
 @pytest.mark.parametrize("formulation", ["karatsuba", "block_a"])
 def test_launch_counts_complex(rng, formulation):
     ca, cb = _operands(rng, np.complex64)
     plan = _garner_plan(np.complex64, formulation=formulation, n_moduli=4)
-    got = count_pallas_launches(
-        lambda x, y: execute_plan(plan, x, y, BATCHED), ca, cb
-    )
     # stacked casts (re+im together), one batched product, stacked CR/CI
     # reconstruction: 4 launches total regardless of N or formulation
-    assert got == perfmodel.kernel_launch_count(4, formulation) == 4
-    got_pm = count_pallas_launches(
-        lambda x, y: execute_plan(plan, x, y, PER_MODULUS), ca, cb
-    )
-    assert got_pm == perfmodel.kernel_launch_count(
+    want = perfmodel.kernel_launch_count(4, formulation)
+    assert want == 4
+    assert certify_launch_count(
+        want, lambda x, y: execute_plan(plan, x, y, BATCHED), ca, cb
+    ) == []
+    want_pm = perfmodel.kernel_launch_count(
         4, formulation, modulus_batched=False
     )
+    assert certify_launch_count(
+        want_pm, lambda x, y: execute_plan(plan, x, y, PER_MODULUS), ca, cb
+    ) == []
 
 
 def test_batched_kernels_direct_parity(rng):
@@ -436,10 +441,11 @@ def test_fused_launch_count_real(rng, dtype, mode):
     identical to the 4-launch kernel path."""
     a, b = _operands(rng, dtype)
     plan = _garner_plan(dtype, mode)
-    got = count_pallas_launches(
-        lambda x, y: execute_plan(plan, x, y, FUSED), a, b
-    )
-    assert got == perfmodel.kernel_launch_count(5, "real", fused=True) == 1
+    want = perfmodel.kernel_launch_count(5, "real", fused=True)
+    assert want == 1
+    assert certify_launch_count(
+        want, lambda x, y: execute_plan(plan, x, y, FUSED), a, b
+    ) == []
     np.testing.assert_array_equal(
         np.asarray(execute_plan(plan, a, b, FUSED)),
         np.asarray(execute_plan(plan, a, b, BATCHED)),
@@ -456,10 +462,11 @@ def test_fused_launch_count_complex(rng, dtype, mode, formulation):
     Karatsuba megakernel fuses cast + D/E/F + both Garner epilogues)."""
     a, b = _operands(rng, dtype)
     plan = _garner_plan(dtype, mode, formulation, n_moduli=4)
-    got = count_pallas_launches(
-        lambda x, y: execute_plan(plan, x, y, FUSED), a, b
-    )
-    assert got == perfmodel.kernel_launch_count(4, formulation, fused=True) == 1
+    want = perfmodel.kernel_launch_count(4, formulation, fused=True)
+    assert want == 1
+    assert certify_launch_count(
+        want, lambda x, y: execute_plan(plan, x, y, FUSED), a, b
+    ) == []
     np.testing.assert_array_equal(
         np.asarray(execute_plan(plan, a, b, FUSED)),
         np.asarray(execute_plan(plan, a, b, BATCHED)),
@@ -479,14 +486,14 @@ def test_fused_prepared_one_launch(rng, dtype, mode):
     wk = PreparedOperand(b, 5, side="right", backend=BATCHED, keep_raw=keep_raw)
     wf = PreparedOperand(b, 5, side="right", backend=FUSED, keep_raw=keep_raw)
     kw = dict(method="garner", mode=mode)
-    got = count_pallas_launches(
-        lambda x: gemm_prepared(wf, x, backend=FUSED, **kw), a
-    )
     want_model = perfmodel.kernel_launch_count(
         5, "real" if dtype == np.float32 else "karatsuba",
         fused=True, prepared=True,
     )
-    assert got == want_model == 1
+    assert want_model == 1
+    assert certify_launch_count(
+        want_model, lambda x: gemm_prepared(wf, x, backend=FUSED, **kw), a
+    ) == []
     np.testing.assert_array_equal(
         np.asarray(gemm_prepared(wf, a, backend=FUSED, **kw)),
         np.asarray(gemm_prepared(wk, a, backend=BATCHED, **kw)),
@@ -515,12 +522,11 @@ def test_fused_chunked_k_one_launch(rng, monkeypatch):
     np.testing.assert_array_equal(
         cwhole, np.asarray(execute_plan(cplan, ca, cb, FUSED))
     )
-    got = count_pallas_launches(
-        lambda x, y: execute_plan(plan, x, y, FUSED), a, b
-    )
-    assert got == perfmodel.kernel_launch_count(
-        5, "real", n_chunks=3, fused=True
-    ) == 1
+    want = perfmodel.kernel_launch_count(5, "real", n_chunks=3, fused=True)
+    assert want == 1
+    assert certify_launch_count(
+        want, lambda x, y: execute_plan(plan, x, y, FUSED), a, b
+    ) == []
 
 
 def test_fused_n_block_launch_per_block(rng):
@@ -529,12 +535,11 @@ def test_fused_n_block_launch_per_block(rng):
     bitwise identical to the blocked kernel path."""
     a, b = _operands(rng, np.float32)
     plan = _garner_plan(np.float32, n_block=8)  # FAST_N=24 -> 3 blocks
-    got = count_pallas_launches(
-        lambda x, y: execute_plan(plan, x, y, FUSED), a, b
-    )
-    assert got == perfmodel.kernel_launch_count(
-        5, "real", fused=True, n_blocks=3
-    ) == 3
+    want = perfmodel.kernel_launch_count(5, "real", fused=True, n_blocks=3)
+    assert want == 3
+    assert certify_launch_count(
+        want, lambda x, y: execute_plan(plan, x, y, FUSED), a, b
+    ) == []
     np.testing.assert_array_equal(
         np.asarray(execute_plan(plan, a, b, FUSED)),
         np.asarray(execute_plan(plan, a, b, BATCHED)),

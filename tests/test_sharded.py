@@ -40,7 +40,7 @@ from repro.distributed.sharding import (
     residue_plane_specs,
     resolve_gemm_axes,
 )
-from repro.kernels.common import _iter_subjaxprs
+from repro.analysis import CollectiveSafetyPass, collect_collectives
 
 M, K, N = FAST_M, FAST_K, FAST_N
 DTYPES = [np.float32, np.float64, np.complex64, np.complex128]
@@ -191,44 +191,21 @@ def test_sharded_reference_inner_bitwise(rng):
 # ==================================================== collective hygiene
 
 
-_COLLECTIVE_PRIMS = {
-    "psum", "pmax", "pmin", "all_gather", "all_to_all", "ppermute",
-    "reduce_scatter", "psum2",
-}
-
-
-def _collect_collectives(jaxpr, out):
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name in _COLLECTIVE_PRIMS:
-            out.append(
-                (
-                    eqn.primitive.name,
-                    [v.aval.dtype for v in eqn.invars if hasattr(v, "aval")],
-                )
-            )
-        for v in eqn.params.values():
-            for sub in _iter_subjaxprs(v):
-                _collect_collectives(sub, out)
-    return out
-
-
 def test_no_int8_crosses_the_mesh(rng):
     """The distribution contract: the ONLY communicated arrays are the
     exact f64 partial-reconstruction planes (and int32 bound maxima in accu
-    mode) — never the int8 residue planes."""
+    mode) — never the int8 residue planes.  Certified by the shared
+    `repro.analysis.CollectiveSafetyPass` (which the analysis CLI also runs
+    on every matrix row in CI)."""
     mesh = _mesh(1, 1, 2)
     x, w = _operands(rng, np.complex64)
     for mode in ("fast", "accu"):
         pol = _policy(np.complex64, "sharded", mode=mode, mesh=mesh)
         jaxpr = jax.make_jaxpr(lambda a, b: policy_matmul(a, b, pol))(x, w)
-        colls = _collect_collectives(jaxpr.jaxpr, [])
+        findings = CollectiveSafetyPass().run(jaxpr)
+        assert findings == [], [str(f) for f in findings]
+        colls = collect_collectives(jaxpr)
         assert colls, "sharded residue execution must communicate via psum"
-        for name, dtypes in colls:
-            for dt in dtypes:
-                assert dt != jnp.int8, (
-                    f"int8 array crosses the mesh via {name}: the sharded "
-                    "pipeline must gather only reconstructed output"
-                )
         # the payload is the exact f64 partial planes
         assert any(
             name == "psum" and any(dt == jnp.float64 for dt in dtypes)
@@ -475,14 +452,15 @@ def test_fused_worker_engages_on_mn_mesh(rng):
     exactly ONE `pallas_call` — while a residue-sharded mesh falls back to
     the composed worker (multiple launches, two-phase psum), since the fused
     Garner epilogue needs the full compile-time-static modulus set."""
-    from repro.kernels import FusedBackend, KernelBackend, count_pallas_launches
+    from repro.analysis import count_pallas_calls
+    from repro.kernels import FusedBackend, KernelBackend
     from repro.distributed.sharded_gemm import ShardedBackend
 
     x, w = _operands(rng, np.float32)
     mesh_mn = _mesh(1, 2, 1)
     assert ShardedBackend(FusedBackend(True), mesh_mn, None).megakernel
     assert not ShardedBackend(KernelBackend(True), mesh_mn, None).megakernel
-    got_mn = count_pallas_launches(
+    got_mn = count_pallas_calls(
         lambda a, b: policy_matmul(
             a, b, _policy(np.float32, "fused", mesh=mesh_mn)
         ),
@@ -491,7 +469,7 @@ def test_fused_worker_engages_on_mn_mesh(rng):
     assert got_mn == 1
     if len(jax.devices()) >= 2:
         mesh_r = _mesh(1, 1, 2)
-        got_r = count_pallas_launches(
+        got_r = count_pallas_calls(
             lambda a, b: policy_matmul(
                 a, b, _policy(np.float32, "fused", mesh=mesh_r)
             ),
