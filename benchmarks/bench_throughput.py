@@ -16,7 +16,8 @@ CLI (the tracked-throughput harness; `benchmarks.run` still calls `run()`):
 
     PYTHONPATH=src python -m benchmarks.bench_throughput \
         [--smoke] [--execution reference|kernel|sharded|fp8|fused] \
-        [--residue R] [--mesh DxM] [--json BENCH_throughput.json] [--force]
+        [--residue R] [--mesh DxM] [--json BENCH_throughput.json] [--force] \
+        [--calibrate off|load|run] [--compare BASELINE.json]
 
 `--execution` picks the residue backend the measured section times
 (`sharded` builds a host mesh — run under
@@ -24,10 +25,19 @@ XLA_FLAGS=--xla_force_host_platform_device_count=N to span N devices;
 `fp8` runs the e4m3 digit-GEMM engine; `fused` the one-launch megakernel)
 and every measured record reports BOTH aggregate and per-device GEMM
 throughput, written to the `--json` file keyed by the full measurement
-config (execution, mesh, devices, name) — re-running replaces exactly the
-re-measured keys, so BENCH_throughput.json accumulates the kernel-vs-fused
-(and fp8/sharded) trajectories side by side; records it cannot key-match
-are never dropped without `--force`.
+config (execution, mesh, devices, name) plus the active calibration-cache
+stamp — re-running replaces exactly the re-measured keys, so
+BENCH_throughput.json accumulates the kernel-vs-fused (and fp8/sharded,
+and tuned-vs-default-block) trajectories side by side; records it cannot
+key-match are never dropped without `--force`.
+
+`--calibrate load|run` activates a `repro.tune` calibration cache before
+measuring, so the Pallas executions launch the autotuned block shapes
+(records are stamped with the cache hash).  `--compare baseline.json`
+diffs this run against a previous run's records by measurement config and
+exits nonzero when any per-device throughput regresses more than
+`--tolerance` (default 15%) — the CI guard that tuned blocks never ship
+slower than the static defaults.
 """
 from __future__ import annotations
 
@@ -190,7 +200,10 @@ def measured_policy(
     import repro
     from repro import linalg
     from repro.core import GemmPolicy
+    from repro.tune.cache import calibration_hash, current_calibration
 
+    cal = current_calibration()
+    cal_stamp = calibration_hash(cal) if cal is not None else None
     mesh = _bench_mesh(execution, residue, mesh_arg)
     n_dev = int(np.prod(list(mesh.shape.values()))) if mesh is not None else 1
     mesh_name = (
@@ -226,6 +239,7 @@ def measured_policy(
                         "us_per_call": us,
                         "tflops_aggregate": agg,
                         "tflops_per_device": agg / n_dev,
+                        "calibration": cal_stamp,
                     })
 
 
@@ -233,6 +247,86 @@ def run():
     model_tables()
     measured()
     ozaki1_measured()
+
+
+def record_key(r):
+    """Dedupe key of one tracked record, or None if unreadable.
+
+    The measurement config (execution, mesh, devices, name) plus the
+    calibration-cache stamp — tuned and untuned runs of the same config are
+    distinct trajectories and must coexist in the JSON.
+    """
+    try:
+        key = (r["execution"], r["mesh"], r["devices"], r["name"])
+    except (KeyError, TypeError):
+        return None
+    return key + (r.get("calibration"),)
+
+
+def merge_records(old, new, *, force: bool = False):
+    """Merge `new` measured records into the `old` tracked list.
+
+    A record is replaced only when this run re-measured its exact
+    `record_key` — a kernel run must not clobber the fused/fp8/sharded
+    runs, a 2x2-mesh run must not clobber the 1x8 trajectory of the same
+    execution, and a calibrated run must not clobber the untuned baseline.
+    Old records are also deduped among themselves (same key: last one
+    wins), so a file that accumulated duplicates is repaired on rewrite.
+    Records whose key cannot be read (foreign or pre-key schema) are never
+    dropped silently: that raises with a hint unless `force`.
+    """
+    unkeyed = [r for r in old if record_key(r) is None]
+    if unkeyed and not force:
+        raise SystemExit(
+            f"--json target holds {len(unkeyed)} records without an "
+            "(execution, mesh, devices, name) key; refusing to silently "
+            "overwrite them — re-run with --force to drop, or point "
+            "--json at a fresh file"
+        )
+    new_keys = {record_key(r) for r in new}
+    kept: dict = {}
+    for r in old:
+        k = record_key(r)
+        if k is not None and k not in new_keys:
+            kept[k] = r
+    return list(kept.values()) + list(new)
+
+
+def compare_records(records, baseline, *, tolerance: float = 0.15):
+    """Regression strings for records slower than the baseline run.
+
+    Matches by measurement config (execution, mesh, devices, name) —
+    deliberately ignoring the calibration stamp, so a tuned run is held to
+    the untuned baseline's bar — and takes the best (max) per-device
+    throughput over baseline duplicates.  A record is a regression when
+    its tflops_per_device drops more than `tolerance` (fractional) below
+    that.  Configs absent from the baseline are skipped (new coverage is
+    not a regression).
+    """
+    best: dict = {}
+    for r in baseline:
+        k = record_key(r)
+        if k is None:
+            continue
+        v = r.get("tflops_per_device")
+        if v is None or not np.isfinite(v) or v <= 0:
+            continue
+        k = k[:4]
+        best[k] = max(best.get(k, 0.0), float(v))
+    regressions = []
+    for r in records:
+        k = record_key(r)
+        if k is None or k[:4] not in best:
+            continue
+        base = best[k[:4]]
+        cur = float(r["tflops_per_device"])
+        if cur < (1.0 - tolerance) * base:
+            regressions.append(
+                f"{'/'.join(map(str, k[:4]))}: {cur:.4f} tflops/device vs "
+                f"baseline {base:.4f} ({cur / base - 1.0:+.1%}, "
+                f"tolerance -{tolerance:.0%})"
+            )
+    return regressions
 
 
 def main():
@@ -254,7 +348,20 @@ def main():
                     help="DxM data/model layout for the sharded mesh")
     ap.add_argument("--json", default="BENCH_throughput.json",
                     help="write measured records here (tracked throughput)")
+    ap.add_argument("--compare", default=None, metavar="BASELINE.json",
+                    help="after measuring, diff this run's records against "
+                         "the records in BASELINE.json by (execution, mesh, "
+                         "devices, name) and exit nonzero when any "
+                         "per-device throughput regresses more than "
+                         "--tolerance (the JSON is still written first)")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="fractional throughput drop --compare tolerates "
+                         "before failing (default 0.15)")
+    from repro.tune.cli import add_calibration_args, apply_calibration_args
+
+    add_calibration_args(ap)
     args = ap.parse_args()
+    apply_calibration_args(args, smoke=args.smoke)
 
     sizes = (48, 96) if args.smoke else (256, 512)
     records: list = []
@@ -264,21 +371,6 @@ def main():
         sizes, args.execution, args.residue, args.mesh, records
     )
     if args.json:
-        # Accumulate keyed by the full measurement config: a record is
-        # replaced only when this run re-measured its exact
-        # (execution, mesh, devices, name) key — a kernel run must not
-        # clobber the fused/fp8/sharded runs, and a 2x2-mesh run must not
-        # clobber the 1x8 trajectory of the same execution.  Records whose
-        # key cannot be read (foreign or pre-key schema) are never dropped
-        # silently: that refuses with a hint unless --force.
-        def _key(r):
-            try:
-                return (r["execution"], r["mesh"], r["devices"], r["name"])
-            except (KeyError, TypeError):
-                return None
-
-        new_keys = {_key(r) for r in records}
-        kept: list = []
         try:
             with open(args.json) as f:
                 old = json.load(f).get("records", [])
@@ -290,17 +382,11 @@ def main():
                 f"({e}); refusing to overwrite — fix or remove it, or "
                 f"point --json elsewhere"
             )
-        unkeyed = [r for r in old if _key(r) is None]
-        if unkeyed and not args.force:
-            raise SystemExit(
-                f"--json target {args.json!r} holds {len(unkeyed)} records "
-                "without an (execution, mesh, devices, name) key; refusing "
-                "to silently overwrite them — re-run with --force to drop, "
-                "or point --json at a fresh file"
-            )
-        kept = [r for r in old if _key(r) is not None and _key(r) not in new_keys]
         with open(args.json, "w") as f:
-            json.dump({"records": kept + records}, f, indent=1)
+            json.dump(
+                {"records": merge_records(old, records, force=args.force)},
+                f, indent=1,
+            )
     # CI contract: the run must produce finite nonzero throughput records
     # (an explicit raise, not an assert — CI must fail under python -O too)
     bad = [
@@ -313,6 +399,32 @@ def main():
         raise SystemExit(
             f"bench_throughput produced no usable records: {bad or 'empty'}"
         )
+    if args.compare:
+        try:
+            with open(args.compare) as f:
+                baseline = json.load(f).get("records", [])
+        except (OSError, ValueError) as e:
+            raise SystemExit(f"--compare baseline {args.compare!r}: {e}")
+        regressions = compare_records(
+            records, baseline, tolerance=args.tolerance
+        )
+        for line in regressions:
+            print(f"REGRESSION {line}")
+        matched = sum(
+            1 for r in records
+            if record_key(r) is not None
+            and record_key(r)[:4] in {
+                record_key(b)[:4] for b in baseline
+                if record_key(b) is not None
+            }
+        )
+        print(
+            f"bench_throughput --compare: {matched}/{len(records)} records "
+            f"matched against {args.compare}; {len(regressions)} "
+            f"regression(s) beyond -{args.tolerance:.0%}"
+        )
+        if regressions:
+            raise SystemExit(2)
 
 
 if __name__ == "__main__":

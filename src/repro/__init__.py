@@ -20,5 +20,24 @@ if os.environ.get("REPRO_NO_X64", "0") != "1":
 from . import linalg  # noqa: E402
 from .linalg import current_mesh, current_policy, use_mesh, use_policy  # noqa: E402
 
-__all__ = ["current_mesh", "current_policy", "linalg", "use_mesh", "use_policy"]
+# On-device calibration scoping (repro.tune): `use_calibration` /
+# `set_calibration` make the perfmodel 'auto' selections price against the
+# measured HW and the Pallas kernels launch autotuned block shapes; with no
+# calibration active, behaviour is identical to the hardware presets.
+from .tune import (  # noqa: E402
+    current_calibration,
+    set_calibration,
+    use_calibration,
+)
+
+__all__ = [
+    "current_calibration",
+    "current_mesh",
+    "current_policy",
+    "linalg",
+    "set_calibration",
+    "use_calibration",
+    "use_mesh",
+    "use_policy",
+]
 __version__ = "1.0.0"

@@ -133,6 +133,13 @@ def main(argv=None) -> int:
                     help="subset of scaling modes (default: fast and accu)")
     ap.add_argument("--shape", nargs=3, type=int, metavar=("M", "K", "N"),
                     default=None, help="override the matrix GEMM shape")
+    ap.add_argument("--calibration", default=None, metavar="PATH",
+                    help="repro.tune calibration cache to load before "
+                         "tracing: the matrix then certifies the *tuned* "
+                         "configuration — measured-HW 'auto' plans and "
+                         "autotuned Pallas blocks (an unusable cache is an "
+                         "error here: silently certifying the untuned "
+                         "config would defeat the point)")
     ap.add_argument("--skip-model", action="store_true",
                     help="skip the model fwd+bwd rows")
     ap.add_argument("--skip-lint", action="store_true",
@@ -144,6 +151,30 @@ def main(argv=None) -> int:
     import repro  # noqa: F401 - enables x64; the matrix certifies under it
     from repro.analysis import lint_repo
     from repro.core.policy import EXECUTIONS
+
+    if args.calibration is not None:
+        import warnings
+
+        from repro.tune.cache import load_calibration
+
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", RuntimeWarning)
+            try:
+                cal = load_calibration(args.calibration)
+            except RuntimeWarning as w:
+                cal = None
+                reason = f" ({w})"
+            else:
+                reason = ""
+        if cal is None:
+            ap.error(
+                f"--calibration {args.calibration}: cache unusable{reason}"
+            )
+        repro.set_calibration(cal)
+        print(
+            f"repro.analysis: calibration loaded ({cal.device_kind} "
+            f"x{cal.device_count}, {len(cal.blocks)} tuned block slots)"
+        )
 
     executions = tuple(args.executions or EXECUTIONS)
     unknown = set(executions) - set(EXECUTIONS)

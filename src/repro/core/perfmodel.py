@@ -33,6 +33,24 @@ from __future__ import annotations
 
 import dataclasses
 
+# Fixed per-GEMM-launch overhead (dispatch + epilogue barrier), used by the
+# formulation auto-selection: Karatsuba issues 3N small GEMMs per product,
+# the block embeddings one 4x-sized GEMM per modulus — at small m,n,k the
+# launch term dominates and the embeddings win (paper Fig. 1 crossover).
+# The modulus-batched Pallas kernels fold the N planes into one grid
+# dimension, collapsing the per-modulus factor to 1 (`modulus_batched`).
+# This module constant is the *preset* default; a calibrated `HW`
+# (`HW.from_calibration`, `repro.tune`) carries the measured value in its
+# `gemm_launch_s` field, which is what the model terms actually read.
+GEMM_LAUNCH_S = 5e-6
+
+
+# Fixed per-collective dispatch overhead (psum/all-gather launch + barrier),
+# charged once per output-column block by the sharded execution (each block
+# reconstructs — and therefore combines — separately).  Preset default of
+# `HW.collective_launch_s`, same calibration story as `GEMM_LAUNCH_S`.
+COLLECTIVE_LAUNCH_S = 2e-5
+
 
 @dataclasses.dataclass(frozen=True)
 class HW:
@@ -51,6 +69,39 @@ class HW:
     # run e4m3 at the int8 rate; B200's fp8 tensor cores match its int8
     # dense rate; v5e has no fp8 MXU (v5p/v6 do).
     fp8_ops: float = 0.0
+    # per-launch / per-collective dispatch overheads (s).  The presets keep
+    # the historical module constants; `HW.from_calibration` replaces them
+    # with values measured on the live backend (`repro.tune.calibrate`).
+    gemm_launch_s: float = GEMM_LAUNCH_S
+    collective_launch_s: float = COLLECTIVE_LAUNCH_S
+
+    @classmethod
+    def from_calibration(cls, meas, name: str = "calibrated") -> "HW":
+        """An `HW` built from the `repro.tune.calibrate` measurement dict.
+
+        Required keys: ``mem_bw`` (B/s) and ``int8_ops`` (OPS, mul+add
+        counted separately — the model's `p`).  Optional keys fall back to
+        the field defaults (`fp8_ops=0` = no native fp8; `ici_bw`, launch
+        overheads = the preset constants), so a partial measurement — e.g.
+        single-device hosts never measure psum bandwidth — still yields a
+        usable model.  Zero/negative optional values are treated as "not
+        measured".
+        """
+        def _opt(key, default):
+            v = float(meas.get(key) or 0.0)
+            return v if v > 0 else default
+
+        return cls(
+            name=name,
+            mem_bw=float(meas["mem_bw"]),
+            int8_ops=float(meas["int8_ops"]),
+            native_c64=_opt("native_c64", 0.0),
+            native_c128=_opt("native_c128", 0.0),
+            ici_bw=_opt("ici_bw", 9e10),
+            fp8_ops=_opt("fp8_ops", 0.0),
+            gemm_launch_s=_opt("gemm_launch_s", GEMM_LAUNCH_S),
+            collective_launch_s=_opt("collective_launch_s", COLLECTIVE_LAUNCH_S),
+        )
 
 
 TPU_V5E = HW("tpu-v5e", 819e9, 394e12, 197e12, 0.0)  # no native f64 at all
@@ -64,6 +115,22 @@ MI300X = HW("mi300x", 5300e9, 2615e12, 163e12, 163e12, ici_bw=45e10,
             fp8_ops=2615e12)
 
 HARDWARE = {h.name: h for h in (TPU_V5E, GH200, B200, RTX5080, MI300X)}
+
+
+def default_hw() -> HW:
+    """The `HW` every ``hw=None`` model query prices against.
+
+    The active calibration's *measured* hardware when a `repro.tune`
+    calibration scope is live (`use_calibration` / `set_calibration` /
+    a `GemmPolicy(calibration=...)` pin), else the TPU v5e preset — the
+    historical default, so with no calibration present every 'auto'
+    decision is bitwise identical to the pre-calibration behaviour.
+    """
+    # lazy import: tune depends on this module, not the other way around
+    from ..tune.cache import current_calibration
+
+    cal = current_calibration()
+    return cal.hw if cal is not None else TPU_V5E
 
 
 # ------------------------------------------------------------ engine terms
@@ -150,21 +217,6 @@ def real_tflops(m, n, k, n_moduli, hw: HW, mode="fast", prec="d", c=None,
     return 2.0 * m * n * k / t * 1e-12
 
 
-# Fixed per-GEMM-launch overhead (dispatch + epilogue barrier), used by the
-# formulation auto-selection: Karatsuba issues 3N small GEMMs per product,
-# the block embeddings one 4x-sized GEMM per modulus — at small m,n,k the
-# launch term dominates and the embeddings win (paper Fig. 1 crossover).
-# The modulus-batched Pallas kernels fold the N planes into one grid
-# dimension, collapsing the per-modulus factor to 1 (`modulus_batched`).
-GEMM_LAUNCH_S = 5e-6
-
-
-# Fixed per-collective dispatch overhead (psum/all-gather launch + barrier),
-# charged once per output-column block by the sharded execution (each block
-# reconstructs — and therefore combines — separately).
-COLLECTIVE_LAUNCH_S = 2e-5
-
-
 def crt_partial_parts(n_moduli: int) -> int:
     """Number of exact f64 part-planes the sharded combine psums per output
     element (the `core/crt.partial_split` width for the default moduli)."""
@@ -179,7 +231,7 @@ def sharded_comm_time_s(
     n: int,
     n_moduli: int,
     residue_shards: int,
-    hw: HW = TPU_V5E,
+    hw: HW | None = None,
     complex_: bool = False,
     n_blocks: int = 1,
 ) -> float:
@@ -193,10 +245,11 @@ def sharded_comm_time_s(
     """
     if residue_shards <= 1:
         return 0.0
+    hw = hw or default_hw()
     parts = crt_partial_parts(n_moduli)
     stack = 2 if complex_ else 1
     byts = parts * 8 * m * n * stack * (residue_shards - 1) / residue_shards
-    return n_blocks * COLLECTIVE_LAUNCH_S + byts / hw.ici_bw
+    return n_blocks * hw.collective_launch_s + byts / hw.ici_bw
 
 
 def formulation_time_s(
@@ -244,8 +297,8 @@ def formulation_time_s(
     base = complex_time_s(m, n, k, n_moduli, hw, mode, prec, engine=engine) + comm_s
     if formulation == "karatsuba":
         if megakernel:
-            return base + GEMM_LAUNCH_S
-        return base + karatsuba_launches * launch_planes * GEMM_LAUNCH_S
+            return base + hw.gemm_launch_s
+        return base + karatsuba_launches * launch_planes * hw.gemm_launch_s
     # 8N mnk vs the model's 6N, charged at the engine's effective rate
     extra_ops = (
         2 * neff * m * n * k
@@ -260,7 +313,7 @@ def formulation_time_s(
     launches = 1 if megakernel else launch_planes
     return (
         base + extra_ops + embed_bytes / hw.mem_bw
-        + launches * GEMM_LAUNCH_S
+        + launches * hw.gemm_launch_s
     )
 
 
@@ -269,7 +322,7 @@ def select_formulation(
     n: int,
     k: int,
     n_moduli: int,
-    hw: HW = TPU_V5E,
+    hw: HW | None = None,
     mode: str = "fast",
     prec: str = "z",
     karatsuba_launches: int = 3,
@@ -285,7 +338,10 @@ def select_formulation(
     fp8 policies pass ``engine="fp8"`` so the crossover reflects the e4m3
     engine's op volume and rate; megakernel (`execution='fused'`) policies
     charge one launch per strategy, so only op/byte terms differentiate.
+    ``hw=None`` prices against `default_hw()` — the active calibration's
+    measured hardware, else the TPU v5e preset.
     """
+    hw = hw or default_hw()
     return min(
         ("karatsuba", "block_a", "block_b"),
         key=lambda f: formulation_time_s(
@@ -301,7 +357,7 @@ def engine_time_s(
     n: int,
     k: int,
     n_moduli: int,
-    hw: HW = TPU_V5E,
+    hw: HW | None = None,
     mode: str = "fast",
     prec: str = "z",
     complex_: bool | None = None,
@@ -312,6 +368,7 @@ def engine_time_s(
     's'/'d' for real.  Used by `select_engine` and the throughput benchmark
     to compare the two engines per shape on one hardware preset.
     """
+    hw = hw or default_hw()
     if complex_ is None:
         complex_ = prec in ("c", "z")
     if complex_:
@@ -327,7 +384,7 @@ def select_engine(
     n: int,
     k: int,
     n_moduli: int,
-    hw: HW = TPU_V5E,
+    hw: HW | None = None,
     mode: str = "fast",
     prec: str = "z",
 ) -> str:
@@ -335,6 +392,7 @@ def select_engine(
     model: 'fp8' wins exactly when its rate advantage beats its 4x digit-MAC
     volume (e.g. hardware whose e4m3 rate is >4x its int8 rate, or
     memory-bound shapes where the op term hardly matters)."""
+    hw = hw or default_hw()
     return min(
         ENGINES, key=lambda e: engine_time_s(e, m, n, k, n_moduli, hw, mode, prec)
     )
@@ -413,18 +471,35 @@ def select_block(dim: int, block: int, align: int | None = None) -> int:
     """Block size one kernel axis actually uses for `dim` (default `block`).
 
     dim <= block: the block shrinks to the axis (single block, no padding —
-    the pre-existing rule).  dim > block: with BLOCK_SHRINK on and a
-    hardware alignment given, scan the aligned block sizes <= block and keep
-    the one whose padded dim (`_round_up(dim, b)`) is smallest, preferring
-    the largest such block (fewer grid steps).  `block` itself is always a
-    candidate, so the padded dim never regresses past the legacy choice.
+    the pre-existing rule; this includes dims below the hardware alignment,
+    where the padded extent is the dim itself).  dim > block: with
+    BLOCK_SHRINK on and a hardware alignment given, scan the *align-multiple*
+    block sizes <= block and keep the one whose padded dim
+    (`_round_up(dim, b)`) is smallest, preferring the largest such block
+    (fewer grid steps).  `block` itself is always a candidate — even when it
+    is not an align multiple (autotuned or caller-chosen blocks feed this
+    same path) — so the padded dim never exceeds the static round-up
+    `_round_up(dim, block)`.
+
+    Invariants (hypothesis-checked in tests/test_property.py): the selected
+    block always divides `padded_dim(dim, block, align)`, and that padded
+    dim never exceeds the legacy round-up to `block`.
     """
+    if dim <= 0:
+        raise ValueError(f"dim must be positive, got {dim}")
+    if block <= 0:
+        raise ValueError(f"block must be positive, got {block}")
     if dim <= block:
         return dim
     if not BLOCK_SHRINK or align is None or block <= align:
         return block
     best, best_pad = block, _round_up(dim, block)
-    for b in range(block - align, align - 1, -align):
+    # largest align multiple <= block (strictly below it when block is
+    # itself an align multiple — that case is already `best`)
+    start = block // align * align
+    if start == block:
+        start -= align
+    for b in range(start, align - 1, -align):
         pad = _round_up(dim, b)
         if pad < best_pad:
             best, best_pad = b, pad

@@ -131,7 +131,8 @@ def make_plan(
       | 'auto' (perfmodel-driven, needs `shape`); ignored/`'real'` for real.
     n_block: int, None, or 'auto' (paper's 8192 blocking when n is larger).
     shape: optional (m, k, n) hint for the auto selections.
-    hw: `perfmodel.HW` target for 'auto' (default: the TPU v5e preset).
+    hw: `perfmodel.HW` target for 'auto' (default: `perfmodel.default_hw()`
+      — the active calibration's measured HW, else the TPU v5e preset).
     fused_karatsuba: the executing backend fuses the Karatsuba triple into
       one launch per modulus (the Pallas kernel path) — changes the launch
       term the 'auto' selection charges Karatsuba.
@@ -208,7 +209,7 @@ def _auto_formulation(
     prec = "c" if dt.name == "complex64" else "z"
     return perfmodel.select_formulation(
         m, n, k, n_moduli,
-        hw=hw or perfmodel.TPU_V5E,
+        hw=hw or perfmodel.default_hw(),
         mode=mode,
         prec=prec,
         karatsuba_launches=1 if fused_karatsuba else 3,

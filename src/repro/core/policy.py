@@ -216,6 +216,15 @@ class GemmPolicy:
         thread-local `use_mesh` default, resolved at trace time) and an
         optional override of the resolved (residue, m, n) mesh-axis names.
         Both hashable, so sharded policies remain valid jit statics.
+    ``calibration``
+        Optional path of a `repro.tune` calibration cache to pin: every
+        'auto' decision of this policy then prices against that file's
+        *measured* `HW`, and its kernel launches use that file's autotuned
+        block shapes — regardless of the ambient `use_calibration` scope.
+        None (default): the ambient scope decides (presets + static default
+        blocks when no scope is active).  A missing/stale/corrupt pinned
+        file warns once and degrades to the presets; pinning never changes
+        numerics, only the plan pricing and tile shapes.
 
     Example::
 
@@ -239,6 +248,7 @@ class GemmPolicy:
     out_dtype: str | None = None  # result dtype name (None: compute dtype)
     mesh: object | None = None    # sharded execution: jax.sharding.Mesh
     shard_axes: tuple | None = None  # sharded: (residue, m, n) name override
+    calibration: str | None = None  # repro.tune cache path to pin (or None)
 
     def __post_init__(self):
         if self.backend not in _COMPUTE_DTYPES:
@@ -284,6 +294,31 @@ class GemmPolicy:
                 "mesh=mesh) around tracing"
             )
         return mesh
+
+    def resolved_calibration(self):
+        """The `repro.tune.Calibration` this policy's decisions read: the
+        pinned ``calibration`` file (memoized; warns once and yields None
+        when unfit), else the ambient `use_calibration`/`set_calibration`
+        one, else None (presets + static default blocks)."""
+        from ..tune.cache import current_calibration, load_calibration_cached
+
+        if self.calibration is not None:
+            return load_calibration_cached(self.calibration)
+        return current_calibration()
+
+    def _calibration_scope(self):
+        """Context manager activating the pinned calibration file (a no-op
+        without one — the ambient scope then applies as-is).  Entered around
+        plan selection AND kernel tracing, so the perfmodel's `default_hw`
+        and the kernels' `resolve_blocks` both see the pinned cache."""
+        if self.calibration is None:
+            return contextlib.nullcontext()
+        from ..tune.cache import load_calibration_cached, use_calibration
+
+        cal = load_calibration_cached(self.calibration)
+        if cal is None:
+            return contextlib.nullcontext()
+        return use_calibration(cal)
 
     def execution_backend(self):
         """Resolve the residue-backend instance for this policy's execution.
@@ -333,43 +368,52 @@ class GemmPolicy:
         return cls(bool(interp))
 
     def plan_for(self, m: int, k: int, n: int):
-        """The `EmulationPlan` this policy runs for an (m,k)x(k,n) product."""
+        """The `EmulationPlan` this policy runs for an (m,k)x(k,n) product.
+
+        Selected inside the policy's calibration scope: with a pinned (or
+        ambient) `repro.tune` calibration, every `hw=None` perfmodel term
+        below — the sharded comm pricing and the formulation/n_block/engine
+        'auto' selections in `make_plan` — resolves `perfmodel.default_hw()`
+        to the *measured* hardware instead of the TPU v5e preset.
+        """
         if self.backend == "native":
             raise ValueError("native policy has no emulation plan")
         # the perfmodel terms behind the 'auto' selections depend on how the
         # executing backend launches — read its declared capabilities so
         # plan_for and gemm_prepared can never disagree
-        be = self.execution_backend()
-        shape = (m, k, n)
-        comm_s = 0.0
-        factors = getattr(be, "shard_factors", None)
-        if factors is not None:
-            # sharded: price the per-shard problem plus the psum term, so
-            # the 'auto' selections reflect what each shard actually runs
-            from . import perfmodel
+        with self._calibration_scope():
+            be = self.execution_backend()
+            shape = (m, k, n)
+            comm_s = 0.0
+            factors = getattr(be, "shard_factors", None)
+            if factors is not None:
+                # sharded: price the per-shard problem plus the psum term, so
+                # the 'auto' selections reflect what each shard actually runs
+                from . import perfmodel
 
-            md, nd, r = factors(m, n)
-            shape = (m // md, k, n // nd)
-            comm_s = perfmodel.sharded_comm_time_s(
-                shape[0], shape[2],
-                self.n_moduli or default_n_moduli(self.compute_dtype, self.mode),
-                r, complex_=self.is_complex,
+                md, nd, r = factors(m, n)
+                shape = (m // md, k, n // nd)
+                comm_s = perfmodel.sharded_comm_time_s(
+                    shape[0], shape[2],
+                    self.n_moduli
+                    or default_n_moduli(self.compute_dtype, self.mode),
+                    r, complex_=self.is_complex,
+                )
+            return make_plan(
+                self.compute_dtype,
+                n_moduli=self.n_moduli,
+                mode=self.mode,
+                method=self.resolved_method,
+                formulation=self.formulation if self.is_complex else None,
+                out_dtype=self.out_dtype,
+                n_block=self.n_block,
+                shape=shape,
+                fused_karatsuba=getattr(be, "fused_karatsuba", False),
+                modulus_batched=getattr(be, "modulus_batched", False),
+                megakernel=getattr(be, "megakernel", False),
+                comm_s=comm_s,
+                engine=getattr(be, "engine", "int8"),
             )
-        return make_plan(
-            self.compute_dtype,
-            n_moduli=self.n_moduli,
-            mode=self.mode,
-            method=self.resolved_method,
-            formulation=self.formulation if self.is_complex else None,
-            out_dtype=self.out_dtype,
-            n_block=self.n_block,
-            shape=shape,
-            fused_karatsuba=getattr(be, "fused_karatsuba", False),
-            modulus_batched=getattr(be, "modulus_batched", False),
-            megakernel=getattr(be, "megakernel", False),
-            comm_s=comm_s,
-            engine=getattr(be, "engine", "int8"),
-        )
 
 
 NATIVE = GemmPolicy()
@@ -392,9 +436,13 @@ def emulated_matmul(x: jnp.ndarray, w: jnp.ndarray, policy: GemmPolicy):
 def _emulated_fwd_raw(x, w, policy):
     ct = policy.compute_dtype
     plan = policy.plan_for(x.shape[-2], x.shape[-1], w.shape[-1])
-    y = run_plan(
-        plan, x.astype(ct), w.astype(ct), backend=policy.execution_backend()
-    )
+    # trace under the pinned calibration (a no-op without one) so the
+    # kernels' `resolve_blocks` launches the policy's tuned tile shapes
+    with policy._calibration_scope():
+        y = run_plan(
+            plan, x.astype(ct), w.astype(ct),
+            backend=policy.execution_backend(),
+        )
     return _real_cast(y, policy.out_dtype or x.dtype)
 
 
@@ -419,16 +467,17 @@ emulated_matmul.defvjp(_emulated_fwd, _emulated_bwd)
 def _prepared_matmul(x: jnp.ndarray, w: PreparedOperand, policy: GemmPolicy):
     """x @ w with the weight prepared up front (inference only)."""
     ct = policy.compute_dtype
-    y = gemm_prepared(
-        w,
-        x.astype(ct),
-        method=policy.resolved_method,
-        formulation=policy.formulation,
-        out_dtype=policy.out_dtype,
-        n_block=policy.n_block,
-        backend=policy.execution_backend(),
-        mode=policy.mode,
-    )
+    with policy._calibration_scope():
+        y = gemm_prepared(
+            w,
+            x.astype(ct),
+            method=policy.resolved_method,
+            formulation=policy.formulation,
+            out_dtype=policy.out_dtype,
+            n_block=policy.n_block,
+            backend=policy.execution_backend(),
+            mode=policy.mode,
+        )
     return _real_cast(y, policy.out_dtype or x.dtype)
 
 

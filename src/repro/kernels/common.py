@@ -203,6 +203,48 @@ def block_and_padded(
     return b, round_up(dim, b)
 
 
+#: static default (bm, bn, bk) of every batched/fused GEMM kernel — what
+#: runs when no calibration is active and the caller passes no blocks
+DEFAULT_GEMM_BLOCKS = (256, 256, 512)
+
+
+def resolve_blocks(
+    family: str,
+    dclass: str,
+    m: int,
+    n: int,
+    k: int,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+) -> tuple[int, int, int]:
+    """The (bm, bn, bk) a GEMM kernel launches for one (family, dclass,
+    shape) slot.
+
+    Explicit caller-passed values always win per axis.  Unset axes resolve
+    from the active calibration's autotuned winner for this slot
+    (`repro.tune` — `current_calibration().block_for(block_key(...))`),
+    else the static `DEFAULT_GEMM_BLOCKS`.  The result then flows through
+    the exact same `block_and_padded` pad-and-slice path as the defaults,
+    so tuned blocks can never change numerics — only which tiles the
+    `pallas_call` grid steps over.
+    """
+    tuned = None
+    if bm is None or bn is None or bk is None:
+        # lazy import: tune.cache must stay importable without the kernels
+        from ..tune.cache import block_key, current_calibration
+
+        cal = current_calibration()
+        if cal is not None:
+            tuned = cal.block_for(block_key(family, dclass, m, n, k))
+    base = tuned or DEFAULT_GEMM_BLOCKS
+    return (
+        bm if bm is not None else base[0],
+        bn if bn is not None else base[1],
+        bk if bk is not None else base[2],
+    )
+
+
 # ------------------------------------------------- launch-count diagnostics
 # The jaxpr walker grew into the repro.analysis pass framework (PR 7);
 # re-exported here because older callers import it from kernels.common.

@@ -55,6 +55,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .common import (
     block_and_padded,
+    resolve_blocks,
     dyn_mod_params,
     interpret_default,
     pad_dims,
@@ -275,9 +276,9 @@ def fp8_karatsuba_mod_gemm_batched(
     *,
     moduli: tuple[int, ...] | jnp.ndarray,
     carry: tuple[jnp.ndarray, jnp.ndarray] | None = None,
-    bm: int = 256,
-    bn: int = 256,
-    bk: int = 512,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
     interpret: bool | None = None,
 ):
     """Residues of (CR', CI') = (AR'+iAI')(BR'+iBI') mod p_l on the e4m3
@@ -315,6 +316,7 @@ def fp8_karatsuba_mod_gemm_batched(
             f"bi {bi.shape}, N={n_given}"
         )
     n = br.shape[-1]
+    bm, bn, bk = resolve_blocks("fp8", "complex", m, n, k, bm, bn, bk)
     bm, mp = block_and_padded(m, bm, align=128)
     bn, np_ = block_and_padded(n, bn, align=128)
     bk, kp = block_and_padded(k, bk, align=32)
@@ -337,9 +339,9 @@ def fp8_mod_gemm_batched(
     *,
     moduli: tuple[int, ...] | jnp.ndarray,
     carry: jnp.ndarray | None = None,
-    bm: int = 256,
-    bn: int = 256,
-    bk: int = 512,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """E_l = sym_mod(A_l @ B_l [+ carry_l], p_l) on the e4m3 engine, all N
@@ -367,6 +369,7 @@ def fp8_mod_gemm_batched(
     if b.shape[0] != n_mod or b.shape[1] != k or n_given != n_mod:
         raise ValueError(f"shape mismatch: a {a.shape}, b {b.shape}, N={n_given}")
     n = b.shape[-1]
+    bm, bn, bk = resolve_blocks("fp8", "real", m, n, k, bm, bn, bk)
     bm, mp = block_and_padded(m, bm, align=128)
     bn, np_ = block_and_padded(n, bn, align=128)
     bk, kp = block_and_padded(k, bk, align=32)

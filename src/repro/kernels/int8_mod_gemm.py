@@ -40,6 +40,7 @@ from .common import (
     interpret_default,
     pad_dims,
     residue_tiles_f32,
+    resolve_blocks,
     split_scale_exponent,
     static_mod_params,
     sym_mod_int32_dyn,
@@ -114,15 +115,17 @@ def int8_mod_gemm_batched(
     *,
     moduli: tuple[int, ...] | jnp.ndarray,
     carry: jnp.ndarray | None = None,
-    bm: int = 256,
-    bn: int = 256,
-    bk: int = 512,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """E_l = sym_mod(A_l @ B_l [+ carry_l], p_l) for all l in ONE launch.
 
     a: (N, m, k) int8, b: (N, k, n) int8, carry: optional (N, m, n) int8;
     returns (N, m, n) int8 residues.  Any m/n/k is accepted (pad-and-slice).
+    Unset bm/bn/bk resolve via `common.resolve_blocks`: the active
+    calibration's autotuned tile for this shape bucket, else (256, 256, 512).
 
     `moduli` may be a static tuple or a *traced* (N,) int32 array: the
     kernel reads the modulus from the scalar-prefetched array either way
@@ -138,6 +141,7 @@ def int8_mod_gemm_batched(
     if b.shape[0] != n_mod or b.shape[1] != k or n_given != n_mod:
         raise ValueError(f"shape mismatch: a {a.shape}, b {b.shape}, N={n_given}")
     n = b.shape[-1]
+    bm, bn, bk = resolve_blocks("kernel", "real", m, n, k, bm, bn, bk)
     bm, mp = block_and_padded(m, bm, align=128)
     bn, np_ = block_and_padded(n, bn, align=128)
     bk, kp = block_and_padded(k, bk, align=32)
@@ -306,9 +310,9 @@ def fused_mod_gemm(
     n_limbs: int,
     out_dd: bool = False,
     b_res: jnp.ndarray | None = None,
-    bm: int = 256,
-    bn: int = 256,
-    bk: int = 512,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
     chunk_limit: int | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
@@ -334,6 +338,7 @@ def fused_mod_gemm(
         b = b.astype(jnp.float32)
     m, k = a.shape
     n = b_res.shape[-1] if b_res is not None else b.shape[-1]
+    bm, bn, bk = resolve_blocks("fused", "real", m, n, k, bm, bn, bk)
     bm, mp = block_and_padded(m, bm, align=128)
     bn, np_ = block_and_padded(n, bn, align=128)
     bk, kp = block_and_padded(k, bk, align=32)
@@ -366,9 +371,9 @@ def int8_mod_gemm(
     b: jnp.ndarray,
     *,
     p: int,
-    bm: int = 256,
-    bn: int = 256,
-    bk: int = 512,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """E = sym_mod(A @ B, p): (m,k) x (k,n) int8 -> (m,n) int8 residues.

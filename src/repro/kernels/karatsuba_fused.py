@@ -41,6 +41,7 @@ from .common import (
     interpret_default,
     pad_dims,
     residue_tiles_f32,
+    resolve_blocks,
     split_scale_exponent,
     static_mod_params,
     sym_mod_f32,
@@ -142,9 +143,9 @@ def karatsuba_mod_gemm_batched(
     *,
     moduli: tuple[int, ...] | jnp.ndarray,
     carry: tuple[jnp.ndarray, jnp.ndarray] | None = None,
-    bm: int = 256,
-    bn: int = 256,
-    bk: int = 512,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
     interpret: bool | None = None,
 ):
     """Residues of (CR', CI') = (AR'+iAI')(BR'+iBI') mod p_l, all planes in
@@ -170,6 +171,7 @@ def karatsuba_mod_gemm_batched(
             f"bi {bi.shape}, N={n_given}"
         )
     n = br.shape[-1]
+    bm, bn, bk = resolve_blocks("kernel", "complex", m, n, k, bm, bn, bk)
     bm, mp = block_and_padded(m, bm, align=128)
     bn, np_ = block_and_padded(n, bn, align=128)
     bk, kp = block_and_padded(k, bk, align=32)
@@ -344,9 +346,9 @@ def fused_karatsuba_mod_gemm(
     n_limbs: int,
     out_dd: bool = False,
     b_res: tuple[jnp.ndarray, jnp.ndarray] | None = None,
-    bm: int = 256,
-    bn: int = 256,
-    bk: int = 512,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
     chunk_limit: int | None = None,
     interpret: bool | None = None,
 ):
@@ -369,6 +371,7 @@ def fused_karatsuba_mod_gemm(
     ai = ai.astype(jnp.float32)
     m, k = ar.shape
     n = b_res[0].shape[-1] if b_res is not None else br.shape[-1]
+    bm, bn, bk = resolve_blocks("fused", "complex", m, n, k, bm, bn, bk)
     bm, mp = block_and_padded(m, bm, align=128)
     bn, np_ = block_and_padded(n, bn, align=128)
     bk, kp = block_and_padded(k, bk, align=32)
@@ -406,9 +409,9 @@ def karatsuba_mod_gemm(
     bi: jnp.ndarray,
     *,
     p: int,
-    bm: int = 256,
-    bn: int = 256,
-    bk: int = 512,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
     interpret: bool | None = None,
 ):
     """Residues of (CR', CI') = (AR'+iAI')(BR'+iBI') mod p. All int8 (m,k)/(k,n).

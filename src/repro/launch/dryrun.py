@@ -45,6 +45,7 @@ from repro.models import Model
 from repro.models.params import abstract_arrays
 from repro.optim import AdamWConfig
 from repro.train.step import make_train_step
+from repro.tune.cli import add_calibration_args, apply_calibration_args
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -427,7 +428,9 @@ def main():
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--all", action="store_true", help="sweep every cell")
     ap.add_argument("--out", default="experiments/dryrun")
+    add_calibration_args(ap)
     args = ap.parse_args()
+    apply_calibration_args(args)
 
     meshes = [args.multi_pod]
     if args.both_meshes:

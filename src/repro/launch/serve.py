@@ -28,6 +28,7 @@ from repro.configs import ARCHS, get_reduced
 from repro.core import GemmPolicy
 from repro.models import Model
 from repro.serve import ServeEngine
+from repro.tune.cli import add_calibration_args, apply_calibration_args
 
 
 def main():
@@ -55,7 +56,9 @@ def main():
                          "one-launch megakernel)")
     ap.add_argument("--residue", type=int, default=1,
                     help="residue mesh-axis size (sharded execution)")
+    add_calibration_args(ap)
     args = ap.parse_args()
+    apply_calibration_args(args)
 
     scope = contextlib.nullcontext()
     if args.backend != "native":

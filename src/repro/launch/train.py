@@ -29,6 +29,7 @@ from repro.data import DataConfig
 from repro.models import Model
 from repro.optim import AdamWConfig
 from repro.train import TrainLoopConfig, train_loop
+from repro.tune.cli import add_calibration_args, apply_calibration_args
 
 
 def parse_n_block(s: str):
@@ -70,7 +71,9 @@ def main():
                     help="output-column blocking: an int or 'auto'")
     ap.add_argument("--seq-shard", action="store_true")
     ap.add_argument("--vocab-chunk", type=int, default=None)
+    add_calibration_args(ap)
     args = ap.parse_args()
+    apply_calibration_args(args)
 
     mesh = None
     if args.mesh:

@@ -91,7 +91,7 @@ def current_policy() -> GemmPolicy:
 
 
 @contextlib.contextmanager
-def use_policy(policy: GemmPolicy, *, mesh=None):
+def use_policy(policy: GemmPolicy, *, mesh=None, calibration=None):
     """Scope every `linalg.matmul` (and model/serve/train matmul resolved at
     config construction) in this thread to `policy`.
 
@@ -100,7 +100,11 @@ def use_policy(policy: GemmPolicy, *, mesh=None):
     captured as a jit static).  `mesh` additionally scopes the thread-local
     default mesh (`use_mesh`) a ``GemmPolicy(execution="sharded",
     mesh=None)`` resolves at trace time — one context manager distributes
-    every matmul in a model over the mesh.
+    every matmul in a model over the mesh.  `calibration` (a
+    `repro.tune.Calibration` or cache-file path) additionally scopes the
+    thread-local calibration (`repro.use_calibration`), so the 'auto' plan
+    selections price against the measured hardware and the kernels launch
+    the autotuned block shapes while tracing inside the scope.
 
     Example — the ambient scope routes matmuls, nesting overrides it::
 
@@ -130,10 +134,13 @@ def use_policy(policy: GemmPolicy, *, mesh=None):
         stack = _STATE.stack = []
     stack.append(policy)
     try:
-        if mesh is not None:
-            with use_mesh(mesh):
-                yield policy
-        else:
+        with contextlib.ExitStack() as scopes:
+            if mesh is not None:
+                scopes.enter_context(use_mesh(mesh))
+            if calibration is not None:
+                from .tune.cache import use_calibration
+
+                scopes.enter_context(use_calibration(calibration))
             yield policy
     finally:
         stack.pop()

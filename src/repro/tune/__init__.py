@@ -1,0 +1,74 @@
+"""`repro.tune` — on-device calibration + Pallas block autotuning.
+
+The measured counterpart of `core/perfmodel`'s hardware presets: a one-shot
+microbenchmark (`calibrate`) measures the live backend's int8/fp8 dot
+rates, memory and psum bandwidth and per-launch overheads into an
+`HW.from_calibration` instance, an autotuner (`autotune_blocks`) times the
+batched/fused Pallas kernels over a (bm, bn, bk) candidate grid, and both
+persist to one JSON calibration cache (`cache`) keyed by (device kind,
+device count, jax version).
+
+Activating a calibration (`use_calibration` scope, `set_calibration`
+process default, or a `GemmPolicy(calibration=path)` pin) makes every
+``"auto"`` decision — formulation, n_block, engine, the sharded comm term —
+price against the *measured* `HW` (`perfmodel.default_hw`), and makes the
+`kernel`/`fused`/`fp8` executions launch the tuned tile shapes
+(`kernels.common.resolve_blocks`).  With no calibration active, behaviour
+is bitwise identical to the presets + static default blocks.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.tune [--smoke] [--out PATH] [--no-blocks]
+
+See docs/calibration.md for the cache schema and the `--calibrate`
+workflow of the launch CLIs.
+"""
+from .cache import (  # noqa: F401
+    Calibration,
+    block_key,
+    calibration_hash,
+    current_calibration,
+    default_cache_path,
+    load_calibration,
+    load_calibration_cached,
+    save_calibration,
+    set_calibration,
+    shape_bucket,
+    use_calibration,
+)
+
+__all__ = [
+    "Calibration",
+    "add_calibration_args",
+    "apply_calibration_args",
+    "autotune_blocks",
+    "block_key",
+    "calibrate",
+    "calibration_hash",
+    "current_calibration",
+    "default_cache_path",
+    "load_calibration",
+    "load_calibration_cached",
+    "save_calibration",
+    "set_calibration",
+    "shape_bucket",
+    "use_calibration",
+]
+
+
+def __getattr__(name):
+    # calibrate/autotune pull in jax + the kernel stack; load them lazily so
+    # `import repro` (which re-exports use_calibration) stays light
+    if name == "calibrate":
+        from .calibrate import calibrate
+
+        return calibrate
+    if name == "autotune_blocks":
+        from .autotune import autotune_blocks
+
+        return autotune_blocks
+    if name in ("add_calibration_args", "apply_calibration_args"):
+        from . import cli
+
+        return getattr(cli, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

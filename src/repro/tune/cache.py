@@ -1,0 +1,304 @@
+"""The calibration cache: measured `HW` + tuned Pallas blocks, persisted.
+
+One JSON file holds everything `repro.tune` measured on a machine, keyed by
+the (device kind, device count, jax version) triple it was measured on:
+
+.. code-block:: json
+
+    {
+      "schema": 1,
+      "key": {"device_kind": "cpu", "device_count": 1,
+              "jax_version": "0.4.37"},
+      "hw": {"name": "calibrated/cpu", "mem_bw": 1.2e10, "int8_ops": 4.1e10,
+             "native_c64": 3.0e9, "native_c128": 1.0e9, "ici_bw": 9e10,
+             "fp8_ops": 0.0, "gemm_launch_s": 2.1e-4,
+             "collective_launch_s": 2e-5},
+      "blocks": {"kernel/real/m256n256k512": [256, 256, 256]}
+    }
+
+* ``hw`` is a full `perfmodel.HW` field dict (see `HW.from_calibration` for
+  which entries come from measurement vs preset fallbacks);
+* ``blocks`` maps ``"{family}/{dclass}/{bucket}"`` keys — family in
+  ``kernel``/``fused``/``fp8``, dclass in ``real``/``complex``, bucket the
+  power-of-two shape bucket of `shape_bucket` — to the autotuned
+  ``[bm, bn, bk]`` winner for that slot (`repro.tune.autotune`).
+
+Staleness: `load_calibration` compares the stored key against the live
+backend and warns + returns None on mismatch (so callers fall back to the
+presets + static default blocks), likewise for unreadable/corrupt files.
+Loading never raises for a bad cache — a broken calibration must degrade to
+exactly the uncalibrated behaviour, not take the run down.
+
+Scoping mirrors the policy/mesh pattern: `use_calibration` pushes onto a
+thread-local stack (innermost wins), `set_calibration` installs a
+process-global default underneath it, and `current_calibration` is what
+`perfmodel.default_hw` / `kernels.common.resolve_blocks` consult at trace
+time.  Calibrations are frozen/hashable, so holding one inside jit-static
+machinery is safe.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import hashlib
+import json
+import os
+import threading
+import warnings
+
+from ..core.perfmodel import HW
+
+SCHEMA_VERSION = 1
+
+#: Pallas kernel families the autotuner covers, by policy execution
+FAMILIES = ("kernel", "fused", "fp8")
+
+#: operand dtype classes (complex runs the Karatsuba kernels)
+DCLASSES = ("real", "complex")
+
+
+def shape_bucket(m: int, n: int, k: int) -> str:
+    """The cache bucket one (m, k) x (k, n) GEMM shape falls into.
+
+    Each dim rounds up to a power of two, floored at 128 (the MXU tile) and
+    capped at 16384 (the paper's largest benchmark dim) — nearby shapes
+    share one tuned block triple, so a handful of autotuned shapes covers
+    the whole size sweep.
+    """
+    def _b(d: int) -> int:
+        v = 128
+        while v < d and v < 16384:
+            v <<= 1
+        return v
+
+    return f"m{_b(m)}n{_b(n)}k{_b(k)}"
+
+
+def block_key(family: str, dclass: str, m: int, n: int, k: int) -> str:
+    """The ``blocks`` mapping key for one (family, dclass, shape) slot."""
+    if family not in FAMILIES:
+        raise ValueError(f"unknown kernel family {family!r}; one of {FAMILIES}")
+    if dclass not in DCLASSES:
+        raise ValueError(f"unknown dtype class {dclass!r}; one of {DCLASSES}")
+    return f"{family}/{dclass}/{shape_bucket(m, n, k)}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """One machine's measured model: `HW` + tuned blocks + the backend key.
+
+    Frozen and hashable (``blocks`` is a sorted tuple of items, not a dict)
+    so a calibration can ride wherever a `GemmPolicy` does.
+    """
+
+    device_kind: str
+    device_count: int
+    jax_version: str
+    hw: HW
+    blocks: tuple[tuple[str, tuple[int, int, int]], ...] = ()
+
+    def block_for(self, key: str) -> tuple[int, int, int] | None:
+        """The tuned (bm, bn, bk) for one `block_key`, or None (untuned)."""
+        for k, v in self.blocks:
+            if k == key:
+                return v
+        return None
+
+    def with_blocks(self, blocks: dict) -> "Calibration":
+        """A copy with `blocks` replaced by the (canonically sorted) dict."""
+        items = tuple(
+            (str(k), tuple(int(x) for x in v))
+            for k, v in sorted(blocks.items())
+        )
+        return dataclasses.replace(self, blocks=items)
+
+    def to_json(self) -> dict:
+        return {
+            "schema": SCHEMA_VERSION,
+            "key": {
+                "device_kind": self.device_kind,
+                "device_count": self.device_count,
+                "jax_version": self.jax_version,
+            },
+            "hw": dataclasses.asdict(self.hw),
+            "blocks": {k: list(v) for k, v in self.blocks},
+        }
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "Calibration":
+        if obj.get("schema") != SCHEMA_VERSION:
+            raise ValueError(
+                f"calibration schema {obj.get('schema')!r} != {SCHEMA_VERSION}"
+            )
+        key = obj["key"]
+        blocks = obj.get("blocks", {})
+        bad = {
+            k: v for k, v in blocks.items()
+            if not (isinstance(v, (list, tuple)) and len(v) == 3
+                    and all(int(x) > 0 for x in v))
+        }
+        if bad:
+            raise ValueError(f"malformed block winners: {bad}")
+        return cls(
+            device_kind=str(key["device_kind"]),
+            device_count=int(key["device_count"]),
+            jax_version=str(key["jax_version"]),
+            hw=HW(**obj["hw"]),
+        ).with_blocks(blocks)
+
+
+def live_key() -> dict:
+    """The (device kind, device count, jax version) of this process."""
+    import jax
+
+    return {
+        "device_kind": jax.devices()[0].device_kind,
+        "device_count": jax.device_count(),
+        "jax_version": jax.__version__,
+    }
+
+
+def calibration_hash(cal: Calibration | None) -> str | None:
+    """Short content hash of a calibration (None passes through).
+
+    Stamped onto every `bench_throughput` record so tuned and untuned runs
+    are distinguishable in the committed trajectory.
+    """
+    if cal is None:
+        return None
+    blob = json.dumps(cal.to_json(), sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:12]
+
+
+def default_cache_path() -> str:
+    """Where `--calibrate run` persists and `--calibrate load` looks by
+    default: ``$REPRO_CALIBRATION_DIR`` (else ``~/.cache/repro``) /
+    ``calibration-{device_kind}-{device_count}.json``."""
+    key = live_key()
+    base = os.environ.get(
+        "REPRO_CALIBRATION_DIR",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro"),
+    )
+    kind = str(key["device_kind"]).replace(" ", "_").replace("/", "_")
+    return os.path.join(
+        base, f"calibration-{kind}-{key['device_count']}.json"
+    )
+
+
+def save_calibration(cal: Calibration, path: str) -> str:
+    """Write the cache JSON (creating parent dirs); returns `path`."""
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(cal.to_json(), f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def load_calibration(
+    path: str, *, check_staleness: bool = True
+) -> Calibration | None:
+    """Load a calibration cache, or None (with a warning) when it is unfit.
+
+    "Unfit" covers a missing/unreadable file, corrupt or schema-mismatched
+    JSON, and — with `check_staleness` — a key that no longer matches the
+    live backend (different device kind/count or jax version: the measured
+    rates and tuned blocks describe a different machine).  Returning None
+    makes every consumer fall back to the presets + static default blocks,
+    so a bad cache can never change behaviour, only forgo the tuning.
+    """
+    try:
+        with open(path) as f:
+            cal = Calibration.from_json(json.load(f))
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        warnings.warn(
+            f"calibration cache {path!r} is unreadable ({e!r}); "
+            "falling back to the hardware presets and default blocks",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+        return None
+    if check_staleness:
+        key = live_key()
+        stored = {
+            "device_kind": cal.device_kind,
+            "device_count": cal.device_count,
+            "jax_version": cal.jax_version,
+        }
+        if stored != key:
+            warnings.warn(
+                f"calibration cache {path!r} is stale: measured on {stored}, "
+                f"running on {key}; falling back to the hardware presets and "
+                "default blocks (re-run `python -m repro.tune` to refresh)",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            return None
+    return cal
+
+
+@functools.lru_cache(maxsize=64)
+def load_calibration_cached(path: str) -> Calibration | None:
+    """`load_calibration` memoized per path — the `GemmPolicy(calibration=)`
+    resolution path, called on every trace.  The stale/corrupt warning fires
+    once per path per process instead of once per matmul."""
+    return load_calibration(path)
+
+
+# ------------------------------------------- active-calibration scoping
+
+_STATE = threading.local()
+_GLOBAL: list[Calibration | None] = [None]
+
+
+def current_calibration() -> Calibration | None:
+    """The innermost `use_calibration` calibration, else the process-global
+    `set_calibration` default, else None (presets + static blocks)."""
+    stack = getattr(_STATE, "stack", None)
+    if stack:
+        return stack[-1]
+    return _GLOBAL[0]
+
+
+def set_calibration(cal: Calibration | None) -> Calibration | None:
+    """Install `cal` as the process-global default calibration (the
+    `--calibrate load/run` CLI entry); returns the previous default."""
+    if cal is not None and not isinstance(cal, Calibration):
+        raise TypeError(
+            f"set_calibration expects a Calibration or None; got "
+            f"{type(cal).__name__}"
+        )
+    prev = _GLOBAL[0]
+    _GLOBAL[0] = cal
+    return prev
+
+
+@contextlib.contextmanager
+def use_calibration(cal: Calibration | str):
+    """Scope the thread-local active calibration (innermost wins).
+
+    Accepts a `Calibration` or a cache-file path (loaded via
+    `load_calibration`; an unfit file warns and the scope is a no-op, so the
+    body runs on presets + defaults rather than failing).  Also reachable as
+    ``repro.use_calibration`` and via ``repro.use_policy(policy,
+    calibration=...)``.
+    """
+    if isinstance(cal, (str, os.PathLike)):
+        cal = load_calibration(os.fspath(cal))
+    if cal is not None and not isinstance(cal, Calibration):
+        raise TypeError(
+            f"use_calibration expects a Calibration or a cache path; got "
+            f"{type(cal).__name__}"
+        )
+    if cal is None:
+        yield None
+        return
+    stack = getattr(_STATE, "stack", None)
+    if stack is None:
+        stack = _STATE.stack = []
+    stack.append(cal)
+    try:
+        yield cal
+    finally:
+        stack.pop()

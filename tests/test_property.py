@@ -164,3 +164,62 @@ def test_two_prod_exact(a, b):
     assume(a == 0 or b == 0 or 1e-280 < abs(a * b) < 1e280)
     p, e = two_prod(jnp.float64(a), jnp.float64(b))
     assert Fraction(float(p)) + Fraction(float(e)) == Fraction(a) * Fraction(b)
+
+
+# ------------------------------- perfmodel block selection (repro.tune base)
+
+
+def _round_up(x, m):
+    return -(-x // m) * m
+
+
+@given(
+    st.integers(min_value=1, max_value=5000),
+    st.sampled_from([8, 32, 64, 128, 192, 256, 384, 512, 1024]),
+    st.sampled_from([None, 8, 32, 128]),
+)
+@SET
+def test_select_block_divides_padding(dim, block, align):
+    """The selected block always divides the padded dim, and shrinking never
+    pads MORE than the static default block would — the two invariants the
+    pad-and-slice kernels (and so the autotuner's safety argument) rest on."""
+    from repro.core import perfmodel
+
+    b = perfmodel.select_block(dim, block, align)
+    pad = perfmodel.padded_dim(dim, block, align)
+    assert b >= 1
+    assert pad % b == 0, f"block {b} does not divide padded dim {pad}"
+    assert pad >= dim
+    assert pad <= _round_up(dim, block), (
+        f"shrunk block {b} pads {dim}->{pad}, worse than the static "
+        f"block {block}'s {_round_up(dim, block)}"
+    )
+    # an aligned request stays aligned unless the dim itself is smaller
+    if align is not None and block % align == 0 and dim > block:
+        assert b % align == 0 or b == dim
+
+
+@given(
+    st.integers(min_value=1, max_value=5000),
+    st.sampled_from([8, 32, 64, 128, 192, 256, 384, 512, 1024]),
+    st.sampled_from([None, 8, 32, 128]),
+)
+@SET
+def test_select_block_small_dim_is_exact(dim, block, align):
+    """A dim no larger than the block never pads at all (block == dim)."""
+    from repro.core import perfmodel
+
+    if dim <= block:
+        assert perfmodel.select_block(dim, block, align) == dim
+        assert perfmodel.padded_dim(dim, block, align) == dim
+
+
+def test_select_block_rejects_degenerate():
+    from repro.core import perfmodel
+
+    with pytest.raises(ValueError):
+        perfmodel.select_block(0, 256, 128)
+    with pytest.raises(ValueError):
+        perfmodel.select_block(-3, 256, 128)
+    with pytest.raises(ValueError):
+        perfmodel.select_block(64, 0, 128)
