@@ -187,6 +187,7 @@ def measured_policy(
     residue: int = 1,
     mesh_arg: str | None = None,
     records: list | None = None,
+    rtol: float | None = None,
 ):
     """Measured wall-time of the policy-routed emulation on this host.
 
@@ -196,6 +197,11 @@ def measured_policy(
     (aggregate / devices the mesh spans) for every configuration — the
     number that must stay flat as the mesh grows is per-device, and the one
     that must grow is aggregate.
+
+    With `rtol` the policies run accuracy-adaptive (`GemmPolicy(rtol=...)`:
+    fewest moduli provably meeting the tolerance instead of the per-dtype
+    defaults); the records carry an `/rtol...` name suffix so the adaptive
+    trajectory coexists with the default one in the tracked JSON.
     """
     import repro
     from repro import linalg
@@ -217,22 +223,23 @@ def measured_policy(
             for mode in ("fast", "accu"):
                 pol = GemmPolicy(
                     backend=backend, mode=mode, execution=execution,
-                    mesh=mesh,
+                    mesh=mesh, rtol=rtol,
                 )
+                suffix = "" if rtol is None else f"/rtol{rtol:g}"
                 us = time_fn(
                     functools.partial(linalg.matmul_jit, policy=pol), a, b
                 )
                 agg = flop * s**3 / (us * 1e-6) * 1e-12
                 emit(
                     f"fig6_13/measured_cpu/{prec}gemm/{execution}"
-                    f"/mesh{mesh_name}/{mode}/{s}",
+                    f"/mesh{mesh_name}/{mode}/{s}{suffix}",
                     us,
                     f"tflops_aggregate={agg:.4f}"
                     f";tflops_per_device={agg / n_dev:.4f}",
                 )
                 if records is not None:
                     records.append({
-                        "name": f"{prec}gemm/{mode}/{s}",
+                        "name": f"{prec}gemm/{mode}/{s}{suffix}",
                         "execution": execution,
                         "mesh": mesh_name,
                         "devices": n_dev,
@@ -346,6 +353,11 @@ def main():
                     help="residue mesh-axis size (sharded execution)")
     ap.add_argument("--mesh", default=None,
                     help="DxM data/model layout for the sharded mesh")
+    ap.add_argument("--rtol", type=float, default=None,
+                    help="measure accuracy-adaptive policies "
+                         "(GemmPolicy(rtol=...): fewest moduli provably "
+                         "meeting this componentwise tolerance) instead of "
+                         "the per-dtype moduli defaults")
     ap.add_argument("--json", default="BENCH_throughput.json",
                     help="write measured records here (tracked throughput)")
     ap.add_argument("--compare", default=None, metavar="BASELINE.json",
@@ -368,7 +380,8 @@ def main():
     if not args.smoke:
         model_tables()
     measured_policy(
-        sizes, args.execution, args.residue, args.mesh, records
+        sizes, args.execution, args.residue, args.mesh, records,
+        rtol=args.rtol,
     )
     if args.json:
         try:

@@ -12,7 +12,11 @@ invariants every engine must uphold (see docs/static_analysis.md):
 * :class:`LaunchCountPass` — `pallas_call` count equals the perfmodel's
   `kernel_launch_count` prediction;
 * :class:`ScanIndexWidthPass` — no s64 index feeds indexing primitives
-  inside scan bodies (the SPMD partitioner-crash bug class of PRs 5/6).
+  inside scan bodies (the SPMD partitioner-crash bug class of PRs 5/6);
+* :class:`AccuracyPass` — a plan declaring an accuracy contract
+  (``EmulationPlan.rtol``, stamped by adaptive ``GemmPolicy(rtol=...)`` /
+  ``mode="auto"`` policies) must have static `core.accuracy.rel_bound`
+  <= the declared tolerance at the row's contraction length.
 
 Every residue backend exposes ``analyze(plan, shape=None)`` returning the
 pass suite for its engine; `passes_for_backend` is the shared resolver.
@@ -42,6 +46,7 @@ from .lint import (  # noqa: F401
 )
 from .passes import (  # noqa: F401
     COLLECTIVE_PRIMS,
+    AccuracyPass,
     CollectiveSafetyPass,
     Finding,
     LaunchCountPass,
@@ -56,6 +61,7 @@ from .passes import (  # noqa: F401
 )
 
 __all__ = [
+    "AccuracyPass",
     "EqnContext",
     "Finding",
     "OverflowPass",

@@ -2,10 +2,12 @@
 
 Traces the *real* deployment path (`repro.linalg.matmul` under each
 `GemmPolicy`, plus a tiny-model train step fwd+bwd) across an
-execution x dtype x mode matrix at smoke shapes, runs every analysis pass
-the policy's backend mandates (``backend.analyze(plan, shape)``), the
-static CRT partial-split certificate, and the source lints — and exits
-nonzero if any finding survives.  CI runs this as the `tier1-analysis`
+execution x dtype x mode matrix at smoke shapes — including adaptive
+``mode="auto"`` rows with per-dtype rtol targets whose resolved plans the
+`AccuracyPass` certifies against the `core.accuracy` bound — runs every
+analysis pass the policy's backend mandates (``backend.analyze(plan,
+shape)``), the static CRT partial-split certificate, and the source lints
+— and exits nonzero if any finding survives.  CI runs this as the `tier1-analysis`
 job::
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \\
@@ -29,6 +31,16 @@ N_MODULI = {"float32": 5, "float64": 6, "complex64": 5, "complex128": 6}
 DTYPES = ("float32", "float64", "complex64", "complex128")
 MODES = ("fast", "accu")
 
+#: adaptive rows: requested componentwise tolerance per compute dtype
+#: (mode="auto" resolves the cheapest (mode, n_moduli) meeting it; the
+#: AccuracyPass then certifies the resolved plan's static bound)
+ADAPTIVE_RTOL = {
+    "float32": 1e-4,
+    "float64": 1e-9,
+    "complex64": 1e-4,
+    "complex128": 1e-9,
+}
+
 
 def _mesh_for(execution: str):
     """A (data, model, residue) mesh for sharded rows: 2-way residue when
@@ -44,7 +56,7 @@ def _mesh_for(execution: str):
     return Mesh(devices, ("data", "model", "residue"))
 
 
-def _run_matmul_row(execution, dtype_name, mode, shape):
+def _run_matmul_row(execution, dtype_name, mode, shape, rtol=None):
     import jax
     import jax.numpy as jnp
 
@@ -55,15 +67,22 @@ def _run_matmul_row(execution, dtype_name, mode, shape):
     m, k, n = shape
     kwargs = dict(
         backend=BACKEND_FOR_DTYPE[dtype_name],
-        n_moduli=N_MODULI[dtype_name],
         mode=mode,
         execution=execution,
         interpret=True,
     )
+    if rtol is None:
+        kwargs["n_moduli"] = N_MODULI[dtype_name]
+    else:
+        # adaptive row (mode="auto"): the policy resolves its own
+        # (mode, n_moduli); the AccuracyPass certifies the resolved plan
+        kwargs["rtol"] = rtol
     mesh = _mesh_for(execution)
     if mesh is not None:
         kwargs["mesh"] = mesh
     policy = GemmPolicy(**kwargs)
+    if policy.is_adaptive:
+        policy = policy.resolve_adaptive(m, k, n)
     plan = policy.plan_for(m, k, n)
     backend = policy.execution_backend()
     passes = backend.analyze(plan, (m, k, n))
@@ -75,7 +94,7 @@ def _run_matmul_row(execution, dtype_name, mode, shape):
     )(a, b)
     findings = run_passes(passes, jaxpr)
     findings += certify_partial_split(plan.ctx.moduli)
-    return findings, [p.name for p in passes]
+    return findings, [p.name for p in passes], plan
 
 
 def _run_model_row(execution):
@@ -192,7 +211,7 @@ def main(argv=None) -> int:
                 rows += 1
                 label = f"{execution:>18s} x {dtype_name:>10s} x {mode}"
                 try:
-                    findings, pass_names = _run_matmul_row(
+                    findings, pass_names, _ = _run_matmul_row(
                         execution, dtype_name, mode, shape
                     )
                 except Exception as exc:  # row must trace to certify
@@ -208,6 +227,34 @@ def main(argv=None) -> int:
                     clean += 1
                     if args.verbose:
                         print(f"ok    {label}  [{', '.join(pass_names)}]")
+
+        # adaptive rows: mode="auto" + per-dtype rtol; the resolved plan's
+        # static accuracy bound is certified by the AccuracyPass
+        for dtype_name in dtypes:
+            rows += 1
+            rtol = ADAPTIVE_RTOL[dtype_name]
+            label = f"{execution:>18s} x {dtype_name:>10s} x auto(rtol={rtol:g})"
+            try:
+                findings, pass_names, plan = _run_matmul_row(
+                    execution, dtype_name, "auto", shape, rtol=rtol
+                )
+            except Exception as exc:
+                print(f"ERROR {label}: trace failed: {exc!r}")
+                all_findings.append(exc)
+                continue
+            resolved = f"-> {plan.mode}/N={plan.n_moduli}"
+            if findings:
+                print(f"FAIL  {label} {resolved}")
+                for f in findings:
+                    print(f"      {f}")
+                all_findings.extend(findings)
+            else:
+                clean += 1
+                if args.verbose:
+                    print(
+                        f"ok    {label} {resolved}  "
+                        f"[{', '.join(pass_names)}]"
+                    )
 
     if not args.skip_model:
         for execution in ("kernel",):

@@ -3,7 +3,8 @@
 Unlike the jaxpr passes (which certify traced programs), these lints parse
 files: the README must document every `GemmPolicy` execution and field, and
 every CLI that exposes an ``--execution`` flag must offer exactly the
-executions `GemmPolicy` accepts — a new engine that forgets to update a
+executions `GemmPolicy` accepts, and must also expose the accuracy-adaptive
+``--rtol`` axis — a new engine (or policy axis) that forgets to update a
 launcher (or a launcher advertising an execution the policy rejects) is a
 finding, not a runtime surprise.
 
@@ -19,7 +20,7 @@ from pathlib import Path
 
 from .passes import Finding
 
-__all__ = ["execution_choices", "lint_policy_surface", "lint_repo"]
+__all__ = ["execution_choices", "has_flag", "lint_policy_surface", "lint_repo"]
 
 #: CLIs that must expose the full execution axis
 EXECUTION_CLIS = (
@@ -54,6 +55,20 @@ def execution_choices(path) -> list | None:
                 ]
                 return vals
     return None
+
+
+def has_flag(path, flag: str) -> bool:
+    """True if `path` defines an ``add_argument("<flag>", ...)`` call."""
+    tree = ast.parse(Path(path).read_text(), filename=str(path))
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "add_argument"
+                and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and node.args[0].value == flag):
+            return True
+    return False
 
 
 def lint_policy_surface(root) -> list:
@@ -124,6 +139,17 @@ def lint_policy_surface(root) -> list:
                     _LINT,
                     f"{rel}: --execution choices out of sync with "
                     f"GemmPolicy.EXECUTIONS ({'; '.join(detail)})",
+                )
+            )
+        # the accuracy-adaptive axis must ride along everywhere the
+        # execution axis does: every launcher exposes --rtol
+        if not has_flag(path, "--rtol"):
+            findings.append(
+                Finding(
+                    _LINT,
+                    f"{rel}: no --rtol argument (the adaptive accuracy "
+                    "axis, GemmPolicy(rtol=...), must be exposed by every "
+                    "execution CLI)",
                 )
             )
     return findings

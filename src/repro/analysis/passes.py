@@ -40,6 +40,17 @@ names the violated invariant and where it was found.  The passes:
     :func:`expected_launch_count` to derive the expectation from a
     backend + plan + shape).
 
+``AccuracyPass``
+    A plan carrying a declared tolerance (``EmulationPlan.rtol``, stamped
+    by `GemmPolicy(rtol=...)` / ``mode="auto"``) must *provably* meet it:
+    the static `core.accuracy.rel_bound` for (dtype, mode, n_moduli, k,
+    formulation) must be <= the declared rtol.  Static check — the traced
+    jaxpr is not consulted (quantization is the only inexact step and every
+    execution is bitwise-identical to the reference, so the bound depends
+    only on the plan), but the pass runs in the same suite so a
+    ``--matrix`` row with an rtol column is certified alongside its
+    overflow/launch invariants.
+
 ``ScanIndexWidthPass``
     Flags s64 indices feeding `dynamic_slice` / `dynamic_update_slice` /
     `gather` / `scatter*` inside `scan` bodies — the exact SPMD
@@ -62,6 +73,7 @@ from .jaxprs import EqnContext, count_primitive, iter_eqns, unwrap
 
 __all__ = [
     "Finding",
+    "AccuracyPass",
     "OverflowPass",
     "CollectiveSafetyPass",
     "LaunchCountPass",
@@ -417,6 +429,54 @@ class LaunchCountPass:
         return []
 
 
+@dataclasses.dataclass(frozen=True)
+class AccuracyPass:
+    """The plan's static error bound must meet its declared tolerance.
+
+    ``plan`` is the :class:`~repro.core.plan.EmulationPlan` under analysis
+    and ``k`` the contraction length of the certified GEMM; ``rtol``
+    defaults to the plan's own declared contract (``plan.rtol``).  The
+    check is `core.accuracy.rel_bound(...) <= rtol` — purely static, since
+    quantization is the scheme's only inexact step and every execution
+    backend is bitwise-identical to the reference (PR 5/6 invariant), so
+    the componentwise bound depends on the plan alone, not the trace.
+    A plan with no declared rtol trivially certifies (empty suite result).
+    """
+
+    plan: object
+    k: int
+    rtol: float | None = None
+
+    name = "accuracy"
+
+    def run(self, jaxpr) -> list:
+        del jaxpr  # static check; see class docstring
+        rtol = self.rtol if self.rtol is not None else self.plan.rtol
+        if rtol is None:
+            return []
+        from ..core.accuracy import rel_bound
+
+        bound = rel_bound(
+            self.plan.dtype,
+            self.plan.mode,
+            self.plan.n_moduli,
+            int(self.k),
+            formulation=self.plan.formulation,
+            out_dtype=self.plan.out_dtype,
+        )
+        if bound > rtol:
+            return [
+                Finding(
+                    self.name,
+                    f"plan ({self.plan.dtype}, mode={self.plan.mode}, "
+                    f"N={self.plan.n_moduli}, {self.plan.formulation}) has "
+                    f"static componentwise bound {bound:.3g} at k={self.k} "
+                    f"> declared rtol={rtol:.3g}",
+                )
+            ]
+        return []
+
+
 # primitives that consume index operands, and which invars are indices
 _INDEXED_PRIMS = {
     "dynamic_slice": slice(1, None),
@@ -556,8 +616,10 @@ def passes_for_backend(backend, plan, shape=None) -> tuple:
 
     Always includes the overflow, collective-safety, and scan-index-width
     passes (with the chunk limits of the backend's engine); when `shape`
-    is given, also a LaunchCountPass pinned to the perfmodel prediction.
-    Backends expose this as ``backend.analyze(plan, shape)``.
+    is given, also a LaunchCountPass pinned to the perfmodel prediction
+    and — for a plan declaring an accuracy contract (``plan.rtol``) — an
+    AccuracyPass certifying the static bound at the shape's contraction
+    length.  Backends expose this as ``backend.analyze(plan, shape)``.
     """
     passes = [
         OverflowPass(
@@ -570,6 +632,8 @@ def passes_for_backend(backend, plan, shape=None) -> tuple:
         expected = expected_launch_count(backend, plan, shape)
         if expected is not None:
             passes.append(LaunchCountPass(expected=expected))
+        if getattr(plan, "rtol", None) is not None:
+            passes.append(AccuracyPass(plan=plan, k=shape[1]))
     return tuple(passes)
 
 

@@ -9,6 +9,7 @@ residue backend ("reference" | "kernel" | "per_modulus_kernel" | "sharded"
 scoped by `repro.use_policy(policy)`; the `ozaki2_gemm` / `ozaki2_cgemm`
 wrappers retained here are deprecation shims over that route.
 """
+from .accuracy import GemmStats, min_moduli_for, probe_operands, rel_bound, rel_error
 from .cgemm import ozaki2_cgemm
 from .executor import (
     Fp8Backend,
@@ -37,6 +38,7 @@ __all__ = [
     "EmulationPlan",
     "Fp8Backend",
     "GemmPolicy",
+    "GemmStats",
     "NATIVE",
     "PreparedOperand",
     "REFERENCE",
@@ -48,10 +50,14 @@ __all__ = [
     "gemm_prepared",
     "make_crt_context",
     "make_plan",
+    "min_moduli_for",
     "min_moduli_for_bits",
     "ozaki2_cgemm",
     "ozaki2_gemm",
     "policy_matmul",
     "prepare_weights",
+    "probe_operands",
+    "rel_bound",
+    "rel_error",
     "run_plan",
 ]

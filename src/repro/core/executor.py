@@ -780,6 +780,17 @@ class PreparedOperand:
         return jnp.issubdtype(jnp.dtype(self.dtype), jnp.complexfloating)
 
     @property
+    def mode(self) -> str:
+        """The scaling mode this operand was prepared for, recorded by what
+        it stores: fast preparation stores residue planes, accu preparation
+        stores the 7-bit bound + raw operand (`keep_raw`).  Derived rather
+        than carried in the pytree aux, so older fast-mode checkpoints
+        round-trip unchanged.  The policy layer checks this against the
+        (possibly adaptively resolved) calling policy and raises instead of
+        returning silently wrong answers."""
+        return "fast" if self.residues else "accu"
+
+    @property
     def ctx(self) -> CRTContext:
         return make_crt_context(self.n_moduli)
 
@@ -799,7 +810,8 @@ class PreparedOperand:
     def __repr__(self):
         return (
             f"PreparedOperand(side={self.side!r}, dtype={self.dtype}, "
-            f"n_moduli={self.n_moduli}, shape={self.operand_shape})"
+            f"mode={self.mode!r}, n_moduli={self.n_moduli}, "
+            f"shape={self.operand_shape})"
         )
 
 

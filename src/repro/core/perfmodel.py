@@ -398,6 +398,36 @@ def select_engine(
     )
 
 
+def select_mode(
+    m: int,
+    n: int,
+    k: int,
+    candidates,
+    hw: HW | None = None,
+    prec: str = "z",
+    engine: str = "int8",
+) -> tuple[str, int]:
+    """Cheapest (mode, n_moduli) pair among ``candidates`` (SIII-C model).
+
+    The accuracy-adaptive resolver (`GemmPolicy(rtol=...)` / ``mode="auto"``)
+    computes the *admissible* pairs from `core.accuracy.min_moduli_for` and
+    hands them here, so "auto" means: the cheapest plan on this machine —
+    `default_hw()` returns the live `repro.tune` calibration when one is
+    active — that provably meets the tolerance.  Ties keep the earlier
+    candidate (callers list 'fast' first)."""
+    hw = hw or default_hw()
+    cands = list(candidates)
+    if not cands:
+        raise ValueError("select_mode needs at least one (mode, n_moduli) candidate")
+    best = cands[0]
+    best_t = float("inf")
+    for mode, n_moduli in cands:
+        t = engine_time_s(engine, m, n, k, n_moduli, hw, mode, prec)
+        if t < best_t:
+            best, best_t = (mode, n_moduli), t
+    return best
+
+
 def kernel_launch_count(
     n_moduli: int,
     formulation: str = "real",

@@ -81,6 +81,9 @@ class EmulationPlan:
     formulation: str           # 'real' | 'karatsuba' | 'block_a' | 'block_b'
     n_block: int | None        # output-column blocking (paper SIII-A)
     out_dtype: str             # result dtype name
+    rtol: float | None = None  # declared accuracy contract (metadata only:
+    # the componentwise tolerance this plan was resolved for, certified
+    # statically by `analysis.AccuracyPass`; never read by the executor)
 
     # ------------------------------------------------------------ derived
 
@@ -123,6 +126,7 @@ def make_plan(
     megakernel: bool = False,
     comm_s: float = 0.0,
     engine: str = "int8",
+    rtol: float | None = None,
 ) -> EmulationPlan:
     """Build an :class:`EmulationPlan` from user-facing knobs.
 
@@ -150,6 +154,12 @@ def make_plan(
       on ('int8' | 'fp8') — the 'auto' selections price ops at that engine's
       rate and MAC-volume factor (`perfmodel.ENGINE_OP_FACTOR`), so an fp8
       policy's launch-vs-compute crossover reflects e4m3 throughput.
+    rtol: optional declared componentwise tolerance (metadata): recorded on
+      the plan so `analysis.AccuracyPass` can certify the static
+      `core.accuracy` bound against it.  Adaptive policies
+      (`GemmPolicy(rtol=...)` / ``mode="auto"``) resolve to a concrete
+      (mode, n_moduli) *before* calling `make_plan` and stamp their rtol
+      here; the executor never reads it.
     """
     dt = jnp.dtype(dtype)
     if mode not in ("fast", "accu"):
@@ -191,6 +201,7 @@ def make_plan(
         formulation=formulation,
         n_block=n_block,
         out_dtype=out_dt.name,
+        rtol=rtol,
     )
 
 

@@ -182,9 +182,23 @@ class GemmPolicy:
         `plan.DEFAULT_MODULI`).  More moduli = more accuracy, more int8/fp8
         work.
     ``mode``
-        Scaling mode: ``"fast"`` (Cauchy-Schwarz bound, eqs. 11-12) or
+        Scaling mode: ``"fast"`` (Cauchy-Schwarz bound, eqs. 11-12),
         ``"accu"`` (auxiliary 7-bit product bound, eqs. 13-14 — tighter, one
-        extra product).
+        extra product), or ``"auto"`` (requires ``rtol``): resolve the
+        cheapest (mode, n_moduli) pair that provably meets the tolerance,
+        priced by the calibrated perfmodel (`perfmodel.select_mode`).
+    ``rtol``
+        Accuracy-adaptive target (arXiv:2602.02549): the componentwise
+        tolerance ``max_ij |C - C_emul|_ij / (k amax_i bmax_j)`` the
+        emulation must provably meet.  With ``n_moduli=None`` the moduli
+        count is resolved per call via `core.accuracy.min_moduli_for`
+        (a cheap dynamic-range probe of concrete operands tightens the
+        bound; under jit the static worst case applies — both provably meet
+        the tolerance).  With an explicit ``n_moduli`` the pin is kept and
+        validated against the bound instead.  None (default): nothing
+        adaptive — behavior is bitwise identical to a policy without this
+        field.  The native backend ignores ``rtol`` (no emulation step to
+        adapt).
     ``method``
         CRT reconstruction: ``"paper"`` (eq. (5) split), ``"dd"``
         (double-double), ``"garner"`` (mixed-radix, the TPU-native kernel),
@@ -239,7 +253,7 @@ class GemmPolicy:
 
     backend: Backend = "native"
     n_moduli: int | None = None
-    mode: str = "fast"            # 'fast' | 'accu'
+    mode: str = "fast"            # 'fast' | 'accu' | 'auto' (needs rtol)
     method: str = "auto"          # CRT reconstruction path (or 'auto')
     formulation: str = "karatsuba"  # complex Fig. 1 strategy (or 'auto')
     n_block: int | str | None = None  # output-column blocking (or 'auto')
@@ -249,10 +263,22 @@ class GemmPolicy:
     mesh: object | None = None    # sharded execution: jax.sharding.Mesh
     shard_axes: tuple | None = None  # sharded: (residue, m, n) name override
     calibration: str | None = None  # repro.tune cache path to pin (or None)
+    rtol: float | None = None     # componentwise accuracy target (adaptive)
 
     def __post_init__(self):
         if self.backend not in _COMPUTE_DTYPES:
             raise ValueError(f"unknown backend {self.backend!r}")
+        if self.mode not in ("fast", "accu", "auto"):
+            raise ValueError(
+                f"unknown mode {self.mode!r}; expected 'fast', 'accu' or 'auto'"
+            )
+        if self.rtol is not None and not float(self.rtol) > 0.0:
+            raise ValueError(f"rtol must be > 0, got {self.rtol!r}")
+        if self.mode == "auto" and self.rtol is None:
+            raise ValueError(
+                "mode='auto' picks the cheapest (mode, n_moduli) pair meeting "
+                "an accuracy target — pass GemmPolicy(rtol=...) to declare it"
+            )
         if self.execution not in EXECUTIONS:
             raise ValueError(
                 f"unknown execution {self.execution!r}; expected one of "
@@ -367,6 +393,82 @@ class GemmPolicy:
         )
         return cls(bool(interp))
 
+    @property
+    def is_adaptive(self) -> bool:
+        """True when (mode, n_moduli) are deferred to per-call resolution —
+        ``mode='auto'``, or ``rtol`` with no pinned ``n_moduli`` (see
+        :meth:`resolve_adaptive`).  A pinned ``n_moduli`` alongside ``rtol``
+        is *not* adaptive: the pin runs as-is and the declared tolerance is
+        certified statically by `analysis.AccuracyPass` instead — which also
+        means a policy resolve_adaptive returns (concrete mode, concrete
+        n_moduli, rtol kept) runs one fixed plan everywhere, including the
+        cotangent products whose contraction length differs."""
+        return self.backend != "native" and (
+            self.mode == "auto" or (self.rtol is not None and self.n_moduli is None)
+        )
+
+    def resolve_adaptive(self, m: int, k: int, n: int, *, stats=None):
+        """Resolve ``rtol`` / ``mode='auto'`` to a concrete policy.
+
+        Returns ``self`` unchanged when nothing is adaptive (the bitwise
+        no-change guarantee for non-adaptive policies).  Otherwise: the
+        admissible (mode, n_moduli) pairs come from the arXiv:2602.02549
+        bound calculator (`core.accuracy`) — ``n_moduli=None`` resolves via
+        `min_moduli_for`, a pinned ``n_moduli`` is validated against
+        `rel_bound` — and `perfmodel.select_mode` picks the cheapest pair on
+        this machine (the live `repro.tune` calibration when one is active).
+        ``stats`` is an optional `core.accuracy.GemmStats` probe of the
+        concrete operands that tightens the bound; ``None`` (e.g. under jit,
+        or on the prepared/serving path, which must resolve identically at
+        prepare and serve time) certifies the static worst case instead.
+        The returned policy keeps ``rtol`` so the resolved plan carries its
+        accuracy contract for `analysis.AccuracyPass`.
+        """
+        if not self.is_adaptive:
+            return self
+        from . import accuracy, perfmodel
+
+        dtype = jnp.dtype(self.compute_dtype).name
+        form = self.formulation if self.is_complex else None
+        modes = ("fast", "accu") if self.mode == "auto" else (self.mode,)
+        cands, reasons = [], []
+        for mode in modes:
+            if self.n_moduli is not None:
+                bound = accuracy.rel_bound(
+                    dtype, mode, self.n_moduli, k, formulation=form,
+                    stats=stats, out_dtype=self.out_dtype,
+                )
+                if self.rtol is not None and bound > self.rtol:
+                    reasons.append(
+                        f"{mode}: bound {bound:g} at the pinned "
+                        f"n_moduli={self.n_moduli} exceeds rtol"
+                    )
+                    continue
+                cands.append((mode, self.n_moduli))
+            else:
+                try:
+                    cands.append((mode, accuracy.min_moduli_for(
+                        self.rtol, dtype, k=k, mode=mode, formulation=form,
+                        stats=stats, out_dtype=self.out_dtype,
+                    )))
+                except ValueError as e:
+                    reasons.append(f"{mode}: {e}")
+        if not cands:
+            raise ValueError(
+                f"no (mode, n_moduli) meets rtol={self.rtol:g} for "
+                f"backend={self.backend!r} at k={k}: " + "; ".join(reasons)
+            )
+        prec = {"float32": "s", "float64": "d",
+                "complex64": "c", "complex128": "z"}[dtype]
+        with self._calibration_scope():
+            mode, n_moduli = perfmodel.select_mode(
+                m, n, k, cands, prec=prec,
+                engine="fp8" if self.execution == "fp8" else "int8",
+            )
+        if (mode, n_moduli) == (self.mode, self.n_moduli):
+            return self  # already concrete (and re-validated): fixed point
+        return dataclasses.replace(self, mode=mode, n_moduli=n_moduli)
+
     def plan_for(self, m: int, k: int, n: int):
         """The `EmulationPlan` this policy runs for an (m,k)x(k,n) product.
 
@@ -374,10 +476,17 @@ class GemmPolicy:
         ambient) `repro.tune` calibration, every `hw=None` perfmodel term
         below — the sharded comm pricing and the formulation/n_block/engine
         'auto' selections in `make_plan` — resolves `perfmodel.default_hw()`
-        to the *measured* hardware instead of the TPU v5e preset.
+        to the *measured* hardware instead of the TPU v5e preset.  An
+        adaptive policy (``rtol`` / ``mode='auto'``) resolves its concrete
+        (mode, n_moduli) first — statically here; callers holding concrete
+        operands probe them and resolve before reaching this point.
         """
         if self.backend == "native":
             raise ValueError("native policy has no emulation plan")
+        if self.is_adaptive:
+            resolved = self.resolve_adaptive(m, k, n)
+            if resolved is not self:
+                return resolved.plan_for(m, k, n)
         # the perfmodel terms behind the 'auto' selections depend on how the
         # executing backend launches — read its declared capabilities so
         # plan_for and gemm_prepared can never disagree
@@ -413,6 +522,7 @@ class GemmPolicy:
                 megakernel=getattr(be, "megakernel", False),
                 comm_s=comm_s,
                 engine=getattr(be, "engine", "int8"),
+                rtol=self.rtol,
             )
 
 
@@ -525,11 +635,26 @@ def policy_matmul(x: jnp.ndarray, w, policy: GemmPolicy) -> jnp.ndarray:
                 "execution='kernel') or execution='fused' outside any mesh "
                 "scope, or pass raw weights to shard this matmul"
             )
+        k, n = w.operand_shape
+        # adaptive policies resolve *statically* on the prepared path — no
+        # operand probe, and a canonical pricing shape (m := n) independent
+        # of the batch — so prepare_weights and this call agree whenever the
+        # policy and weight shape are unchanged; any drift (rtol edited
+        # between prepare and serve, a different adaptive pick) is caught by
+        # the recorded-plan checks below instead of returning wrong answers
+        policy = policy.resolve_adaptive(n, k, n)
         if policy.mode == "accu" and w.raw is None:
             raise ValueError(
                 "accu-mode prepared matmuls re-cast from the raw operand "
                 "(the accurate exponents couple both operands); re-prepare "
                 "with prepare_weights(accu policy) / keep_raw=True"
+            )
+        if w.mode != policy.mode:
+            raise ValueError(
+                f"prepared weight was prepared for mode={w.mode!r} but the "
+                f"policy resolves to mode={policy.mode!r}"
+                + (" (adaptive resolution)" if policy.rtol is not None else "")
+                + "; re-prepare with prepare_weights(policy)"
             )
         expect = policy.n_moduli or default_n_moduli(
             policy.compute_dtype, policy.mode
@@ -537,7 +662,9 @@ def policy_matmul(x: jnp.ndarray, w, policy: GemmPolicy) -> jnp.ndarray:
         if w.n_moduli != expect:
             raise ValueError(
                 f"prepared weight has n_moduli={w.n_moduli} but the policy "
-                f"resolves to {expect}; re-prepare with prepare_weights(policy)"
+                f"resolves to {expect}"
+                + (" (adaptive resolution)" if policy.rtol is not None else "")
+                + "; re-prepare with prepare_weights(policy)"
             )
         if jnp.dtype(w.dtype) != jnp.dtype(policy.compute_dtype):
             raise ValueError(
@@ -554,6 +681,18 @@ def policy_matmul(x: jnp.ndarray, w, policy: GemmPolicy) -> jnp.ndarray:
         return y if policy.out_dtype is None else y.astype(policy.out_dtype)
     lead = x.shape[:-1]
     x2 = x.reshape((-1, x.shape[-1]))
+    if policy.is_adaptive:
+        # adaptive resolution happens *before* the custom-VJP boundary so the
+        # forward and both cotangent products run one concrete plan.  With
+        # concrete operands a cheap dynamic-range probe tightens the bound
+        # (possibly fewer moduli); under jit the probe returns None and the
+        # static worst case resolves — either way provably within rtol.
+        from .accuracy import probe_operands
+
+        policy = policy.resolve_adaptive(
+            x2.shape[0], x2.shape[1], w.shape[-1],
+            stats=probe_operands(x2, w),
+        )
     y = emulated_matmul(x2, w, policy)
     return y.reshape(lead + (w.shape[-1],))
 
@@ -587,10 +726,6 @@ def prepare_weights(params, policy: GemmPolicy):
             "execution='kernel' — or 'fused' outside any mesh scope — "
             "and serve on that policy, or serve unprepared"
         )
-    if policy.mode not in ("fast", "accu"):
-        raise ValueError(f"unknown mode {policy.mode!r}")
-    keep_raw = policy.mode == "accu"
-    n_moduli = policy.n_moduli or default_n_moduli(policy.compute_dtype, policy.mode)
     cast_backend = policy.execution_backend()
 
     def _is_weight_leaf(val):
@@ -605,13 +740,19 @@ def prepare_weights(params, policy: GemmPolicy):
         weight arrays (scanned groups bundle their per-group stacks this
         way) — the "w" context propagates through the sequence nesting."""
         if _is_weight_leaf(val):
+            # adaptive policies resolve statically per weight, with the same
+            # canonical pricing shape (m := n) the prepared matmul path uses,
+            # so the planes prepared here are exactly what serving resolves
+            k, n = int(val.shape[-2]), int(val.shape[-1])
+            pol = policy.resolve_adaptive(n, k, n)
             # jnp.asarray: checkpoint restores may hand numpy leaves
             return PreparedOperand(
                 jnp.asarray(val).astype(policy.compute_dtype),
-                n_moduli,
+                pol.n_moduli
+                or default_n_moduli(policy.compute_dtype, pol.mode),
                 side="right",
                 backend=cast_backend,
-                keep_raw=keep_raw,
+                keep_raw=pol.mode == "accu",
             )
         if isinstance(val, (list, tuple)):
             return type(val)(prep(v) for v in val)

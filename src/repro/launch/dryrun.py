@@ -242,6 +242,7 @@ def run_cell(
     n_block=None,
     execution: str = "reference",
     residue: int = 1,
+    rtol: float | None = None,
     out_dir: str | None = None,
     verbose: bool = True,
 ):
@@ -261,6 +262,8 @@ def run_cell(
             cell_id += f"__{formulation}"
         if n_block:
             cell_id += f"__nb{n_block}"
+        if rtol is not None:
+            cell_id += f"__rtol{rtol:g}"
     if seq_shard:
         cell_id += "__sp"
     if grad_accum > 1:
@@ -293,6 +296,7 @@ def run_cell(
             # the sharded execution shard_maps over the same mesh the cell
             # is partitioned on (pinned: the policy is a jit static)
             mesh=mesh if execution == "sharded" else None,
+            rtol=rtol,
         )
         overrides["embed_pspec"] = (batch_axes, None, None)
     if seq_shard:
@@ -418,7 +422,12 @@ def main():
     ap.add_argument("--residue", type=int, default=1,
                     help="residue mesh-axis size (sharded execution): "
                          "carved out of the 16-way model axis")
-    ap.add_argument("--mode", default="fast", choices=["fast", "accu"])
+    ap.add_argument("--mode", default="fast",
+                    choices=["fast", "accu", "auto"])
+    ap.add_argument("--rtol", type=float, default=None,
+                    help="componentwise accuracy target (adaptive policy: "
+                         "fewest moduli provably meeting it; required for "
+                         "--mode auto)")
     ap.add_argument("--formulation", default="karatsuba",
                     choices=["karatsuba", "block_a", "block_b", "auto"])
     ap.add_argument("--n-block", default=None,
@@ -431,6 +440,8 @@ def main():
     add_calibration_args(ap)
     args = ap.parse_args()
     apply_calibration_args(args)
+    if args.mode == "auto" and args.rtol is None:
+        ap.error("--mode auto needs an accuracy target: pass --rtol")
 
     meshes = [args.multi_pod]
     if args.both_meshes:
@@ -464,6 +475,7 @@ def main():
             n_block=args.n_block,
             execution=args.execution,
             residue=args.residue,
+            rtol=args.rtol,
             out_dir=args.out,
         )
 

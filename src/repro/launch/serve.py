@@ -56,9 +56,19 @@ def main():
                          "one-launch megakernel)")
     ap.add_argument("--residue", type=int, default=1,
                     help="residue mesh-axis size (sharded execution)")
+    ap.add_argument("--mode", default="fast",
+                    choices=["fast", "accu", "auto"],
+                    help="paper scaling mode; 'auto' picks the cheapest "
+                         "mode meeting --rtol per shape")
+    ap.add_argument("--rtol", type=float, default=None,
+                    help="componentwise accuracy target (adaptive policy: "
+                         "fewest moduli provably meeting it; required for "
+                         "--mode auto)")
     add_calibration_args(ap)
     args = ap.parse_args()
     apply_calibration_args(args)
+    if args.mode == "auto" and args.rtol is None:
+        ap.error("--mode auto needs an accuracy target: pass --rtol")
 
     scope = contextlib.nullcontext()
     if args.backend != "native":
@@ -72,7 +82,7 @@ def main():
             )
         scope = repro.use_policy(
             GemmPolicy(backend=args.backend, execution=args.execution,
-                       mesh=mesh)
+                       mesh=mesh, mode=args.mode, rtol=args.rtol)
         )
     with scope:
         cfg = get_reduced(args.arch, **(

@@ -3,7 +3,7 @@
     PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
         --steps 100 --batch 8 --seq 256 [--mesh dxm] [--ckpt-dir DIR] \
         [--backend ozaki2_f32] [--execution kernel] [--mode accu] \
-        [--formulation auto] [--n-block auto] \
+        [--formulation auto] [--n-block auto] [--rtol 1e-6] \
         [--seq-shard] [--vocab-chunk N] [--compress-dp]
 
 The emulation flags mirror the `GemmPolicy` axes: `--backend` picks the
@@ -62,8 +62,14 @@ def main():
     ap.add_argument("--residue", type=int, default=1,
                     help="residue mesh-axis size (sharded execution); "
                          "appended to the --mesh layout")
-    ap.add_argument("--mode", default="fast", choices=["fast", "accu"],
-                    help="paper scaling mode (accuracy band)")
+    ap.add_argument("--mode", default="fast", choices=["fast", "accu", "auto"],
+                    help="paper scaling mode (accuracy band); 'auto' picks "
+                         "the cheapest mode meeting --rtol per shape")
+    ap.add_argument("--rtol", type=float, default=None,
+                    help="componentwise accuracy target: the policy "
+                         "resolves the fewest moduli whose core.accuracy "
+                         "bound provably meets it (required for "
+                         "--mode auto)")
     ap.add_argument("--formulation", default="karatsuba",
                     choices=["karatsuba", "block_a", "block_b", "auto"],
                     help="complex Fig. 1 strategy (complex backends only)")
@@ -74,6 +80,8 @@ def main():
     add_calibration_args(ap)
     args = ap.parse_args()
     apply_calibration_args(args)
+    if args.mode == "auto" and args.rtol is None:
+        ap.error("--mode auto needs an accuracy target: pass --rtol")
 
     mesh = None
     if args.mesh:
@@ -104,6 +112,7 @@ def main():
             n_block=args.n_block,
             execution=args.execution,
             mesh=mesh if args.execution == "sharded" else None,
+            rtol=args.rtol,
         )
         over["dtype"] = "float32"
     if args.seq_shard:

@@ -163,7 +163,7 @@ def _no_ambient_policy():
         _STATE.stack = stack if stack is not None else []
 
 
-def matmul(x, w, *, policy: GemmPolicy | None = None):
+def matmul(x, w, *, policy: GemmPolicy | None = None, rtol: float | None = None):
     """Drop-in `jnp.matmul(x, w)` under `policy` (default: the ambient
     `use_policy` scope; native when none is active).
 
@@ -171,6 +171,12 @@ def matmul(x, w, *, policy: GemmPolicy | None = None):
     `PreparedOperand` (residues cast once — the serving fast path).
     Differentiable through the emulated custom VJP; jit-compatible (the
     policy is trace-time static).
+
+    `rtol` is shorthand for ``dataclasses.replace(policy, rtol=rtol)``: the
+    accuracy-adaptive axis (arXiv:2602.02549).  The moduli count — and with
+    ``mode="auto"`` the scaling mode — is then resolved per call as the
+    cheapest plan whose componentwise error bound provably meets the
+    tolerance (see `repro.core.accuracy`).
 
     Example — an f64-grade product emulated on int8 arithmetic::
 
@@ -183,8 +189,19 @@ def matmul(x, w, *, policy: GemmPolicy | None = None):
         ...     a, b, policy=GemmPolicy(backend="ozaki2_f64", n_moduli=6))
         >>> bool(jnp.all(y == 10.0))       # exact: power-of-two operands
         True
+
+    Example — ask for a tolerance instead of a moduli count; a looser
+    target provably needs fewer moduli (fewer int8 GEMMs)::
+
+        >>> pol = GemmPolicy(backend="ozaki2_f64")
+        >>> y6 = repro.linalg.matmul(a, b, policy=pol, rtol=1e-6)
+        >>> y14 = repro.linalg.matmul(a, b, policy=pol, rtol=1e-14)
+        >>> bool(jnp.allclose(y6, y14))
+        True
     """
     policy = current_policy() if policy is None else policy
+    if rtol is not None:
+        policy = dataclasses.replace(policy, rtol=rtol)
     if isinstance(w, PreparedOperand):
         return policy_matmul(x, w, policy)
     if getattr(x, "ndim", 0) < 2 or getattr(w, "ndim", 0) < 2:
@@ -198,6 +215,10 @@ def matmul(x, w, *, policy: GemmPolicy | None = None):
     if policy.backend == "native":
         y = jnp.matmul(x, w)
         return y if policy.out_dtype is None else y.astype(policy.out_dtype)
+    if policy.is_adaptive:
+        # resolve statically (one plan for every batch element); the 2D
+        # fast path above additionally probes the concrete operands
+        policy = policy.resolve_adaptive(x.shape[-2], x.shape[-1], w.shape[-1])
     return emulated_matmul(x, w, policy)
 
 

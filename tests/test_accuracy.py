@@ -1,0 +1,507 @@
+"""Accuracy-adaptive emulation: the paper-bound certification harness.
+
+What this file pins (PR 10 tentpole + satellites):
+
+  * the `core.accuracy` bound calculator is *sound*: across random shapes,
+    dynamic ranges, dtypes x {fast, accu} x complex formulations x moduli
+    counts, the measured componentwise error of the policy-routed emulation
+    never exceeds `rel_bound` (hypothesis property suite);
+  * `min_moduli_for` is monotone in rtol and consistent with the forward
+    bound (the returned N meets rtol, N-1 does not);
+  * the pinned golden accuracy bands: `benchmarks.bench_accuracy`'s smoke
+    sweep stays inside its per-(dtype, mode, n_moduli) `BANDS` and every
+    record stays below its static bound (`check_records` == []);
+  * `GemmPolicy(rtol=...)` / ``mode="auto"`` resolve plans that provably
+    and measurably meet the requested tolerance, eager and under jit;
+  * non-adaptive policies are bitwise unchanged by the adaptive machinery
+    (rtol metadata must never perturb numerics);
+  * the PreparedOperand drift bugfix: serving a weight prepared under one
+    resolution with a policy that resolves differently raises a clear
+    ValueError instead of silently computing at the wrong accuracy —
+    end to end through `ServeEngine(prepare=True)`;
+  * `analysis.AccuracyPass` certifies declared-rtol plans statically and
+    flags plans whose bound cannot meet their declaration.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro
+from repro import linalg
+from repro.core import (
+    GemmPolicy,
+    GemmStats,
+    make_plan,
+    min_moduli_for,
+    policy_matmul,
+    prepare_weights,
+    probe_operands,
+    rel_bound,
+    rel_error,
+)
+from repro.core.policy import BACKEND_FOR_DTYPE
+
+from conftest import FAST_K, FAST_M, FAST_N, phi_matrix
+
+M, K, N = FAST_M, FAST_K, FAST_N
+
+DTYPES = ("float32", "float64", "complex64", "complex128")
+
+
+def _ref_product(a, b):
+    ld = (
+        np.clongdouble
+        if np.issubdtype(a.dtype, np.complexfloating)
+        else np.longdouble
+    )
+    return a.astype(ld) @ b.astype(ld)
+
+
+def _emulated(a, b, policy):
+    return np.asarray(linalg.matmul(jnp.asarray(a), jnp.asarray(b), policy=policy))
+
+
+# ===================================================== bound calculator
+
+
+def test_rel_bound_monotone_in_n_moduli():
+    for dtype in DTYPES:
+        for mode in ("fast", "accu"):
+            bounds = [rel_bound(dtype, mode, nm, K) for nm in range(2, 12)]
+            assert bounds == sorted(bounds, reverse=True), (dtype, mode)
+
+
+def test_rel_bound_validates_inputs():
+    with pytest.raises(ValueError):
+        rel_bound("float32", "fast", 0, K)
+    with pytest.raises(ValueError):
+        rel_bound("float32", "fast", 6, 0)
+    with pytest.raises(ValueError):
+        rel_bound("complex64", "fast", 6, K, formulation="nope")
+
+
+def test_min_moduli_for_meets_and_is_minimal():
+    for dtype in DTYPES:
+        for mode in ("fast", "accu"):
+            for rtol in (1e-2, 1e-5, 1e-8):
+                try:
+                    nm = min_moduli_for(rtol, dtype, k=K, mode=mode)
+                except ValueError:
+                    continue  # unreachable for this dtype: its own test below
+                assert rel_bound(dtype, mode, nm, K) <= rtol
+                if nm > 1:
+                    assert rel_bound(dtype, mode, nm - 1, K) > rtol
+
+
+def test_min_moduli_for_monotone_in_rtol():
+    # reachable tolerances only: float32 bottoms out at its rounding floor
+    for dtype, rtols in (
+        ("float32", (1e-1, 1e-3, 1e-5, 1e-6)),
+        ("float64", (1e-1, 1e-5, 1e-9, 1e-13)),
+    ):
+        ns = [min_moduli_for(r, dtype, k=K) for r in rtols]
+        assert ns == sorted(ns)  # tighter tolerance never needs fewer moduli
+
+
+def test_min_moduli_for_unreachable_raises():
+    with pytest.raises(ValueError, match="unreachable"):
+        min_moduli_for(1e-30, "float32", k=K)
+
+
+def test_probe_stats_tighten_the_bound(rng):
+    """Concrete-operand stats give a bound no looser than the static one."""
+    a = phi_matrix(rng, (M, K), 0.5, np.float64)
+    b = phi_matrix(rng, (K, N), 0.5, np.float64)
+    stats = probe_operands(jnp.asarray(a), jnp.asarray(b))
+    assert isinstance(stats, GemmStats) and stats.k == K
+    for mode in ("fast", "accu"):
+        probed = rel_bound("float64", mode, 8, K, stats=stats)
+        static = rel_bound("float64", mode, 8, K)
+        assert probed <= static
+
+
+def test_probe_returns_none_for_tracers():
+    out = []
+
+    def f(a, b):
+        out.append(probe_operands(a, b))
+        return a @ b
+
+    jax.make_jaxpr(f)(jnp.zeros((4, 8)), jnp.zeros((8, 2)))
+    assert out == [None]
+
+
+# ===================================================== property suite
+#
+# Only this section needs hypothesis (an optional dependency, installed in
+# CI); everything else in the file must run without it.
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+if not HAVE_HYPOTHESIS:
+
+    @pytest.mark.skip(reason="optional dependency: property tests need hypothesis")
+    def test_property_suite_requires_hypothesis():
+        pass
+
+
+if HAVE_HYPOTHESIS:
+    SET = settings(max_examples=15, deadline=None)
+
+    @given(
+        dtype=st.sampled_from(DTYPES),
+        mode=st.sampled_from(["fast", "accu"]),
+        n_extra=st.integers(min_value=0, max_value=3),
+        phi=st.floats(min_value=0.0, max_value=2.5),
+        m=st.integers(min_value=1, max_value=24),
+        k=st.integers(min_value=1, max_value=96),
+        n=st.integers(min_value=1, max_value=16),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    @SET
+    def test_error_never_exceeds_bound(dtype, mode, n_extra, phi, m, k, n, seed):
+        """The headline soundness property: measured componentwise error <=
+        the probe-informed bound <= the static bound, across random shapes,
+        dynamic ranges (phi), dtypes, modes and moduli counts."""
+        rng = np.random.default_rng(seed)
+        # small-but-working moduli counts around the tier-1 profile
+        nm = {"float32": 4, "float64": 6, "complex64": 4, "complex128": 6}[dtype]
+        nm += n_extra
+        a = phi_matrix(rng, (m, k), phi, np.dtype(dtype))
+        b = phi_matrix(rng, (k, n), phi, np.dtype(dtype))
+        pol = GemmPolicy(backend=BACKEND_FOR_DTYPE[dtype], n_moduli=nm, mode=mode)
+        c = _emulated(a, b, pol)
+        ref = _ref_product(a, b)
+        err = rel_error(c, ref, a, b)
+        stats = probe_operands(jnp.asarray(a), jnp.asarray(b))
+        probed = rel_bound(
+            dtype, mode, nm, k, formulation=pol.formulation, stats=stats
+        )
+        static = rel_bound(dtype, mode, nm, k, formulation=pol.formulation)
+        assert err <= probed <= static
+
+    @given(
+        formulation=st.sampled_from(["karatsuba", "block_a", "block_b"]),
+        mode=st.sampled_from(["fast", "accu"]),
+        nm=st.integers(min_value=4, max_value=7),
+        phi=st.floats(min_value=0.0, max_value=1.5),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    @SET
+    def test_error_within_bound_per_formulation(formulation, mode, nm, phi, seed):
+        """Every complex product strategy (paper Fig. 1) stays within its
+        formulation-factored bound."""
+        rng = np.random.default_rng(seed)
+        a = phi_matrix(rng, (16, 48), phi, np.complex64)
+        b = phi_matrix(rng, (48, 12), phi, np.complex64)
+        pol = GemmPolicy(
+            backend="ozaki2_c64", n_moduli=nm, mode=mode, formulation=formulation
+        )
+        err = rel_error(_emulated(a, b, pol), _ref_product(a, b), a, b)
+        assert err <= rel_bound("complex64", mode, nm, 48, formulation=formulation)
+
+    @given(
+        exp_a=st.integers(min_value=-8, max_value=8),
+        exp_b=st.integers(min_value=-8, max_value=8),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    @SET
+    def test_error_within_bound_across_scales(exp_a, exp_b, seed):
+        """Exact-scaling invariance: wildly different operand magnitudes stay
+        within the (scale-free) componentwise bound."""
+        rng = np.random.default_rng(seed)
+        a = phi_matrix(rng, (8, 32), 0.5, np.float32) * np.float32(10.0**exp_a)
+        b = phi_matrix(rng, (32, 8), 0.5, np.float32) * np.float32(10.0**exp_b)
+        pol = GemmPolicy(backend="ozaki2_f32", n_moduli=5)
+        err = rel_error(_emulated(a, b, pol), _ref_product(a, b), a, b)
+        assert err <= rel_bound("float32", "fast", 5, 32)
+
+    @given(
+        rtol=st.floats(min_value=1e-12, max_value=1e-2),
+        k=st.integers(min_value=1, max_value=4096),
+    )
+    @SET
+    def test_min_moduli_consistent_with_forward_bound(rtol, k):
+        for dtype in ("float32", "complex128"):
+            try:
+                nm = min_moduli_for(rtol, dtype, k=k)
+            except ValueError:
+                continue  # tolerance unreachable at this k: allowed outcome
+            assert rel_bound(dtype, "fast", nm, k) <= rtol
+
+
+# ===================================================== golden bands (tier 1)
+
+
+@pytest.fixture(scope="module")
+def smoke_records():
+    from benchmarks.bench_accuracy import SMOKE_SHAPE, SMOKE_SWEEP, sweep
+
+    return sweep(SMOKE_SHAPE, SMOKE_SWEEP)
+
+
+def test_smoke_sweep_within_pinned_bands(smoke_records):
+    """The promoted Figs. 4-5 matrix: every cell below its static bound AND
+    inside its pinned golden band; adaptive rows within their rtol."""
+    from benchmarks.bench_accuracy import check_records
+
+    assert check_records(smoke_records) == []
+
+
+def test_smoke_records_keyed_like_throughput(smoke_records):
+    """BENCH_accuracy.json shares bench_throughput's record-key contract."""
+    from benchmarks.bench_throughput import merge_records, record_key
+
+    keys = [record_key(r) for r in smoke_records]
+    assert all(k is not None for k in keys)
+    assert len(set(keys)) == len(keys)  # distinct trajectories per cell
+    # merging a re-run replaces exactly the re-measured keys
+    merged = merge_records(smoke_records, smoke_records[:3])
+    assert len(merged) == len(smoke_records)
+
+
+def test_committed_accuracy_trajectory_is_fresh():
+    """The tracked BENCH_accuracy.json must hold the smoke sweep's keys and
+    pass the same certification the live sweep does."""
+    import json
+    from pathlib import Path
+
+    from benchmarks.bench_accuracy import check_records
+
+    path = Path(__file__).resolve().parents[1] / "BENCH_accuracy.json"
+    records = json.loads(path.read_text())["records"]
+    assert records, "BENCH_accuracy.json has no records"
+    assert check_records(records) == []
+
+
+# ===================================================== adaptive policies
+
+
+def test_rtol_policy_measurably_meets_tolerance(rng):
+    for dtype, rtol in (("float32", 1e-4), ("complex128", 1e-9)):
+        a = phi_matrix(rng, (M, K), 0.5, np.dtype(dtype))
+        b = phi_matrix(rng, (K, N), 0.5, np.dtype(dtype))
+        pol = GemmPolicy(backend=BACKEND_FOR_DTYPE[dtype], rtol=rtol)
+        resolved = pol.resolve_adaptive(M, K, N)
+        assert rel_bound(
+            dtype, resolved.mode, resolved.n_moduli, K,
+            formulation=resolved.formulation,
+        ) <= rtol
+        err = rel_error(_emulated(a, b, pol), _ref_product(a, b), a, b)
+        assert err <= rtol
+
+
+def test_mode_auto_resolves_cheapest_and_meets_rtol(rng):
+    a = phi_matrix(rng, (M, K), 0.5, np.float64)
+    b = phi_matrix(rng, (K, N), 0.5, np.float64)
+    pol = GemmPolicy(backend="ozaki2_f64", mode="auto", rtol=1e-6)
+    resolved = pol.resolve_adaptive(M, K, N)
+    assert resolved.mode in ("fast", "accu")
+    assert not resolved.is_adaptive  # fixed point: resolution is idempotent
+    assert resolved.resolve_adaptive(M, K, N) is resolved
+    err = rel_error(_emulated(a, b, pol), _ref_product(a, b), a, b)
+    assert err <= 1e-6
+    # a looser tolerance never needs more moduli
+    looser = dataclasses.replace(pol, rtol=1e-3).resolve_adaptive(M, K, N)
+    assert looser.n_moduli <= resolved.n_moduli
+
+
+def test_mode_auto_requires_rtol():
+    with pytest.raises(ValueError, match="rtol"):
+        GemmPolicy(backend="ozaki2_f32", mode="auto")
+
+
+def test_adaptive_eager_vs_jit_identical(rng):
+    a = jnp.asarray(phi_matrix(rng, (M, K), 0.5, np.float64))
+    b = jnp.asarray(phi_matrix(rng, (K, N), 0.5, np.float64))
+    pol = GemmPolicy(backend="ozaki2_f64", rtol=1e-9)
+    eager = np.asarray(linalg.matmul(a, b, policy=pol))
+    jitted = np.asarray(jax.jit(
+        lambda x, w: linalg.matmul(x, w, policy=pol)
+    )(a, b))
+    # under jit the probe sees tracers and falls back to the static
+    # resolution; both paths must still meet the tolerance
+    ref = _ref_product(np.asarray(a), np.asarray(b))
+    assert rel_error(eager, ref, np.asarray(a), np.asarray(b)) <= 1e-9
+    assert rel_error(jitted, ref, np.asarray(a), np.asarray(b)) <= 1e-9
+
+
+def test_matmul_rtol_kwarg_equals_policy_field(rng):
+    a = jnp.asarray(phi_matrix(rng, (M, K), 0.5, np.float32))
+    b = jnp.asarray(phi_matrix(rng, (K, N), 0.5, np.float32))
+    base = GemmPolicy(backend="ozaki2_f32")
+    via_kwarg = np.asarray(linalg.matmul(a, b, policy=base, rtol=1e-4))
+    via_field = np.asarray(linalg.matmul(
+        a, b, policy=dataclasses.replace(base, rtol=1e-4)
+    ))
+    np.testing.assert_array_equal(via_kwarg, via_field)
+
+
+def test_adaptive_grad_does_not_revalidate_backward_shapes(rng):
+    """The VJP's cotangent products contract over different lengths; an
+    adaptive policy must not raise (or re-resolve) during the backward
+    pass — resolution pins n_moduli before the custom-VJP boundary."""
+    a = jnp.asarray(phi_matrix(rng, (M, K), 0.5, np.float64))
+    b = jnp.asarray(phi_matrix(rng, (K, N), 0.5, np.float64))
+    pol = GemmPolicy(backend="ozaki2_f64", rtol=1e-9)
+    g = jax.grad(lambda x: linalg.matmul(x, b, policy=pol).sum())(a)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_unreachable_rtol_raises_with_reason():
+    pol = GemmPolicy(backend="ozaki2_f32", rtol=1e-30)
+    with pytest.raises(ValueError, match="no \\(mode, n_moduli\\)"):
+        pol.resolve_adaptive(M, K, N)
+
+
+# ===================================================== bitwise-unchanged
+
+
+def test_non_adaptive_policies_bitwise_unchanged(rng):
+    """Policies without rtol / mode='auto' must be numerically untouched by
+    the adaptive machinery: same plan as make_plan, bitwise-equal results
+    whether or not the (inert) rtol metadata is stamped."""
+    for dtype in ("float32", "complex64"):
+        a = jnp.asarray(phi_matrix(rng, (M, K), 0.5, np.dtype(dtype)))
+        b = jnp.asarray(phi_matrix(rng, (K, N), 0.5, np.dtype(dtype)))
+        pol = GemmPolicy(backend=BACKEND_FOR_DTYPE[dtype], n_moduli=5)
+        assert not pol.is_adaptive
+        plan = pol.plan_for(M, K, N)
+        assert plan.rtol is None
+        want = make_plan(dtype, 5, "fast",
+                         formulation=plan.formulation, n_block=plan.n_block)
+        assert plan == want
+        y = np.asarray(linalg.matmul(a, b, policy=pol))
+        # pinned n_moduli + rtol: NOT adaptive — runs the exact same plan,
+        # only the declared contract (certified statically) differs
+        pinned = dataclasses.replace(pol, rtol=1e-2)
+        assert not pinned.is_adaptive
+        y_pinned = np.asarray(linalg.matmul(a, b, policy=pinned))
+        np.testing.assert_array_equal(y, y_pinned)
+        assert pinned.plan_for(M, K, N).rtol == 1e-2
+
+
+# ===================================================== prepared-operand drift
+
+
+def test_prepared_operand_records_mode_and_moduli(rng):
+    w = jnp.asarray(phi_matrix(rng, (K, N), 0.5, np.float64))
+    for mode in ("fast", "accu"):
+        pol = GemmPolicy(backend="ozaki2_f64", n_moduli=6, mode=mode)
+        prepped = prepare_weights({"w": w}, pol)["w"]
+        assert prepped.mode == mode
+        assert prepped.n_moduli == 6
+        assert f"mode={mode!r}" in repr(prepped)
+
+
+def test_prepared_drift_raises_not_silent(rng):
+    """The bugfix: a prepared weight served under a policy that resolves a
+    different plan must raise a clear ValueError, never silently compute
+    at the wrong accuracy."""
+    x = jnp.asarray(phi_matrix(rng, (M, K), 0.5, np.float64))
+    w = jnp.asarray(phi_matrix(rng, (K, N), 0.5, np.float64))
+    pol = GemmPolicy(backend="ozaki2_f64", rtol=1e-6)
+    prepped = prepare_weights({"w": w}, pol)["w"]
+    # same policy: prepare-time and serve-time resolution agree
+    y = policy_matmul(x, prepped, pol)
+    assert rel_error(
+        np.asarray(y), _ref_product(np.asarray(x), np.asarray(w)),
+        np.asarray(x), np.asarray(w),
+    ) <= 1e-6
+    # rtol edited between prepare and serve: moduli-count drift
+    with pytest.raises(ValueError, match="re-prepare"):
+        policy_matmul(x, prepped, dataclasses.replace(pol, rtol=1e-14))
+    # mode drift (auto resolving to a different mode than prepared)
+    accu_pol = GemmPolicy(
+        backend="ozaki2_f64",
+        n_moduli=prepped.n_moduli,
+        mode="accu" if prepped.mode == "fast" else "fast",
+    )
+    with pytest.raises(ValueError, match="mode"):
+        policy_matmul(x, prepped, accu_pol)
+
+
+def test_serve_engine_prepared_drift_regression(rng):
+    """End to end through ServeEngine(prepare=True): serving weights
+    prepared under one rtol with a model pinning a different rtol raises,
+    and serving under the matching policy works."""
+    from repro.configs import get_reduced
+    from repro.models import Model
+    from repro.serve.engine import ServeEngine
+
+    pol = GemmPolicy(backend="ozaki2_f32", rtol=1e-2, execution="reference")
+    with repro.use_policy(pol):
+        cfg = dataclasses.replace(
+            get_reduced("starcoder2-3b"),
+            gemm_policy=None,  # pins the ambient (adaptive) policy
+            dtype="float32",
+            n_layers=1,
+        )
+    assert cfg.gemm_policy == pol
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (1, 8)), jnp.int32)
+    batch = {"tokens": tokens}
+    eng = ServeEngine(model, params, cache_len=16, batch_size=1, prepare=True)
+    toks = eng.generate(batch, max_new_tokens=2)
+    assert toks.shape == (1, 2)
+    # restart with a tighter tolerance but the already-prepared planes:
+    # the resolution drifts and serving must refuse, not mis-serve
+    cfg_tight = dataclasses.replace(
+        cfg, gemm_policy=dataclasses.replace(pol, rtol=1e-6)
+    )
+    eng_tight = ServeEngine(
+        Model(cfg_tight), eng.params, cache_len=16, batch_size=1
+    )
+    with pytest.raises(ValueError, match="re-prepare"):
+        eng_tight.generate(batch, max_new_tokens=2)
+
+
+# ===================================================== analysis pass
+
+
+def test_accuracy_pass_certifies_and_flags():
+    from repro.analysis import AccuracyPass
+
+    ok_plan = make_plan("float64", 10, "fast", rtol=1e-9)
+    assert AccuracyPass(plan=ok_plan, k=K).run(None) == []
+    # a declaration the bound cannot meet is a finding
+    bad_plan = make_plan("float64", 4, "fast", rtol=1e-9)
+    findings = AccuracyPass(plan=bad_plan, k=K).run(None)
+    assert len(findings) == 1
+    assert "bound" in findings[0].message
+    # no declared contract: trivially certified
+    assert AccuracyPass(plan=make_plan("float64", 4, "fast"), k=K).run(None) == []
+
+
+def test_passes_for_backend_includes_accuracy_for_declared_plans():
+    pol = GemmPolicy(backend="ozaki2_f32", rtol=1e-4)
+    resolved = pol.resolve_adaptive(M, K, N)
+    plan = resolved.plan_for(M, K, N)
+    assert plan.rtol == 1e-4
+    backend = resolved.execution_backend()
+    names = [p.name for p in backend.analyze(plan, (M, K, N))]
+    assert "accuracy" in names
+    # shape-free suites cannot pin a contraction length: no accuracy pass
+    names_free = [p.name for p in backend.analyze(plan, None)]
+    assert "accuracy" not in names_free
+
+
+def test_rtol_cli_surface_is_linted():
+    """Every execution CLI exposes --rtol (pinned by lint_policy_surface)."""
+    from pathlib import Path
+
+    from repro.analysis import EXECUTION_CLIS
+    from repro.analysis.lint import has_flag
+
+    root = Path(__file__).resolve().parents[1]
+    for rel in EXECUTION_CLIS:
+        assert has_flag(root / rel, "--rtol"), rel

@@ -417,11 +417,13 @@ def _fake_repo(tmp_path, *, skip_execution=None, break_cli=None):
         "import argparse\n"
         "p = argparse.ArgumentParser()\n"
         f"p.add_argument(\"--execution\", choices={list(EXECUTIONS)!r})\n"
+        "p.add_argument(\"--rtol\", type=float, default=None)\n"
     )
     broken_body = (
         "import argparse\n"
         "p = argparse.ArgumentParser()\n"
         f"p.add_argument(\"--execution\", choices={list(EXECUTIONS[:-1])!r})\n"
+        "p.add_argument(\"--rtol\", type=float, default=None)\n"
     )
     from repro.analysis.lint import EXECUTION_CLIS
 
@@ -449,6 +451,21 @@ def test_lint_flags_out_of_sync_cli(tmp_path):
     assert len(findings) == 1
     assert broken in findings[0].message
     assert "missing" in findings[0].message
+
+
+def test_lint_flags_missing_rtol_flag(tmp_path):
+    repo = _fake_repo(tmp_path)
+    target = repo / "src/repro/launch/serve.py"
+    target.write_text(
+        "\n".join(
+            line for line in target.read_text().splitlines()
+            if "--rtol" not in line
+        )
+        + "\n"
+    )
+    findings = lint_policy_surface(repo)
+    assert len(findings) == 1
+    assert "--rtol" in findings[0].message
 
 
 def test_lint_flags_missing_cli(tmp_path):

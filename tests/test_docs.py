@@ -35,8 +35,9 @@ def _python_blocks(path: pathlib.Path) -> list[str]:
 @pytest.mark.parametrize(
     "relpath",
     ["README.md", "docs/paper_map.md", "docs/static_analysis.md",
-     "docs/calibration.md"],
-    ids=["readme", "paper_map", "static_analysis", "calibration"],
+     "docs/calibration.md", "docs/accuracy.md"],
+    ids=["readme", "paper_map", "static_analysis", "calibration",
+         "accuracy"],
 )
 def test_markdown_snippets_execute(relpath):
     """All ```python blocks of the document run (shared namespace, in
